@@ -1,0 +1,75 @@
+"""Fig. 2a — instance latency, conflict-free workload at 1400 req/s.
+
+Paper setup: Paxi on 11 EC2 m5a.large VMs; Fast Paxos (qc=6, qf=9) vs Fast
+Flexible Paxos (q1=9, q2f=7, q2c=3).  Claim: FFP's smaller fast quorum (7 vs
+9) cuts mean/median latency by 5-8%.
+
+We reproduce it two ways (DESIGN.md §2):
+  1. the discrete-event simulator running the actual protocol state machines
+     over sampled EC2-like delays (common random numbers across algorithms);
+  2. the vmapped jax Monte-Carlo order-statistics model (10^5 instances).
+Both must agree on the *ratio*, which is the paper's claim.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.jax_sim import fast_path_latency, latency_summary
+from repro.core.quorum import QuorumSpec
+from repro.core.simulator import (FastPaxosSim, conflict_free_workload,
+                                  latency_stats)
+
+N_REQUESTS = 3000
+RATE = 1400.0
+SAMPLES = 200_000
+
+
+def run(quick: bool = False, seed: int = 0):
+    n_req = 500 if quick else N_REQUESTS
+    samples = 20_000 if quick else SAMPLES
+    specs = {
+        "fast_paxos": QuorumSpec.fast_paxos(11, "three_quarters"),
+        "ffp": QuorumSpec.paper_headline(11),
+    }
+    rows = []
+
+    # -- discrete-event simulation (identical seeds = common random numbers)
+    de = {}
+    for name, spec in specs.items():
+        sim = FastPaxosSim(spec, seed=seed)
+        conflict_free_workload(sim, n_req, RATE, seed=seed + 1)
+        stats = latency_stats(sim.run())
+        de[name] = stats
+        for k in ("mean_ms", "p50_ms", "p95_ms", "p99_ms"):
+            rows.append((f"fig2a.sim.{name}.{k}", stats[k]))
+
+    # -- jax Monte-Carlo cross-check
+    mc = {}
+    for name, spec in specs.items():
+        lat = fast_path_latency(jax.random.PRNGKey(seed), spec.n, spec.q2f,
+                                samples)
+        mc[name] = latency_summary(lat)
+        for k in ("mean_ms", "p50_ms", "p99_ms"):
+            rows.append((f"fig2a.mc.{name}.{k}", mc[name][k]))
+
+    for src, d in (("sim", de), ("mc", mc)):
+        gain = 1.0 - d["ffp"]["mean_ms"] / d["fast_paxos"]["mean_ms"]
+        rows.append((f"fig2a.{src}.ffp_mean_latency_gain", gain))
+        med = 1.0 - d["ffp"]["p50_ms"] / d["fast_paxos"]["p50_ms"]
+        rows.append((f"fig2a.{src}.ffp_median_latency_gain", med))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    gains = {n: v for n, v in rows if n.endswith("latency_gain")}
+    # the paper reports 5-8%; the simulated network is a fit, not a trace,
+    # so we assert the qualitative claim with slack.
+    assert all(v > 0.02 for v in gains.values()), gains
+    return rows
+
+
+if __name__ == "__main__":
+    main()

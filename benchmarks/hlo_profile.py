@@ -1,0 +1,112 @@
+"""Structural HLO profile of a dry-run cell (the CPU-only 'profiler').
+
+Compiles the 1-superblock unrolled probe of an (arch, shape) cell and ranks
+HLO ops by output bytes, grouped by op kind — the closest thing to a memory
+profile available without hardware.  Also prints collective ops and
+duplicate-fusion counts (a proxy for remat recompute).
+
+  PYTHONPATH=src:. python -m benchmarks.hlo_profile --arch musicgen_medium \
+      --shape train_4k [--top 25] [--superblocks 1]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = ([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?|\([^)]*\)) ([\w\-]+)\(")
+
+
+def profile_hlo(hlo: str, top: int = 25):
+    by_kind: Dict[str, int] = collections.Counter()
+    count: Dict[str, int] = collections.Counter()
+    biggest: List[Tuple[int, str, str]] = []
+    for line in hlo.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        out_shape, kind = m.group(1), m.group(2)
+        if kind in ("parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast"):
+            continue
+        b = shape_bytes(out_shape)
+        by_kind[kind] += b
+        count[kind] += 1
+        if b > 2**20:
+            biggest.append((b, kind, out_shape[:60]))
+    biggest.sort(reverse=True)
+    return by_kind, count, biggest[:top]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--superblocks", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch import dryrun as dr
+    from repro.launch.mesh import make_production_mesh
+    from repro.parallel.sharding import default_rules
+
+    cfg = get_config(args.arch)
+    per = len([k for k in cfg.pattern if k != "shared_attn"]) or 1
+    cfg1 = dataclasses.replace(cfg, n_layers=args.superblocks * per)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    opt, _ = dr.choose_optimizer(cfg)
+    compiled, times = dr._compile_one(cfg1, shape, mesh, default_rules(), opt)
+    hlo = compiled.as_text()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    print(f"# {args.arch}.{args.shape} probe ({args.superblocks} superblock)"
+          f" compile={times['compile_s']}s")
+    print(f"flops={ca.get('flops', 0):.3e}  "
+          f"bytes={ca.get('bytes accessed', 0):.3e}\n")
+
+    by_kind, count, biggest = profile_hlo(hlo, args.top)
+    print("## output bytes by op kind")
+    for kind, b in sorted(by_kind.items(), key=lambda kv: -kv[1])[:15]:
+        print(f"  {kind:24s} {b/2**30:8.2f} GiB  x{count[kind]}")
+    print("\n## biggest single ops")
+    for b, kind, shp in biggest:
+        print(f"  {b/2**30:8.2f} GiB  {kind:20s} {shp}")
+
+    import benchmarks.roofline as rl
+    coll = rl.collective_summary(rl.parse_collectives(hlo))
+    print(f"\n## collectives: link_bytes={coll['link_bytes']:.3e} "
+          f"dcn={coll['dcn_bytes']:.3e}")
+    for k, v in sorted(coll["by_kind"].items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src:. python -m benchmarks.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        recs[(r["arch"], r["shape"], "multi" in os.path.basename(f))] = r
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | status | mem/dev | compile | HLO flops | link bytes | DCN bytes | promoted |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, mp), r in sorted(recs.items()):
+        mesh = r.get("mesh", "?")
+        st = r.get("status", "?")
+        if st == "ok":
+            mem = r["memory"].get("per_device_total", 0) / 2**30
+            flag = " ⚠" if mem > 16 else ""
+            lines.append(
+                f"| {a} | {s} | {mesh} | ok | {mem:.2f} GiB{flag} "
+                f"| {r.get('compile_s', 0):.0f}s | {r['cost']['flops']:.3g} "
+                f"| {r['collectives']['link_bytes']:.3g} "
+                f"| {r['collectives']['dcn_bytes']:.3g} "
+                f"| {r['collectives'].get('promoted_count', 0)} |")
+        elif st == "skipped":
+            lines.append(f"| {a} | {s} | {mesh} | skipped "
+                         f"({r.get('reason','')[:40]}) | | | | | | |")
+        else:
+            lines.append(f"| {a} | {s} | {mesh} | ERROR "
+                         f"{r.get('error','')[:40]} | | | | | | |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = ["| arch | shape | compute | memory | collective | dominant | MODEL_FLOPS | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, mp), r in sorted(recs.items()):
+        if mp or r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {a} | {s} | {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+            f"| {fmt_s(t['collective_s'])} | **{t['dominant'].replace('_s','')}** "
+            f"| {t['model_flops']:.3g} | {t['useful_flops_ratio']:.2f} "
+            f"| {t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--which", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    n_ok = sum(1 for r in recs.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs.values() if r.get("status") == "skipped")
+    n_err = len(recs) - n_ok - n_skip
+    print(f"<!-- {len(recs)} records: {n_ok} ok, {n_skip} skipped, "
+          f"{n_err} error -->\n")
+    if args.which in ("dryrun", "both"):
+        print("### Dry-run records\n")
+        print(dryrun_table(recs))
+        print()
+    if args.which in ("roofline", "both"):
+        print("### Roofline (single-pod 16x16, per train/serve step)\n")
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

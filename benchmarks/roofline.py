@@ -1,0 +1,213 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+CPU-only container: TPU v5e is the *target*, so terms are derived from the
+compiled SPMD program rather than measured:
+
+  compute term    = HLO_FLOPs(per device) / 197 TFLOP/s (bf16)
+  memory term     = HLO_bytes(per device) / 819 GB/s (HBM)
+  collective term = link_bytes(per device) / 50 GB/s (ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (the per-device
+SPMD module).  Collective bytes are NOT in cost_analysis — we parse the
+optimized HLO text and convert each collective op into ring-algorithm link
+bytes:
+
+  all-gather       out_bytes * (g-1)/g
+  reduce-scatter   in_bytes  * (g-1)/g      (= out_bytes * (g-1))
+  all-reduce       2 * bytes * (g-1)/g      (RS + AG)
+  all-to-all       bytes * (g-1)/g
+  collective-permute  bytes
+
+Cross-pod (DCN) collectives are reported separately when the op's replica
+groups contain devices from different pods (exact membership
+reconstruction of iota/brace replica groups).
+
+MODEL_FLOPS uses the 6*N*D convention (2*N*D for inference passes) with N =
+active params counted at execution multiplicity (MoE: top-k experts;
+zamba2's shared block: once per application).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+HW = {
+    "flops_bf16": 197e12,      # per chip
+    "hbm_bps": 819e9,          # per chip
+    "ici_bps": 50e9,           # per link
+    "chips_per_pod": 256,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_info(line: str) -> Tuple[int, int]:
+    """Returns (group_size, crosses_pod_flag as 0/1).
+
+    Iota-form groups ``[G,S]<=[dims]T(perm)`` are reconstructed exactly:
+    build the iota array, apply the transpose, reshape to (G, S) and check
+    whether any group's members live in different pods (id // chips_per_pod
+    differs).  Brace-form groups are checked directly.
+    """
+    cpp = HW["chips_per_pod"]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+        groups = arr.reshape(ngroups, gsize)
+        crosses = bool(((groups // cpp).max(axis=1)
+                        != (groups // cpp).min(axis=1)).any())
+        return max(gsize, 1), int(crosses)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        crosses = (max(ids) // cpp) != (min(ids) // cpp)
+        return max(len(ids), 1), int(crosses)
+    return 1, 0
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: int
+    group: int
+    crosses: int               # 1 if any replica group spans pods
+    promoted: bool = False     # CPU-only f32 promotion of a bf16 reduction
+
+    @property
+    def link_bytes(self) -> float:
+        g = max(self.group, 2)
+        if self.kind == "all-gather":
+            return self.out_bytes * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return self.out_bytes * (g - 1)          # out = in/g
+        if self.kind == "all-reduce":
+            return 2 * self.out_bytes * (g - 1) / g
+        if self.kind == "all-to-all":
+            return self.out_bytes * (g - 1) / g
+        return float(self.out_bytes)                 # collective-permute
+
+    @property
+    def crosses_pod(self) -> bool:
+        return bool(self.crosses)
+
+
+_PROMOTED_RE = re.compile(r"(?:all-reduce|reduce-scatter)\(%?[\w.\-]*convert")
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Parse collectives; reductions whose operand is a convert fusion are
+    counted at bf16 width.
+
+    XLA:CPU cannot execute bf16 reductions, so float-normalization promotes
+    them: the HLO shows ``f32 all-reduce(%convert_*_fusion)`` where the
+    source value is a bf16 dot.  On the TPU pipeline the same reduction runs
+    natively in bf16 (the MaxText-standard choice for activation/grad
+    reductions), so counting the promoted ops at f32 would double their link
+    bytes.  The correction is tracked per-op (``promoted``) and surfaced in
+    the summary as ``promoted_count``.
+    """
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        shape_str, kind, _ = m.group(1), m.group(2), m.group(3)
+        g, crosses = _group_info(line)
+        if g <= 1:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        promoted = bool("f32" in shape_str and _PROMOTED_RE.search(line))
+        if promoted:
+            nbytes //= 2
+        ops.append(CollectiveOp(kind, nbytes, g, crosses, promoted))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    out: Dict[str, float] = {"link_bytes": 0.0, "dcn_bytes": 0.0, "count": 0,
+                             "promoted_count": 0}
+    by_kind: Dict[str, float] = {}
+    for op in ops:
+        out["count"] += 1
+        out["promoted_count"] += int(op.promoted)
+        if op.crosses_pod:
+            out["dcn_bytes"] += op.link_bytes
+        else:
+            out["link_bytes"] += op.link_bytes
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + op.link_bytes
+    out["by_kind"] = by_kind
+    return out
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """6*N*D convention, per chip."""
+    from repro.configs.base import _param_count
+    n_flops_params = _param_count(cfg, active_only=True, flops_multiplicity=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_flops_params * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_flops_params * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_flops_params * shape.global_batch
+    return total / chips
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, float],
+                   cfg=None, shape=None, chips: int = 256) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / HW["flops_bf16"]
+    t_memory = bytes_ / HW["hbm_bps"]
+    t_coll = coll["link_bytes"] / HW["ici_bps"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll,
+             "dcn_bytes": coll.get("dcn_bytes", 0.0)}
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape, chips)
+        terms["model_flops"] = mf
+        terms["useful_flops_ratio"] = mf / flops if flops else 0.0
+        # roofline fraction: useful model FLOPs per second at the bound,
+        # over peak — the score we hillclimb.
+        terms["roofline_fraction"] = (
+            (mf / terms["bound_s"]) / HW["flops_bf16"] if terms["bound_s"] else 0.0)
+    return terms

@@ -1,0 +1,139 @@
+"""Benchmark harness — one entry per paper table/figure, plus the framework's
+own microbenches and the roofline table summary.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-kernels]
+
+Sections:
+  fig2a / fig2b / fig2c   paper §6 reproduction (FP vs FFP, n=11)
+  sweep                   beyond-paper quorum-space sweep (§5)
+  kernel.*                per-kernel timing: jnp reference under jit (wall),
+                          Pallas interpret-mode parity asserted in tests/
+  roofline.*              aggregate of experiments/dryrun/*.json
+
+Output: ``name,value`` CSV on stdout (timings in us where applicable).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time_us(fn, *args, iters: int = 20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
+
+
+def kernel_benches(quick: bool):
+    """Wall-time of the pure-jnp reference ops under jit (CPU).  The Pallas
+    kernels themselves target TPU; on CPU they run in interpret mode (orders
+    of magnitude slower by construction) so parity, not speed, is asserted —
+    see tests/test_kernels.py."""
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    from repro.kernels.flash_attention import ref as fa_ref
+    B, H, S, D = (1, 4, 512, 64) if quick else (2, 8, 1024, 64)
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    fn = jax.jit(lambda q, k, v: fa_ref.attention(q, k, v, causal=True))
+    rows.append((f"kernel.flash_attention.ref_us[{B}x{H}x{S}x{D}]",
+                 _time_us(fn, q, k, v)))
+
+    from repro.kernels.rmsnorm import ref as rn_ref
+    x = jax.random.normal(key, (4096, 4096), jnp.float32)
+    sc = jnp.ones((4096,))
+    fn = jax.jit(lambda x, s: rn_ref.rmsnorm(x, s))
+    rows.append(("kernel.rmsnorm.ref_us[4096x4096]", _time_us(fn, x, sc)))
+
+    from repro.kernels.ssd_scan import ref as ssd_ref
+    Bs, S2, nh, hd, ds = (1, 512, 4, 32, 32) if quick else (2, 1024, 8, 64, 64)
+    xw = jax.random.normal(key, (Bs, S2, nh, hd), jnp.float32)
+    da = -jnp.abs(jax.random.normal(key, (Bs, S2, nh), jnp.float32)) * 0.1
+    Bm = jax.random.normal(key, (Bs, S2, ds), jnp.float32)
+    Cm = jax.random.normal(key, (Bs, S2, ds), jnp.float32)
+    fn = jax.jit(lambda *a: ssd_ref.ssd(*a)[0])
+    rows.append((f"kernel.ssd_scan.ref_us[{Bs}x{S2}x{nh}x{hd}]",
+                 _time_us(fn, xw, da, Bm, Cm)))
+
+    from repro.kernels.quorum_tally import ref as qt_ref
+    votes = jax.random.randint(key, (100_000, 11), 0, 2)
+    fn = jax.jit(lambda v: qt_ref.tally_votes(v, 2))
+    rows.append(("kernel.quorum_tally.ref_us[100000x11]", _time_us(fn, votes)))
+    return rows
+
+
+def roofline_summary(dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.single.json")))
+    fracs = []
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        if rec.get("status") != "ok":
+            continue
+        tag = f"{rec['arch']}.{rec['shape']}"
+        r = rec.get("roofline", {})
+        rows.append((f"roofline.{tag}.dominant={r.get('dominant', '?')}",
+                     r.get("roofline_fraction", 0.0)))
+        fracs.append(r.get("roofline_fraction", 0.0))
+    if fracs:
+        rows.append(("roofline.cells", len(fracs)))
+        rows.append(("roofline.mean_fraction",
+                     sum(fracs) / len(fracs)))
+        rows.append(("roofline.min_fraction", min(fracs)))
+        rows.append(("roofline.max_fraction", max(fracs)))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
+                         "kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("fig2a"):
+        from benchmarks import fig2a_latency
+        fig2a_latency.main(quick=args.quick)
+    if want("fig2b"):
+        from benchmarks import fig2b_conflict_latency
+        fig2b_conflict_latency.main(quick=args.quick)
+    if want("fig2c"):
+        from benchmarks import fig2c_conflict_prob
+        fig2c_conflict_prob.main(quick=args.quick)
+    if want("sweep"):
+        from benchmarks import quorum_sweep
+        quorum_sweep.main(quick=args.quick)
+    if not args.skip_kernels and want("kernels"):
+        for name, val in kernel_benches(args.quick):
+            print(f"{name},{val:.6g}")
+    if want("roofline"):
+        for name, val in roofline_summary():
+            print(f"{name},{val:.6g}")
+    print(f"bench.total_wall_s,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

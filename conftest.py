@@ -1,0 +1,4 @@
+# Root conftest: makes the `benchmarks` package importable from tests
+# (pytest inserts conftest directories into sys.path).  Deliberately empty
+# otherwise — in particular no XLA_FLAGS here: smoke tests and benches must
+# see 1 device; only launch/dryrun.py requests 512 placeholder devices.

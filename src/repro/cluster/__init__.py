@@ -1,0 +1,9 @@
+from .coordinator import ConsensusLog, ControlPlane
+from .membership import MembershipEpoch, MembershipManager
+from .failure import PhiAccrualDetector, StragglerPolicy
+
+__all__ = [
+    "ConsensusLog", "ControlPlane",
+    "MembershipEpoch", "MembershipManager",
+    "PhiAccrualDetector", "StragglerPolicy",
+]

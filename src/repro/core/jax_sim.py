@@ -1,0 +1,193 @@
+"""Vectorized Monte-Carlo model of Fast (Flexible) Paxos commit latency.
+
+This is the JAX-native adaptation of the paper's evaluation (DESIGN.md §2):
+one fast-round instance is, analytically, an exercise in *order statistics*
+over per-message network delays plus a *vote tally* — both embarrassingly
+parallel across instances.  We vmap/jit over 10^5–10^6 instances so quorum-
+system sweeps (the paper's §5 tradeoff space) run in milliseconds, and we
+cross-validate the model against the discrete-event simulator
+(``tests/test_sim_cross_validation.py``).
+
+Latency model (mirrors ``simulator.LatencyModel``): one-way delay =
+``base + LogNormal(mu, sigma)`` ms, i.i.d. per message.
+
+Fast path (no conflict):
+    client --> acceptor_a   (d1[a])
+    acceptor_a --> learner  (d2[a])
+    commit when q2f acceptor paths completed:
+        latency = kth_smallest_a(d1[a] + d2[a], k=q2f)
+
+Collision race (Fig. 2c): proposers A (t=0) and B (t=Δ) target one instance;
+acceptor a votes for whichever proposal arrives first.  If either value
+gathers q2f votes the other aborts; otherwise the coordinator enters
+*coordinated recovery* (observed ~3x less often under the paper's FFP
+config, since q2f drops from 9 to 7 on n=11).
+
+The vote tally across (instances x acceptors) is the compute hot-spot and is
+served by the ``kernels/quorum_tally`` Pallas kernel (with a pure-jnp oracle
+in ``kernels/quorum_tally/ref.py``); set ``use_kernel=False`` to force the
+reference path.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .quorum import QuorumSpec
+
+
+@dataclass(frozen=True)
+class LatencyParams:
+    base_ms: float = 0.25
+    mu: float = -1.20
+    sigma: float = 0.55
+
+    def as_tuple(self) -> Tuple[float, float, float]:
+        return (self.base_ms, self.mu, self.sigma)
+
+
+def _one_way(key: jax.Array, shape, p: LatencyParams) -> jax.Array:
+    return p.base_ms + jnp.exp(p.mu + p.sigma * jax.random.normal(key, shape))
+
+
+def kth_smallest(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
+    """k-th order statistic (1-indexed) along ``axis``."""
+    return jnp.sort(x, axis=axis).take(k - 1, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Fast path latency (Fig. 2a model).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def fast_path_latency(key: jax.Array, n: int, q2f: int, samples: int,
+                      lat: LatencyParams = LatencyParams()) -> jax.Array:
+    """Commit latency of ``samples`` conflict-free fast-round instances."""
+    k1, k2 = jax.random.split(key)
+    d1 = _one_way(k1, (samples, n), lat)          # client -> acceptors
+    d2 = _one_way(k2, (samples, n), lat)          # acceptors -> learner
+    return kth_smallest(d1 + d2, q2f, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def classic_path_latency(key: jax.Array, n: int, q2c: int, samples: int,
+                         lat: LatencyParams = LatencyParams()) -> jax.Array:
+    """Leader-relayed classic commit (Multi-Paxos steady state): client ->
+    leader -> acceptors -> leader."""
+    k0, k1, k2 = jax.random.split(key, 3)
+    d0 = _one_way(k0, (samples,), lat)            # client -> leader
+    d1 = _one_way(k1, (samples, n), lat)          # leader -> acceptors
+    d2 = _one_way(k2, (samples, n), lat)          # acceptors -> leader
+    return d0 + kth_smallest(d1 + d2, q2c, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Collision race (Fig. 2b / 2c model).
+# ---------------------------------------------------------------------------
+
+def _tally(votes: jax.Array, n_values: int, use_kernel: bool) -> jax.Array:
+    """Count votes per value: (S, n) int32 -> (S, n_values) int32."""
+    if use_kernel:
+        from repro.kernels.quorum_tally import ops as qt_ops
+        return qt_ops.tally_votes(votes, n_values)
+    from repro.kernels.quorum_tally import ref as qt_ref
+    return qt_ref.tally_votes(votes, n_values)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 7, 8))
+def conflict_race(key: jax.Array, n: int, q1: int, q2f: int, q2c: int,
+                  samples: int, delta_ms: float | jax.Array = 0.5,
+                  lat: LatencyParams = LatencyParams(),
+                  use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """Two proposals race for one instance; B starts ``delta_ms`` after A.
+
+    Returns per-sample outcome flags and end-to-end decision latency
+    (measured from A's submission, like the paper's instance latency):
+
+      a_wins_fast / b_wins_fast : one value reached q2f (loser aborts)
+      recovery                  : no value reached q2f -> coordinated recovery
+      latency_ms                : commit time of the decided value
+    """
+    kA, kB, kr1, kr2, kr3 = jax.random.split(key, 5)
+    dA = _one_way(kA, (samples, n), lat)              # A -> acceptors
+    dB = _one_way(kB, (samples, n), lat)              # B -> acceptors
+    tA = dA
+    tB = delta_ms + dB
+    votes = (tB < tA).astype(jnp.int32)               # 0: A, 1: B
+    counts = _tally(votes, 2, use_kernel)             # (S, 2)
+    a_cnt, b_cnt = counts[:, 0], counts[:, 1]
+    a_fast = a_cnt >= q2f
+    b_fast = b_cnt >= q2f
+    recovery = ~(a_fast | b_fast)
+
+    vote_time = jnp.where(votes == 0, tA, tB)         # when each acceptor voted
+    d_ret = _one_way(kr1, (samples, n), lat)          # acceptor -> learner
+    arrive = vote_time + d_ret                        # 2b arrival at learner
+
+    # Fast-path commit: q2f-th smallest 2b arrival among same-value voters.
+    big = jnp.float32(1e9)
+    a_arr = jnp.where(votes == 0, arrive, big)
+    b_arr = jnp.where(votes == 1, arrive, big)
+    t_a_fast = kth_smallest(a_arr, q2f, axis=-1)
+    t_b_fast = kth_smallest(b_arr, q2f, axis=-1)
+
+    # Recovery: coordinator needs a phase-1 quorum (q1) of round-1 votes to
+    # run IsPickableVal, then one classic round trip committing with q2c.
+    t_detect = kth_smallest(arrive, q1, axis=-1)
+    d_2a = _one_way(kr2, (samples, n), lat)
+    d_2b = _one_way(kr3, (samples, n), lat)
+    t_recover = t_detect + kth_smallest(d_2a + d_2b, q2c, axis=-1)
+
+    latency = jnp.where(a_fast, t_a_fast,
+               jnp.where(b_fast, t_b_fast, t_recover))
+    return {
+        "a_wins_fast": a_fast,
+        "b_wins_fast": b_fast,
+        "recovery": recovery,
+        "latency_ms": latency,
+    }
+
+
+def conflict_probability(key: jax.Array, spec: QuorumSpec, delta_ms: float,
+                         samples: int = 100_000,
+                         lat: LatencyParams = LatencyParams(),
+                         use_kernel: bool = False) -> float:
+    """P(coordinated recovery) for a given inter-command interval (Fig. 2c)."""
+    out = conflict_race(key, spec.n, spec.q1, spec.q2f, spec.q2c,
+                        samples, delta_ms, lat, use_kernel)
+    return float(out["recovery"].mean())
+
+
+def latency_summary(lat_ms: jax.Array) -> Dict[str, float]:
+    q = jnp.quantile(lat_ms, jnp.array([0.5, 0.95, 0.99]))
+    return {
+        "mean_ms": float(lat_ms.mean()),
+        "p50_ms": float(q[0]),
+        "p95_ms": float(q[1]),
+        "p99_ms": float(q[2]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mixed workload (Fig. 2b model): fraction p of commands race, rest are clean.
+# ---------------------------------------------------------------------------
+
+def mixed_workload_latency(key: jax.Array, spec: QuorumSpec,
+                           conflict_frac: float, delta_ms: float,
+                           samples: int = 100_000,
+                           lat: LatencyParams = LatencyParams(),
+                           use_kernel: bool = False) -> Dict[str, float]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_conf = max(1, int(samples * conflict_frac))
+    n_free = samples - n_conf
+    free = fast_path_latency(k1, spec.n, spec.q2f, n_free, lat)
+    race = conflict_race(k2, spec.n, spec.q1, spec.q2f, spec.q2c,
+                         n_conf, delta_ms, lat, use_kernel)
+    all_lat = jnp.concatenate([free, race["latency_ms"]])
+    out = latency_summary(all_lat)
+    out["recovery_rate"] = float(race["recovery"].mean()) * conflict_frac
+    return out

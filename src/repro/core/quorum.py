@@ -1,0 +1,307 @@
+"""Quorum systems and the intersection requirements of the Paxos family.
+
+This module is the heart of the paper: first-class ``QuorumSystem`` objects
+plus checkers for every intersection requirement discussed in the paper —
+
+  Paxos           (Eq.1)   any two quorums intersect
+  Flexible Paxos  (Eq.3)   every phase-1 quorum intersects every phase-2 quorum
+  Fast Paxos      (Eq.5-7) classic/classic, fast/fast/classic, fast/fast/fast
+  Fast Flexible   (Eq.11)  every Q1 intersects every classic Q2
+  Paxos           (Eq.12)  every Q1 intersects every *pair* of fast Q2s
+
+and their cardinality forms (Eqs. 2, 4, 8-10, 13-14).
+
+Quorum systems are represented explicitly as frozensets of acceptor ids so the
+set-based requirements can be checked exactly; cardinality systems enumerate
+lazily (validity is proved arithmetically, enumerated only on demand).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import FrozenSet, Iterable, Iterator, Sequence, Tuple
+
+Acceptor = int
+Quorum = FrozenSet[Acceptor]
+
+
+# ---------------------------------------------------------------------------
+# Set-level intersection predicates (the paper's Eqs. 1, 3, 5-7, 11, 12).
+# ---------------------------------------------------------------------------
+
+def pairwise_intersect(qs: Iterable[Quorum], qs2: Iterable[Quorum] | None = None) -> bool:
+    """Eq.1 / Eq.3 / Eq.5 / Eq.11: every quorum in ``qs`` meets every one in ``qs2``."""
+    qs = list(qs)
+    qs2 = qs if qs2 is None else list(qs2)
+    return all(q & p for q in qs for p in qs2)
+
+
+def triple_intersect(a: Iterable[Quorum], b: Iterable[Quorum], c: Iterable[Quorum]) -> bool:
+    """Eq.6 / Eq.7 / Eq.12: every (Q,Q',Q'') in a x b x c has a common element."""
+    a, b, c = list(a), list(b), list(c)
+    return all(q & p & r for q in a for p in b for r in c)
+
+
+# ---------------------------------------------------------------------------
+# Cardinality forms (Eqs. 2, 4, 8-10, 13, 14).
+# ---------------------------------------------------------------------------
+
+def paxos_card_ok(n: int, q: int) -> bool:
+    return 2 * q > n                                   # Eq.2
+
+
+def flexible_card_ok(n: int, q1: int, q2: int) -> bool:
+    return q1 + q2 > n                                 # Eq.4
+
+
+def fast_paxos_card_ok(n: int, qc: int, qf: int) -> bool:
+    return (2 * qc > n                                 # Eq.8
+            and qc + 2 * qf > 2 * n                    # Eq.9
+            and 3 * qf > 2 * n)                        # Eq.10
+
+
+def ffp_card_ok(n: int, q1: int, q2c: int, q2f: int) -> bool:
+    """The paper's relaxed requirements (Eqs. 13 & 14)."""
+    return (q1 + q2c > n                               # Eq.13
+            and q1 + 2 * q2f > 2 * n)                  # Eq.14
+
+
+def ffp_min_q2f(n: int, q1: int) -> int:
+    """Smallest valid fast phase-2 quorum for a given phase-1 quorum (Eq.14)."""
+    return max(1, (2 * n - q1) // 2 + 1)
+
+
+def ffp_min_q2c(n: int, q1: int) -> int:
+    """Smallest valid classic phase-2 quorum for a given phase-1 quorum (Eq.13)."""
+    return max(1, n - q1 + 1)
+
+
+def fast_paxos_suggested(n: int, variant: str = "three_quarters") -> Tuple[int, int]:
+    """Fast Paxos' own suggested (qc, qf) pairs from Section 2.3."""
+    if variant == "two_thirds":
+        q = (2 * n) // 3 + 1
+        return q, q
+    if variant == "three_quarters":
+        return n // 2 + 1, math.ceil(3 * n / 4)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# Quorum systems.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QuorumSpec:
+    """Quorum configuration of a Fast Flexible Paxos deployment.
+
+    ``q1``  phase-1 quorums (identical for fast and classic rounds — §5)
+    ``q2c`` phase-2 quorums for classic rounds
+    ``q2f`` phase-2 quorums for fast rounds
+    """
+
+    n: int
+    q1: int
+    q2c: int
+    q2f: int
+
+    def __post_init__(self) -> None:
+        for name in ("q1", "q2c", "q2f"):
+            v = getattr(self, name)
+            if not (1 <= v <= self.n):
+                raise ValueError(f"{name}={v} out of range for n={self.n}")
+
+    # -- validity ----------------------------------------------------------
+    def is_valid(self) -> bool:
+        return ffp_card_ok(self.n, self.q1, self.q2c, self.q2f)
+
+    def validate(self) -> "QuorumSpec":
+        if not self.is_valid():
+            raise ValueError(
+                f"quorum spec violates FFP intersection requirements: "
+                f"n={self.n} q1={self.q1} q2c={self.q2c} q2f={self.q2f} "
+                f"(need q1+q2c>n and q1+2*q2f>2n)")
+        return self
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def paper_headline(cls, n: int = 11) -> "QuorumSpec":
+        """§5/§6 example: n=11, q1=9, q2f=7, q2c=3."""
+        if n == 11:
+            return cls(11, 9, 3, 7).validate()
+        # generalized: q1 = n - ceil(n/4), then minimal phase-2 quorums.
+        q1 = n - max(1, n // 4)
+        return cls(n, q1, ffp_min_q2c(n, q1), ffp_min_q2f(n, q1)).validate()
+
+    @classmethod
+    def fast_paxos(cls, n: int, variant: str = "three_quarters") -> "QuorumSpec":
+        """Fast Paxos baseline expressed in FFP vocabulary (q1=qc, q2c=qc, q2f=qf)."""
+        qc, qf = fast_paxos_suggested(n, variant)
+        return cls(n, qc, qc, qf).validate()
+
+    @classmethod
+    def majority_fast(cls, n: int) -> "QuorumSpec":
+        """§5 liveness-limited extreme: majority fast quorums need q1 = n."""
+        q2f = n // 2 + 1
+        q1 = 2 * n - 2 * q2f + 1
+        return cls(n, q1, ffp_min_q2c(n, q1), q2f).validate()
+
+    # -- enumeration (for the set-based checkers & the model checker) -------
+    def phase1_quorums(self, acceptors: Sequence[Acceptor] | None = None) -> Iterator[Quorum]:
+        yield from _combos(self.n, self.q1, acceptors)
+
+    def phase2c_quorums(self, acceptors: Sequence[Acceptor] | None = None) -> Iterator[Quorum]:
+        yield from _combos(self.n, self.q2c, acceptors)
+
+    def phase2f_quorums(self, acceptors: Sequence[Acceptor] | None = None) -> Iterator[Quorum]:
+        yield from _combos(self.n, self.q2f, acceptors)
+
+    def check_sets(self) -> bool:
+        """Verify Eqs. 11 & 12 by explicit set enumeration (small n only)."""
+        p1 = list(self.phase1_quorums())
+        p2c = list(self.phase2c_quorums())
+        p2f = list(self.phase2f_quorums())
+        return (pairwise_intersect(p1, p2c)
+                and triple_intersect(p1, p2f, p2f))
+
+    # -- convenience -------------------------------------------------------
+    def fault_tolerance(self) -> dict:
+        """How many acceptor crashes each path tolerates while staying live."""
+        return {
+            "phase1": self.n - self.q1,
+            "phase2_classic": self.n - self.q2c,
+            "phase2_fast": self.n - self.q2f,
+            # steady-state Multi-Paxos-style operation only needs phase-2:
+            "steady_state_classic": self.n - self.q2c,
+            "steady_state_fast": self.n - self.q2f,
+        }
+
+
+def _combos(n: int, k: int, acceptors: Sequence[Acceptor] | None) -> Iterator[Quorum]:
+    ids = range(n) if acceptors is None else acceptors
+    for c in itertools.combinations(ids, k):
+        yield frozenset(c)
+
+
+# ---------------------------------------------------------------------------
+# Explicit (non-cardinality) quorum systems — §6 "quorum systems that are not
+# based solely on quorum cardinality".  These exercise the *set-level*
+# requirement checkers, demonstrating that the framework accepts any system
+# satisfying Eqs. 11/12, not just counting systems.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExplicitQuorumSystem:
+    """A fully enumerated quorum system over acceptors 0..n-1."""
+
+    n: int
+    p1: Tuple[Quorum, ...]
+    p2c: Tuple[Quorum, ...]
+    p2f: Tuple[Quorum, ...]
+
+    def is_valid(self) -> bool:
+        return (pairwise_intersect(self.p1, self.p2c)
+                and triple_intersect(self.p1, self.p2f, self.p2f))
+
+    def validate(self) -> "ExplicitQuorumSystem":
+        if not self.is_valid():
+            raise ValueError("explicit quorum system violates Eq.11/Eq.12")
+        return self
+
+    @classmethod
+    def from_spec(cls, spec: QuorumSpec) -> "ExplicitQuorumSystem":
+        return cls(spec.n,
+                   tuple(spec.phase1_quorums()),
+                   tuple(spec.phase2c_quorums()),
+                   tuple(spec.phase2f_quorums()))
+
+    @classmethod
+    def grid(cls, cols: int, rows: int = 3) -> "ExplicitQuorumSystem":
+        """A 3xC grid system (non-cardinality example for §6's closing remark).
+
+        phase-1        = one full row ∪ one full column
+        phase-2 classic = one column
+        phase-2 fast    = two full rows
+
+        Eq.11: a row meets every column.  Eq.12: with exactly three rows, any
+        two fast quorums (two rows each) share a row r* by pigeonhole; any
+        phase-1 quorum's column hits r*, giving the triple intersection.  The
+        pigeonhole argument needs rows == 3 — larger grids admit two fast
+        quorums with disjoint row pairs, violating Eq.12 (checked by
+        ``is_valid`` and exercised in tests)."""
+        if rows != 3:
+            raise ValueError("grid construction is only FFP-valid for rows=3")
+        n = rows * cols
+        idx = lambda r, c: r * cols + c
+
+        def row(r):
+            return frozenset(idx(r, c) for c in range(cols))
+
+        def col(c):
+            return frozenset(idx(r, c) for r in range(rows))
+
+        p2c = tuple(col(c) for c in range(cols))
+        p1 = tuple(row(r) | col(c) for r in range(rows) for c in range(cols))
+        p2f = tuple(row(r1) | row(r2)
+                    for r1 in range(rows) for r2 in range(rows) if r1 < r2)
+        return cls(n, p1, p2c, p2f)
+
+
+@dataclass(frozen=True)
+class WeightedQuorumSystem:
+    """Weighted voting (Gifford '79) generalized to FFP thresholds.
+
+    Each acceptor i carries weight w[i]; a set is a quorum for a phase when
+    its total weight exceeds the phase threshold.  Validity of the FFP
+    requirements for weighted systems:
+
+      Eq.11  t1 + t2c >  W         (any Q1, Q2c overlap)
+      Eq.12  t1 + 2*t2f > 2*W      (any Q1 and two Q2f share an acceptor)
+
+    mirroring the cardinality forms with weights in place of counts.
+    """
+
+    weights: Tuple[int, ...]
+    t1: int
+    t2c: int
+    t2f: int
+
+    @property
+    def n(self) -> int:
+        return len(self.weights)
+
+    @property
+    def total(self) -> int:
+        return sum(self.weights)
+
+    def is_valid(self) -> bool:
+        W = self.total
+        return self.t1 + self.t2c > W and self.t1 + 2 * self.t2f > 2 * W
+
+    def validate(self) -> "WeightedQuorumSystem":
+        if not self.is_valid():
+            raise ValueError("weighted system violates FFP thresholds")
+        return self
+
+    def is_quorum(self, members: Iterable[Acceptor], phase: str) -> bool:
+        w = sum(self.weights[a] for a in set(members))
+        t = {"p1": self.t1, "p2c": self.t2c, "p2f": self.t2f}[phase]
+        return w >= t
+
+    def enumerate(self, phase: str) -> Iterator[Quorum]:
+        """Minimal quorums of a phase (exponential; small n only)."""
+        ids = range(self.n)
+        for r in range(1, self.n + 1):
+            for c in itertools.combinations(ids, r):
+                if self.is_quorum(c, phase):
+                    s = frozenset(c)
+                    if all(not self.is_quorum(s - {a}, phase) for a in s):
+                        yield s
+
+
+def all_valid_specs(n: int) -> Iterator[QuorumSpec]:
+    """Every cardinality spec valid under Eqs. 13/14 for a cluster of n."""
+    for q1 in range(1, n + 1):
+        for q2c in range(ffp_min_q2c(n, q1), n + 1):
+            for q2f in range(ffp_min_q2f(n, q1), n + 1):
+                yield QuorumSpec(n, q1, q2c, q2f)

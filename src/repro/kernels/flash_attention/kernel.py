@@ -1,0 +1,138 @@
+"""Pallas TPU flash attention (forward), GQA-aware, causal + sliding window.
+
+Tiling: grid = (B*H, S/block_q, T/block_k); the kv axis is minor-most so each
+(batch-head, q-block) accumulates over kv blocks sequentially on-core with
+running-softmax statistics in VMEM scratch (the standard TPU flash pattern —
+HBM traffic is O(S*hd + T*hd) per head instead of O(S*T)).
+
+GQA: the kv BlockSpec index_map folds the query head onto its kv group
+(h // (H/KV)), so kv heads are never materialized H-wide in HBM.
+
+VMEM working set per step (block_q=block_k=512, hd=256, f32):
+q 512x256x4 = 512 KiB, k/v 2x512 KiB, scores 512x512x4 = 1 MiB,
+acc+stats ~0.6 MiB — ~3 MiB total, well under the ~16 MiB v5e budget.
+
+Causal masking is positional (absolute position = q_offset + row), matching
+the convention that queries are the last S positions of the T-long key
+sequence (covers both self-attention S == T and decode-style S < T).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_k: int,
+                  causal: bool, window: Optional[int], q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = q_offset + iq * block_q
+    k_start = ik * block_k
+    # Skip kv blocks fully in the causal future of this q block.
+    run = jnp.asarray(True)
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(
+            run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            ok &= kp <= qp
+        if window is not None:
+            ok &= (qp - kp) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """q (B,H,S,hd), k/v (B,KV,T,hd) -> (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    rep = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    scale = 1.0 / (hd ** 0.5)
+    q_offset = T - S
+
+    qr = q.reshape(B * H, S, hd)
+    kr = k.reshape(B * KV, T, hd)
+    vr = v.reshape(B * KV, T, hd)
+    grid = (B * H, S // block_q, T // block_k)
+
+    def q_index(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kv_index(bh, iq, ik):
+        b, h = bh // H, bh % H
+        return (b * KV + h // rep, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, causal=causal, window=window,
+                          q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,20 @@
+"""Jitted public wrapper for flash attention (interpret on CPU, native on TPU)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, window: Optional[int] = None,
+              block_q: int = 512, block_k: int = 512) -> jax.Array:
+    return kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for blockwise (flash) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -2.0e38
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: Optional[int] = None) -> jnp.ndarray:
+    """q (B,H,S,hd), k/v (B,KV,T,hd) with H % KV == 0 -> (B,H,S,hd).
+
+    Softmax in f32; causal assumes queries are the last S positions of the
+    T-long key sequence (q position i corresponds to absolute T - S + i).
+    """
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV
+    kf = jnp.repeat(k, rep, axis=1)
+    vf = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q, kf,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+                       jnp.float32(hd))
+    q_pos = jnp.arange(S) + (T - S)
+    k_pos = jnp.arange(T)
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if not causal:
+        ok = jnp.ones_like(ok)
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(q.dtype), vf)

@@ -1,0 +1,25 @@
+"""Jitted public wrapper for the quorum-tally kernel.
+
+On CPU (this container) the Pallas kernel runs in interpret mode for
+correctness validation; on TPU set ``interpret=False`` (the default flips on
+TPU backends automatically).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def tally_votes(votes: jax.Array, n_values: int) -> jax.Array:
+    """(S, n) votes -> (S, n_values) counts via the Pallas kernel."""
+    return kernel.tally_votes(votes, n_values, interpret=not _on_tpu())
+
+
+def quorum_reached(votes: jax.Array, n_values: int, q: int) -> jax.Array:
+    return (tally_votes(votes, n_values) >= q).any(axis=-1)

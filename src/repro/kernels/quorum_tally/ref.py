@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the quorum vote tally."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tally_votes(votes: jnp.ndarray, n_values: int) -> jnp.ndarray:
+    """Count votes per value.
+
+    votes: (S, n) integer array, entries in [0, n_values).
+    returns: (S, n_values) int32 counts.
+    """
+    one_hot = (votes[..., None] == jnp.arange(n_values, dtype=votes.dtype))
+    return one_hot.sum(axis=-2).astype(jnp.int32)
+
+
+def quorum_reached(votes: jnp.ndarray, n_values: int, q: int) -> jnp.ndarray:
+    """(S,) bool: some value gathered >= q votes."""
+    return (tally_votes(votes, n_values) >= q).any(axis=-1)

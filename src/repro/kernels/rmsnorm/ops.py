@@ -1,0 +1,14 @@
+"""Jitted public wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    return kernel.rmsnorm(x, scale, eps=eps, interpret=not _on_tpu())

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid = (B, S/chunk); the chunk axis is minor-most, so each batch row walks
+its chunks sequentially on-core while the inter-chunk SSM state lives in VMEM
+scratch — state never round-trips to HBM between chunks (the TPU-native
+adaptation of Mamba2's kernel, DESIGN.md §2: on GPU this is a warp-level
+scan; on TPU the intra-chunk "dual" form feeds the MXU with (chunk x chunk)
+and (chunk x state) matmuls while the carried state stays resident).
+
+Per-block VMEM (chunk=256, nh=24, hd=64, ds=128, f32):
+xw 256*24*64*4 = 1.5 MiB, L (256,256,nh) materialized per-head-group via
+broadcasting inside einsum ~ 6 MiB transient, state 24*64*128*4 = 0.75 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xw_ref, da_ref, b_ref, c_ref, s0_ref,
+                y_ref, fin_ref, state_ref, *, chunk: int):
+    ic = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    xw = xw_ref[0].astype(jnp.float32)       # (L, nh, hd)
+    da = da_ref[0].astype(jnp.float32)       # (L, nh)
+    Bm = b_ref[0].astype(jnp.float32)        # (L, ds)
+    Cm = c_ref[0].astype(jnp.float32)        # (L, ds)
+
+    cum = jnp.cumsum(da, axis=0)             # (L, nh)
+    seg = cum[:, None, :] - cum[None, :, :]  # (Li, Lj, nh)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask inside the exponent (exp overflows at non-causal positions and the
+    # masked-after-exp form has a 0*inf VJP — see models/ssm.py)
+    L = jnp.exp(jnp.where((ii >= jj)[:, :, None], seg, -jnp.inf))
+
+    scores = jax.lax.dot_general(             # (Li, Lj) = C_i . B_j
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("ij,ijh,jhp->ihp", scores, L, xw)
+
+    state = state_ref[...]                    # (nh, hd, ds)
+    y_inter = jnp.einsum("is,hps,ih->ihp", Cm, state, jnp.exp(cum))
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # update carried state: decay full chunk + inject chunk contributions
+    w_end = jnp.exp(cum[-1:, :] - cum)        # (L, nh)
+    chunk_state = jnp.einsum("js,jh,jhp->hps", Bm, w_end, xw)
+    state_ref[...] = state * jnp.exp(cum[-1])[:, None, None] + chunk_state
+
+    @pl.when(ic == nc - 1)
+    def _fin():
+        fin_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xw: jax.Array, da: jax.Array, Bm: jax.Array, Cm: jax.Array,
+        chunk: int = 256, init_state: jax.Array | None = None,
+        interpret: bool = True):
+    """Chunked SSD scan.  xw (B,S,nh,hd), da (B,S,nh), Bm/Cm (B,S,ds)."""
+    B, S, nh, hd = xw.shape
+    ds = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    if init_state is None:
+        init_state = jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    grid = (B, nc)
+    y, fin = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, nh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, nh, hd, ds), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, nh, hd, ds), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, nh, hd), xw.dtype),
+            jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xw, da, Bm, Cm, init_state)
+    return y, fin

@@ -1,0 +1,15 @@
+"""Jitted public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd(xw, da, Bm, Cm, chunk: int = 256, init_state=None):
+    return kernel.ssd(xw, da, Bm, Cm, chunk=chunk, init_state=init_state,
+                      interpret=not _on_tpu())

@@ -1,0 +1,58 @@
+"""Abstract (no-allocation) state construction for the dry-run.
+
+``jax.eval_shape`` gives ShapeDtypeStructs for params/opt-state/caches; the
+logical-axes side data (static strings) is captured out-of-band during the
+same trace, so a 480B-parameter model "initializes" in milliseconds.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec, input_specs
+from repro.models.model import DecoderLM
+from repro.training.optimizer import Optimizer
+
+
+def eval_shape_with_axes(fn: Callable, *args) -> Tuple[Any, Any]:
+    """fn(*args) -> (pytree, axes); returns (ShapeDtypeStruct tree, axes)."""
+    cap: Dict[str, Any] = {}
+
+    def wrapper(*a):
+        out, axes = fn(*a)
+        cap["axes"] = axes
+        return out
+
+    shapes = jax.eval_shape(wrapper, *args)
+    return shapes, cap["axes"]
+
+
+def abstract_params(model: DecoderLM):
+    key = jax.random.PRNGKey(0)
+    return eval_shape_with_axes(model.init, key)
+
+
+def abstract_opt_state(opt: Optimizer, params_abstract, param_axes):
+    state = jax.eval_shape(opt.init, params_abstract)
+    return state, opt.state_axes(param_axes)
+
+
+def abstract_cache(model: DecoderLM, batch: int, max_len: int):
+    return eval_shape_with_axes(
+        lambda: model.init_cache(batch, max_len))
+
+
+def batch_axes(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, tuple]:
+    """Logical axes for every entry of input_specs(cfg, shape)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        if name in ("tokens", "labels"):
+            out[name] = ("batch",) + (None,) * (len(s.shape) - 1)
+        elif name in ("frame_emb", "patch_emb"):
+            out[name] = ("batch",) + (None,) * (len(s.shape) - 2) + ("act_embed",)
+        else:
+            raise KeyError(name)
+    return out

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, prove it fits (memory_analysis) and extract roofline
+inputs (cost_analysis + collective bytes from the optimized HLO).
+
+The two lines above MUST precede every other import — jax locks the device
+count at first initialization.  This module is the ONLY place the 512
+placeholder devices exist; tests and benches see one device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3_12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ArchConfig, ShapeSpec,
+                                get_config, input_specs)
+from repro.launch.abstract import (abstract_cache, abstract_opt_state,
+                                   abstract_params, batch_axes,
+                                   eval_shape_with_axes)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import DecoderLM
+from repro.parallel.sharding import (default_rules, named_sharding,
+                                     sharding_ctx, tree_shardings)
+from repro.training import optimizer as opt_mod
+from repro.training.trainer import make_serve_step, make_train_step
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def choose_optimizer(cfg: ArchConfig):
+    """AdamW by default; Adafactor for the O(100B) MoE (opt-state memory)."""
+    if cfg.param_count() > 1e11:
+        return opt_mod.adafactor(lr=1e-2), "adafactor"
+    return opt_mod.adamw(lr=3e-4), "adamw"
+
+
+def replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def microbatch_policy(cfg: ArchConfig) -> int:
+    """Grad-accumulation factor for train_4k: sized so per-microbatch
+    activations fit HBM (production knob, exercised by the dry-run)."""
+    if cfg.d_model >= 3000:
+        return 8
+    if cfg.d_model >= 1500:
+        return 4
+    return 2
+
+
+def _compile_one(cfg: ArchConfig, shape: ShapeSpec, mesh, rules, opt,
+                 n_micro: int = 1):
+    """Lower + compile one program; returns (compiled, timings)."""
+    model = DecoderLM(cfg, remat=shape.is_train)
+    t0 = time.perf_counter()
+    with sharding_ctx(mesh, rules):
+        p_abs, p_axes = abstract_params(model)
+        p_sh = tree_shardings(p_abs, p_axes, mesh, rules)
+        in_abs = dict(input_specs(cfg, shape))
+        b_axes = batch_axes(cfg, shape)
+        if shape.is_train and n_micro > 1:
+            in_abs = {k: jax.ShapeDtypeStruct(
+                (n_micro, v.shape[0] // n_micro) + v.shape[1:], v.dtype)
+                for k, v in in_abs.items()}
+            b_axes = {k: (None,) + ax for k, ax in b_axes.items()}
+        in_sh = {k: named_sharding(v.shape, b_axes[k], mesh, rules)
+                 for k, v in in_abs.items()}
+        rng_abs = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+        if shape.is_train:
+            o_abs, o_axes = abstract_opt_state(opt, p_abs, p_axes)
+            o_sh = tree_shardings(o_abs, o_axes, mesh, rules)
+            ts = make_train_step(model, opt, n_microbatches=n_micro,
+                                 param_axes=p_axes)
+
+            def step(params, opt_state, batch, rng):
+                p, o, _, metrics = ts(params, opt_state, None, batch, rng)
+                return p, o, metrics
+
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, in_sh, replicated(mesh)),
+                         donate_argnums=(0, 1))
+            args = (p_abs, o_abs, in_abs, rng_abs)
+        elif shape.kind == "prefill":
+            c_abs, c_axes = abstract_cache(model, shape.global_batch,
+                                           shape.seq_len)
+            c_sh = tree_shardings(c_abs, c_axes, mesh, rules)
+
+            def prefill(params, cache, batch):
+                return model.prefill(params, batch, cache)
+
+            fn = jax.jit(prefill, in_shardings=(p_sh, c_sh, in_sh),
+                         donate_argnums=(1,))
+            args = (p_abs, c_abs, in_abs)
+        else:  # decode / long_decode: serve_step over a seq_len-deep cache
+            c_abs, c_axes = abstract_cache(model, shape.global_batch,
+                                           shape.seq_len)
+            c_sh = tree_shardings(c_abs, c_axes, mesh, rules)
+            serve = make_serve_step(model)
+            tok_sh = named_sharding((shape.global_batch, 1), ("batch", None),
+                                    mesh, rules)
+            fn = jax.jit(serve, in_shardings=(p_sh, c_sh, tok_sh),
+                         donate_argnums=(1,))
+            args = (p_abs, c_abs, in_abs["tokens"])
+
+        lowered = fn.lower(*args)
+        lower_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t1
+    return compiled, {"lower_s": round(lower_s, 2),
+                      "compile_s": round(compile_s, 2)}
+
+
+def _cost_and_collectives(compiled) -> Dict[str, Any]:
+    import benchmarks.roofline as rl
+    out: Dict[str, Any] = {}
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                   "bytes accessed": float(ca.get("bytes accessed", 0.0)),
+                   "transcendentals": float(ca.get("transcendentals", 0.0))}
+    hlo = compiled.as_text()
+    out["collectives"] = rl.collective_summary(rl.parse_collectives(hlo))
+    out["hlo_bytes"] = len(hlo)
+    return out
+
+
+def _memory_analysis(compiled) -> Dict[str, Any]:
+    mem: Dict[str, Any] = {}
+    ma = compiled.memory_analysis()
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        if hasattr(ma, k):
+            mem[k] = int(getattr(ma, k))
+    mem["per_device_total"] = (
+        mem.get("argument_size_in_bytes", 0)
+        - mem.get("alias_size_in_bytes", 0)
+        + mem.get("output_size_in_bytes", 0)
+        + mem.get("temp_size_in_bytes", 0))
+    return mem
+
+
+def _lerp_costs(c1: Dict[str, Any], c2: Dict[str, Any], n_super: int
+                ) -> Dict[str, Any]:
+    """Linear extrapolation: total = L1 + (n-1)*(L2-L1) for every additive
+    cost term (flops, bytes, collective link bytes...)."""
+    def ext(a, b):
+        # clamp: boundary-only costs (e.g. one-off all-to-alls) can make the
+        # per-superblock delta negative, which must not extrapolate below 0.
+        return max(a + (n_super - 1) * (b - a), 0.0)
+
+    cost = {k: ext(c1["cost"][k], c2["cost"][k]) for k in c1["cost"]}
+    col1, col2 = c1["collectives"], c2["collectives"]
+    coll = {
+        "link_bytes": ext(col1["link_bytes"], col2["link_bytes"]),
+        "dcn_bytes": ext(col1["dcn_bytes"], col2["dcn_bytes"]),
+        "count": col2["count"],
+        "promoted_count": col2.get("promoted_count", 0),
+        "by_kind": {k: ext(col1["by_kind"].get(k, 0.0),
+                           col2["by_kind"].get(k, 0.0))
+                    for k in set(col1["by_kind"]) | set(col2["by_kind"])},
+    }
+    return {"cost": cost, "collectives": coll}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               rules=None, extra: Optional[Dict[str, Any]] = None,
+               skip_probe: bool = False) -> Dict[str, Any]:
+    """Lower+compile one (arch, shape, mesh) cell; return the record.
+
+    Three compilations: the FULL scanned program (compile-success proof +
+    memory analysis) and 1-/2-superblock unrolled probes whose cost delta
+    gives exact per-superblock FLOPs/bytes/collectives (XLA cost analysis
+    counts a while-loop body once regardless of trip count, so the scanned
+    program's raw numbers undercount; see EXPERIMENTS.md §Method).
+    """
+    cfg = get_config(arch)
+    if extra:
+        cfg = dataclasses.replace(cfg, **extra)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.supports_shape(shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or default_rules()
+    opt, opt_name = choose_optimizer(cfg)
+    rec["optimizer"] = opt_name
+
+    # 1) full program: the dry-run proof + memory analysis (microbatched for
+    #    train shapes — the production grad-accumulation configuration)
+    n_micro = microbatch_policy(cfg) if shape.is_train else 1
+    rec["n_microbatches"] = n_micro
+    compiled, times = _compile_one(cfg, shape, mesh, rules, opt,
+                                   n_micro=n_micro)
+    rec.update(times)
+    try:
+        rec["memory"] = _memory_analysis(compiled)
+    except Exception as e:          # pragma: no cover
+        rec["memory"] = {"error": repr(e)}
+    raw = _cost_and_collectives(compiled)
+    rec["raw_scanned"] = {"cost": raw["cost"],
+                          "collectives": raw["collectives"]}
+    rec["hlo_bytes"] = raw["hlo_bytes"]
+    del compiled
+
+    # 2) cost probes at 1 and 2 superblocks (unrolled — including the inner
+    #    attention/CE chunk loops, so cost_analysis counts every chunk; the
+    #    full program above keeps lax.map for O(1) HLO size)
+    n_super = cfg.n_superblocks
+    per = len([k for k in cfg.pattern if k != "shared_attn"]) or 1
+    if not skip_probe and n_super > 2:
+        from repro.models import layers as layers_mod
+        cfg1 = dataclasses.replace(cfg, n_layers=per)
+        cfg2 = dataclasses.replace(cfg, n_layers=2 * per)
+        layers_mod.FORCE_UNROLL_CHUNKS = True
+        # Cap the unroll at 8 chunks by coarsening the probe's q-chunk (the
+        # 32-chunk prefill probes otherwise take >10 min EACH to compile on
+        # this 1-core container).  Honesty tradeoff, documented in
+        # EXPERIMENTS.md §Method: causal banding is counted at the nc=8
+        # average (0.5625*T vs production nc=32's 0.516*T — a ~9% OVERcount
+        # of causal score bytes), while local-window bands are counted at
+        # (C+w)/C per row vs production's (1024+w)/1024 — an undercount for
+        # w < C; both bounded and consistent across cells.
+        old_qc = layers_mod.Q_CHUNK
+        layers_mod.Q_CHUNK = max(1024, shape.seq_len // 8)
+        try:
+            comp1, t1 = _compile_one(cfg1, shape, mesh, rules, opt)
+            c1 = _cost_and_collectives(comp1)
+            del comp1
+            comp2, t2 = _compile_one(cfg2, shape, mesh, rules, opt)
+            c2 = _cost_and_collectives(comp2)
+            del comp2
+        finally:
+            layers_mod.FORCE_UNROLL_CHUNKS = False
+            layers_mod.Q_CHUNK = old_qc
+        rec["probe_compile_s"] = round(t1["compile_s"] + t2["compile_s"], 2)
+        ext = _lerp_costs(c1, c2, n_super)
+        rec["cost"] = ext["cost"]
+        rec["collectives"] = ext["collectives"]
+    else:
+        rec["cost"] = raw["cost"]
+        rec["collectives"] = raw["collectives"]
+
+    import benchmarks.roofline as rl
+    rec["roofline"] = rl.roofline_terms(
+        rec["cost"], rec["collectives"], cfg, shape, rec["chips"])
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}.{shape}.{'multi' if mp else 'single'}"
+            try:
+                rec = lower_cell(arch, shape, multi_pod=mp)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "status": "error",
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                failures += 1
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                mem = rec["memory"].get("per_device_total", 0) / 2**30
+                dom = rec.get("roofline", {}).get("dominant", "?")
+                extra = (f" mem/dev={mem:.2f}GiB flops={rec['cost']['flops']:.2e}"
+                         f" dominant={dom}"
+                         f" compile={rec['compile_s']}s")
+            elif status == "skipped":
+                extra = f" ({rec['reason'][:60]})"
+            else:
+                extra = f" ERROR {rec['error'][:120]}"
+            print(f"[{status:7s}] {tag}{extra}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before any jax import
+and only then calls ``make_production_mesh``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 = 256 chips per pod; 2 pods = 512.
+
+    Axes: 'data' carries batch + FSDP sharding, 'model' carries tensor/expert
+    parallelism, 'pod' (multi-pod) is pure data parallelism across the DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for single-device smoke runs."""
+    return jax.make_mesh((1, 1), ("data", "model"))

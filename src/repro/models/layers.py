@@ -1,0 +1,393 @@
+"""Dense model building blocks: norms, RoPE, attention (GQA / MLA /
+local-global), MLPs.  Pure JAX; sharding via logical-axis constraints
+(`repro.parallel.sharding.constrain`), which are no-ops without a mesh so the
+same code serves CPU smoke tests and the 512-device dry-run.
+
+Attention is q-chunked ("lazy flash"): queries are processed in chunks of
+``Q_CHUNK`` via lax.scan so score tensors never exceed
+(B, H, Q_CHUNK, T) — the XLA fallback path for long prefill.  The Pallas
+flash kernel (repro.kernels.flash_attention) is the TPU runtime path; both
+are validated against each other in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import active_mesh, constrain, fsdp_use
+
+Q_CHUNK = 1024
+NEG_INF = -2.0e38
+
+# Force python-unrolling of inner chunk loops (attention q-chunks, chunked
+# CE).  lax.map lowers to a while loop whose body XLA cost_analysis counts
+# ONCE regardless of trip count, silently undercounting chunked ops — the
+# dry-run's 1-/2-superblock cost probes set this so every chunk is counted.
+# Production programs keep lax.map (HLO size stays O(1) in chunk count).
+FORCE_UNROLL_CHUNKS = False
+
+
+def _attn_shard_plan(n_heads: int) -> Tuple[str, int]:
+    """(seq_axis, padded_head_count) for sharding attention on 'model'.
+
+    When the head count divides the 'model' axis, heads shard there and seq
+    stays unsharded.  Otherwise (e.g. musicgen's 24 heads on a 16-way axis)
+    attention would silently REPLICATE across 'model'.  Two escapes, by
+    measured preference (EXPERIMENTS.md §Perf, musicgen hillclimb):
+
+      1. pad heads at runtime to the next multiple of the axis (zero wq/wo
+         rows: dead heads contribute exactly 0) when the waste is <= 50% —
+         heads then shard cleanly, no resharding collectives;
+      2. otherwise context-parallel the query/seq dim ('seq_sp' -> 'model'),
+         which trades the replication for enter/exit reshards and f32
+         dk/dv partial-sum all-reduces.
+    """
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return "seq", n_heads
+    m = mesh.shape["model"]
+    if n_heads % m == 0:
+        return "seq", n_heads
+    h_pad = -(-n_heads // m) * m
+    if (h_pad - n_heads) / n_heads <= 0.5:
+        return "seq", h_pad
+    return "seq_sp", n_heads
+
+
+def _pad_heads(arr: jax.Array, h_pad: int, axis: int) -> jax.Array:
+    h = arr.shape[axis]
+    if h == h_pad:
+        return arr
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, h_pad - h)
+    return jnp.pad(arr, pad)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers.  Params are dicts of arrays; every init returns (params, axes)
+# where axes mirrors the structure with logical-axis tuples.
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, axes, in_axis=0, dtype=jnp.float32):
+    if isinstance(in_axis, int):
+        fan_in = shape[in_axis]
+    else:
+        fan_in = math.prod(shape[i] for i in in_axis)
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype) * scale), axes
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    if cfg.norm == "nonparam_ln":
+        return {}, {}
+    return ({"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+            {"scale": ("norm",)})
+
+
+def apply_norm(cfg: ArchConfig, p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    # (A mixed-precision variant computing the sum-square via an f32-
+    # accumulating dot was tried and REFUTED — XLA already fuses this chain,
+    # and the extra dot op made the counted bytes slightly worse.  See
+    # EXPERIMENTS.md §Perf, gemma3 iteration 3.)
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "nonparam_ln":
+        mu = xf.mean(-1, keepdims=True)
+        var = xf.var(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> sin/cos tables (..., dim//2)."""
+    half = dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); sin/cos (S, hd//2) broadcast over batch/heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]          # (S, 1, hd/2) -> broadcast over heads
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (with optional sliding window).
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], (D, H, hd), ("embed", "w_heads", "head_dim"))
+    p["wk"], a["wk"] = dense_init(ks[1], (D, KV, hd), ("embed", "w_kv_heads", "head_dim"))
+    p["wv"], a["wv"] = dense_init(ks[2], (D, KV, hd), ("embed", "w_kv_heads", "head_dim"))
+    p["wo"], a["wo"] = dense_init(ks[3], (H, hd, D), ("w_heads", "head_dim", "embed"),
+                                  in_axis=(0, 1))
+    return p, a
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, KV, hd) -> (B, T, H, hd) by repeating each kv head H/KV times."""
+    B, T, KV, hd = k.shape
+    rep = n_heads // KV
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _attn_mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int],
+               k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Additive mask (..., Sq, Tk): causal, optional sliding window."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(cfg: ArchConfig, p: Dict, x: jax.Array,
+              k: jax.Array, v: jax.Array,
+              q_pos: jax.Array, k_pos: jax.Array,
+              window: Optional[int] = None,
+              k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Core attention: x (B,S,D) queries against k/v (B,T,KV,hd).
+
+    Query-chunked when S > Q_CHUNK to bound the score tensor.
+    """
+    H, hd = cfg.n_heads, cfg.hd
+    sa, h_eff = _attn_shard_plan(H)
+    wq = _pad_heads(fsdp_use(p["wq"], ("embed", "w_heads", "head_dim"),
+                             x.dtype), h_eff, 1)
+    wo = _pad_heads(fsdp_use(p["wo"], ("w_heads", "head_dim", "embed"),
+                             x.dtype), h_eff, 0)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    sin, cos = rope_tables(q_pos, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    # fold the 1/sqrt(hd) scale into q (B,S,H,hd) — two orders of magnitude
+    # smaller than the (B,H,Sq,T) score tensor it would otherwise multiply
+    q = q * jnp.asarray(1.0 / math.sqrt(hd), q.dtype)
+    q = constrain(q, ("batch", sa, "heads", "head_dim"))
+    kf = _pad_heads(_expand_kv(k, H), h_eff, 2)
+    vf = _pad_heads(_expand_kv(v, H), h_eff, 2)
+
+    @jax.checkpoint
+    def chunk_attn(qc, qp, kc, vc, kp, kval):
+        # rematted: the backward recomputes this chunk's scores instead of
+        # storing (bq, T) softmax weights for every chunk/layer — the XLA
+        # analogue of flash-attention memory behaviour.
+        qc = constrain(qc, ("batch", sa, "heads", "head_dim"))
+        s = jnp.einsum("bshk,bthk->bhst", qc, kc,
+                       preferred_element_type=jnp.float32)
+        s = s + _attn_mask(qp, kp, window, kval)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhst,bthk->bshk", w, vc)
+        return constrain(o, ("batch", sa, "heads", "head_dim"))
+
+    S = x.shape[1]
+    T = kf.shape[1]
+    if S <= Q_CHUNK:
+        o = chunk_attn(q, q_pos, kf, vf, k_pos, k_valid)
+    else:
+        assert S % Q_CHUNK == 0, f"seq {S} must be divisible by {Q_CHUNK}"
+        nc = S // Q_CHUNK
+        if nc <= 8 or FORCE_UNROLL_CHUNKS:
+            # Python-unrolled with STATIC per-chunk k/v slices: chunk i can
+            # only attend keys below hi = T-S+(i+1)*C (causal) and, for
+            # sliding-window layers, above hi-C-window — the fully-masked
+            # score blocks are then never computed.  Saves ~(nc-1)/2nc of
+            # score FLOPs+bytes for causal, ~1 - (C+w)/T for local layers
+            # (EXPERIMENTS.md §Perf, musicgen/gemma3 hillclimbs).
+            outs = []
+            for i in range(nc):
+                sl = slice(i * Q_CHUNK, (i + 1) * Q_CHUNK)
+                hi = T - S + (i + 1) * Q_CHUNK
+                lo = 0 if window is None else max(0, hi - Q_CHUNK - window)
+                outs.append(chunk_attn(
+                    q[:, sl], q_pos[sl], kf[:, lo:hi], vf[:, lo:hi],
+                    k_pos[lo:hi],
+                    None if k_valid is None else k_valid[lo:hi]))
+            o = jnp.concatenate(outs, axis=1)
+        else:
+            # long prefill: uniform chunks via lax.map keep HLO size O(1);
+            # local layers still use a constant-width banded k slice.
+            qs = q.reshape(q.shape[0], nc, Q_CHUNK, h_eff, hd).swapaxes(0, 1)
+            ps = q_pos.reshape(nc, Q_CHUNK)
+            if window is not None and Q_CHUNK + window < T:
+                width = Q_CHUNK + window
+                kv_ = (jnp.zeros((T,), jnp.bool_) if k_valid is None
+                       else k_valid)
+
+                def banded(args):
+                    qc, qp, i = args
+                    hi = T - S + (i + 1) * Q_CHUNK
+                    lo = jnp.maximum(hi - width, 0)
+                    kc = jax.lax.dynamic_slice_in_dim(kf, lo, width, axis=1)
+                    vc = jax.lax.dynamic_slice_in_dim(vf, lo, width, axis=1)
+                    kp = jax.lax.dynamic_slice_in_dim(k_pos, lo, width)
+                    kv = (None if k_valid is None else
+                          jax.lax.dynamic_slice_in_dim(kv_, lo, width))
+                    return chunk_attn(qc, qp, kc, vc, kp, kv)
+
+                o = jax.lax.map(banded, (qs, ps, jnp.arange(nc)))
+            else:
+                o = jax.lax.map(
+                    lambda args: chunk_attn(args[0], args[1], kf, vf,
+                                            k_pos, k_valid), (qs, ps))
+            o = o.swapaxes(0, 1).reshape(q.shape[0], S, h_eff, hd)
+
+    y = jnp.einsum("bshk,hkd->bsd", o, wo)
+    return constrain(y, ("batch", "seq", "act_embed"))
+
+
+def project_kv(cfg: ArchConfig, p: Dict, x: jax.Array, k_pos: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """K/V projections (+RoPE on K) for tokens x at positions k_pos."""
+    kv_ax = ("embed", "w_kv_heads", "head_dim")
+    k = jnp.einsum("btd,dgk->btgk", x, fsdp_use(p["wk"], kv_ax, x.dtype))
+    v = jnp.einsum("btd,dgk->btgk", x, fsdp_use(p["wv"], kv_ax, x.dtype))
+    sin, cos = rope_tables(k_pos, cfg.hd, cfg.rope_theta)
+    k = apply_rope(k, sin, cos)
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention).
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], (D, H, dn + dr), ("embed", "w_heads", "head_dim"))
+    p["wdkv"], a["wdkv"] = dense_init(ks[1], (D, r + dr), ("embed", "kv_lora"))
+    p["wuk"], a["wuk"] = dense_init(ks[2], (r, H, dn), ("kv_lora", "w_heads", "head_dim"))
+    p["wuv"], a["wuv"] = dense_init(ks[3], (r, H, dv), ("kv_lora", "w_heads", "head_dim"))
+    p["wo"], a["wo"] = dense_init(ks[4], (H, dv, D), ("w_heads", "head_dim", "embed"),
+                                  in_axis=(0, 1))
+    return p, a
+
+
+def mla_compress(cfg: ArchConfig, p: Dict, x: jax.Array, k_pos: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """x -> (c_kv (B,T,r), k_rope (B,T,dr)) — this pair is the whole KV cache."""
+    m = cfg.mla
+    ckr = jnp.einsum("btd,dr->btr", x,
+                 fsdp_use(p["wdkv"], ("embed", "kv_lora"), x.dtype))
+    c_kv, k_rope = ckr[..., :m.kv_lora_rank], ckr[..., m.kv_lora_rank:]
+    sin, cos = rope_tables(k_pos, m.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], sin, cos)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(cfg: ArchConfig, p: Dict, x: jax.Array,
+                  c_kv: jax.Array, k_rope: jax.Array,
+                  q_pos: jax.Array, k_pos: jax.Array,
+                  k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """MLA attention over the compressed cache.
+
+    Baseline (paper-faithful deployment): decompress K/V per head from c_kv.
+    ``cfg.mla.absorbed_decode``: absorb W_uk into the query and W_uv into the
+    output projection so attention runs directly in the rank-r latent space —
+    the beyond-paper §Perf variant (cache reads drop from H*(dn+dv) to
+    r + dr per token).
+    """
+    m = cfg.mla
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x,
+               fsdp_use(p["wq"], ("embed", "w_heads", "head_dim"),
+                        x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    sin, cos = rope_tables(q_pos, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if m.absorbed_decode:
+        # q_lat (B,S,H,r) = q_nope @ wuk^T ; scores vs c_kv directly.
+        # k_rope is shared across heads, so the rope term contracts (B,T,dr)
+        # against per-head q_rope without materializing per-head K.
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["wuk"].astype(x.dtype))
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshr,btr->bhst", q_rope, k_rope,
+                          preferred_element_type=jnp.float32)) * scale
+        s = s + _attn_mask(q_pos, k_pos, None, k_valid)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", w, c_kv)
+        o = jnp.einsum("bshr,rhv->bshv", o_lat, p["wuv"].astype(x.dtype))
+    else:
+        k_nope = jnp.einsum("btr,rhn->bthn", c_kv, p["wuk"].astype(x.dtype))
+        v = jnp.einsum("btr,rhv->bthv", c_kv, p["wuv"].astype(x.dtype))
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    k_rope.shape[:2] + (H, dr))
+        s = (jnp.einsum("bshn,bthn->bhst", q_nope, k_nope,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshn,bthn->bhst", q_rope, k_rope_h,
+                          preferred_element_type=jnp.float32)) * scale
+        s = s + _attn_mask(q_pos, k_pos, None, k_valid)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhst,bthv->bshv", w, v)
+
+    y = jnp.einsum("bshv,hvd->bsd", o,
+               fsdp_use(p["wo"], ("w_heads", "head_dim", "embed"),
+                        x.dtype))
+    return constrain(y, ("batch", "seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchConfig, key, d_ff: Optional[int] = None) -> Tuple[Dict, Dict]:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["wi"], a["wi"] = dense_init(ks[0], (D, F), ("embed", "mlp"))
+    p["wo"], a["wo"] = dense_init(ks[1], (F, D), ("mlp", "embed"))
+    if cfg.mlp == "swiglu":
+        p["wg"], a["wg"] = dense_init(ks[2], (D, F), ("embed", "mlp"))
+    return p, a
+
+
+def apply_mlp(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x,
+                   fsdp_use(p["wi"], ("embed", "mlp"), x.dtype))
+    h = constrain(h, ("batch", "seq", "mlp_act"))
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x,
+                       fsdp_use(p["wg"], ("embed", "mlp"), x.dtype))
+        h = jax.nn.silu(h) * g
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("bsf,fd->bsd", h,
+                   fsdp_use(p["wo"], ("mlp", "embed"), x.dtype))
+    return constrain(y, ("batch", "seq", "act_embed"))

@@ -1,0 +1,454 @@
+"""DecoderLM: one composable decoder assembled from an ``ArchConfig``.
+
+All ten assigned architectures are instances of this class (dense / MoE /
+MLA / hybrid Mamba2 / pure SSM / audio / VLM backbones).  Layers are grouped
+into *superblocks* (``cfg.pattern``) and stacked with ``jax.lax.scan`` so HLO
+size and compile time are independent of depth; zamba2's weight-shared
+attention block is passed into the scan as a closure (unstacked).
+
+Three entry points:
+  forward(params, batch)                 -> logits (train / scoring)
+  prefill(params, batch)                 -> (cache, logits)
+  decode_step(params, cache, tokens)     -> (logits, cache)
+
+KV caches are ring buffers with an explicit position buffer (``k_pos``), so
+sliding-window (gemma3 local), full-context, MLA-compressed, and SSM state
+caches all share one masking rule: a slot is attendable iff its stored
+position is in [q_pos - window, q_pos].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.parallel.sharding import constrain, fsdp_use
+
+from . import layers, moe as moe_mod, ssm as ssm_mod
+
+Params = Dict[str, Any]
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _kind_key(kind: str, j: int) -> str:
+    return f"{kind}_{j}"
+
+
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig, remat: bool = True,
+                 use_ssd_kernel: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        self.use_ssd_kernel = use_ssd_kernel
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Tuple[Params, Params]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: Params = {}
+        a: Params = {}
+        if cfg.frontend != "audio_frames":
+            # Embed table: vocab replicated, d_model sharded on 'model' — the
+            # token gather then needs no collective (batch-sharded indices x
+            # dim-sharded operand); a vocab-sharded table would all-gather
+            # the entire table per step.  The output head (a matmul) shards
+            # its vocab dim cleanly instead.
+            p["embed"] = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+            a["embed"] = (None, "embed_td")
+        p["head"], a["head"] = layers.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab), ("embed", "w_vocab"))
+        p["final_norm"], a["final_norm"] = layers.init_norm(cfg, keys[2])
+
+        blocks: Params = {}
+        blocks_a: Params = {}
+        bkeys = jax.random.split(keys[3], len(cfg.pattern))
+        for j, kind in enumerate(cfg.pattern):
+            if kind == "shared_attn":
+                continue
+            sb_keys = jax.random.split(bkeys[j], cfg.n_superblocks)
+            # vmap stacks params over superblocks; axes (static strings) come
+            # from a single non-vmapped call.
+            bp = jax.vmap(lambda k, kind=kind: self._init_block(kind, k)[0])(sb_keys)
+            _, ba = self._init_block(kind, bkeys[j])
+            blocks[_kind_key(kind, j)] = bp
+            blocks_a[_kind_key(kind, j)] = jax.tree.map(
+                lambda ax: (None,) + ax, ba,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+        p["blocks"], a["blocks"] = blocks, blocks_a
+
+        if "shared_attn" in cfg.pattern:
+            p["shared"], a["shared"] = self._init_block("global", keys[4])
+        return p, a
+
+    def _init_block(self, kind: str, key) -> Tuple[Params, Params]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        if kind == "mamba":
+            mp, ma = ssm_mod.init_mamba(cfg, ks[0])
+            np_, na = layers.init_norm(cfg, ks[1])
+            return ({"ln": np_, "mamba": mp}, {"ln": na, "mamba": ma})
+        p: Params = {}
+        a: Params = {}
+        p["ln1"], a["ln1"] = layers.init_norm(cfg, ks[0])
+        if cfg.mla is not None:
+            p["attn"], a["attn"] = layers.init_mla(cfg, ks[1])
+        else:
+            p["attn"], a["attn"] = layers.init_attention(cfg, ks[1])
+        p["ln2"], a["ln2"] = layers.init_norm(cfg, ks[2])
+        if cfg.moe is not None:
+            p["ffn"], a["ffn"] = moe_mod.init_moe(cfg, ks[3])
+        else:
+            p["ffn"], a["ffn"] = layers.init_mlp(cfg, ks[3])
+        return p, a
+
+    # ----------------------------------------------------------- embeddings
+    def embed_inputs(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            x = batch["frame_emb"].astype(COMPUTE_DTYPE)
+        elif cfg.frontend == "vision_patches":
+            tok = params["embed"][batch["tokens"]].astype(COMPUTE_DTYPE)
+            x = jnp.concatenate(
+                [batch["patch_emb"].astype(COMPUTE_DTYPE), tok], axis=1)
+        else:
+            x = params["embed"][batch["tokens"]].astype(COMPUTE_DTYPE)
+        return constrain(x, ("batch", "seq", "act_embed"))
+
+    # ---------------------------------------------------------------- blocks
+    def _apply_block(self, kind: str, p: Params, x: jax.Array,
+                     cache: Optional[Params], write_cache: bool,
+                     pos0: jax.Array) -> Tuple[jax.Array, Optional[Params]]:
+        """One block on x (B,S,D); returns (x, new_cache_slice)."""
+        cfg = self.cfg
+        B, S, D = x.shape
+        q_pos = pos0 + jnp.arange(S)
+        new_cache: Optional[Params] = None
+
+        if kind == "mamba":
+            h = layers.apply_norm(cfg, p["ln"], x)
+            y, nc = ssm_mod.mamba_block(cfg, p["mamba"], h, cache=cache,
+                                        use_kernel=self.use_ssd_kernel)
+            return x + y, nc
+
+        window = cfg.window if kind == "local" else None
+        h = layers.apply_norm(cfg, p["ln1"], x)
+
+        # Cache READ vs WRITE are separate concerns:
+        #  * decode (S == 1) attends over (prior ring buffer ∥ current k/v) —
+        #    attending over the *written* buffer would be wrong whenever a
+        #    chunk exceeds the window, and the position mask hides stale
+        #    slots either way;
+        #  * prefill (S > 1) starts from an empty cache, so it attends over
+        #    the RAW current k/v only (full-forward semantics) — attending
+        #    over the concat doubles prefill_32k's buffers and score width
+        #    for rows that are all masked invalid (EXPERIMENTS.md §Dry-run).
+        # The write itself is independent and goes to ``new_cache``.
+        read_cache = cache is not None and S == 1
+        if cfg.mla is not None:
+            ckv, krope = layers.mla_compress(cfg, p["attn"], h, q_pos)
+            if cache is not None:
+                _, _, _, new_cache = _cache_write_mla(
+                    cache, ckv, krope, q_pos, write_cache)
+            if read_cache:
+                ckv_all = jnp.concatenate(
+                    [cache["ckv"], ckv.astype(cache["ckv"].dtype)], axis=1)
+                krope_all = jnp.concatenate(
+                    [cache["krope"], krope.astype(cache["krope"].dtype)], axis=1)
+                k_pos = jnp.concatenate([cache["k_pos"], q_pos])
+                valid = k_pos >= 0
+            else:
+                ckv_all, krope_all, k_pos, valid = ckv, krope, q_pos, None
+            y = layers.mla_attention(cfg, p["attn"], h, ckv_all, krope_all,
+                                     q_pos, jnp.maximum(k_pos, 0), k_valid=valid)
+        else:
+            k, v = layers.project_kv(cfg, p["attn"], h, q_pos)
+            if cache is not None:
+                _, _, _, new_cache = _cache_write_kv(
+                    cache, k, v, q_pos, write_cache)
+            if read_cache:
+                k_all = jnp.concatenate(
+                    [cache["k"], k.astype(cache["k"].dtype)], axis=1)
+                v_all = jnp.concatenate(
+                    [cache["v"], v.astype(cache["v"].dtype)], axis=1)
+                k_pos = jnp.concatenate([cache["k_pos"], q_pos])
+                valid = k_pos >= 0
+            else:
+                k_all, v_all, k_pos, valid = k, v, q_pos, None
+            y = layers.attention(cfg, p["attn"], h, k_all, v_all,
+                                 q_pos, jnp.maximum(k_pos, 0),
+                                 window=window, k_valid=valid)
+        x = x + y
+
+        h = layers.apply_norm(cfg, p["ln2"], x)
+        if cfg.moe is not None:
+            y = moe_mod.moe_block(cfg, p["ffn"], h)
+        else:
+            y = layers.apply_mlp(cfg, p["ffn"], h)
+        return x + y, new_cache
+
+    # ------------------------------------------------------------- superblock
+    def _superblock(self, carry, xs, shared_p: Optional[Params],
+                    write_cache: bool):
+        """Scan body: apply one superblock (cfg.pattern) of blocks."""
+        cfg = self.cfg
+        x, pos0 = carry
+        block_p, cache_sb = xs
+        new_cache_sb: Params = {}
+        for j, kind in enumerate(cfg.pattern):
+            key = _kind_key(kind, j)
+            if kind == "shared_attn":
+                p_j = shared_p
+            else:
+                p_j = block_p[key]
+            c_j = None if cache_sb is None else cache_sb.get(key)
+            apply = functools.partial(
+                self._apply_block, "global" if kind == "shared_attn" else kind,
+                write_cache=write_cache)
+            if self.remat:
+                # nested remat: the outer (superblock) checkpoint keeps only
+                # scan carries; this inner one means the superblock's
+                # backward recompute holds one *block's* internals at a time
+                # instead of all of them.
+                apply = jax.checkpoint(apply)
+            x, nc = apply(p_j, x, c_j, pos0=pos0)
+            if nc is not None:
+                new_cache_sb[key] = nc
+        return (x, pos0), (new_cache_sb or None)
+
+    def _run_blocks(self, params: Params, x: jax.Array, pos0: jax.Array,
+                    cache: Optional[Params], write_cache: bool
+                    ) -> Tuple[jax.Array, Optional[Params]]:
+        cfg = self.cfg
+        shared_p = params.get("shared")
+        body = functools.partial(self._superblock, shared_p=shared_p,
+                                 write_cache=write_cache)
+        # Remat is per-block only (inside _superblock).  An additional outer
+        # checkpoint(nothing_saveable) around the scan body made every block
+        # forward run ~3x (fwd + outer recompute + inner recompute); saving
+        # the (B,S,D) block boundaries instead costs ~n_layers * 50 MB/device
+        # and removes one full forward recompute (EXPERIMENTS.md §Perf,
+        # musicgen iteration 4 — confirmed on all three hillclimb cells).
+        if cfg.n_superblocks <= 2:
+            # Unrolled: straight-line HLO so XLA cost analysis counts every
+            # superblock (a lax.scan body is counted once regardless of trip
+            # count) — the dry-run extrapolates per-superblock costs from
+            # 1- and 2-superblock lowerings.  Also exercised by smoke tests.
+            carry = (x, pos0)
+            caches = []
+            for i in range(cfg.n_superblocks):
+                p_i = jax.tree.map(lambda l: l[i], params["blocks"])
+                c_i = (None if cache is None
+                       else jax.tree.map(lambda l: l[i], cache))
+                carry, nc = body(carry, (p_i, c_i))
+                caches.append(nc)
+            x, _ = carry
+            new_cache = (None if caches[0] is None else
+                         jax.tree.map(lambda *ls: jnp.stack(ls), *caches))
+            return x, new_cache
+        (x, _), new_cache = jax.lax.scan(
+            body, (x, pos0), (params["blocks"], cache))
+        return x, new_cache
+
+    # ------------------------------------------------------------------ api
+    def forward(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Full-sequence logits (training / scoring path, no cache)."""
+        x = self.embed_inputs(params, batch)
+        x, _ = self._run_blocks(params, x, jnp.int32(0), None, False)
+        return self._head(params, x)
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array],
+             chunk_tokens: int = 4096) -> jax.Array:
+        """Chunked cross-entropy: the (tokens, vocab) logits matrix is never
+        materialized — the head matmul + CE run per token-chunk under remat
+        (backward recomputes each chunk's logits).  At gemma3 scale this is
+        the difference between ~10 GiB of loss buffers and ~0.2 GiB."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, batch)
+        x, _ = self._run_blocks(params, x, jnp.int32(0), None, False)
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        if cfg.frontend == "vision_patches":
+            x = x[:, cfg.vision_tokens:]
+        labels = batch["labels"]
+        B, S, D = x.shape
+        xt = x.reshape(B * S, D)
+        lt = labels.reshape(B * S)
+        n = B * S
+        n_chunks = max(1, n // max(chunk_tokens, 1))
+        while n % n_chunks:
+            n_chunks -= 1
+        head = params["head"]
+
+        @jax.checkpoint
+        def chunk_nll(args):
+            xc, lc = args
+            logits = jnp.einsum(
+                "td,dv->tv", xc,
+                fsdp_use(head, ("embed", "w_vocab"), xc.dtype))
+            logits = constrain(logits, ("batch", "vocab_act"))
+            lf = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(lf, axis=-1)
+            ll = jnp.take_along_axis(lf, lc[:, None], axis=-1)[:, 0]
+            return (lse - ll).sum()
+
+        if n_chunks == 1:
+            total = chunk_nll((xt, lt))
+        else:
+            xc = xt.reshape(n_chunks, n // n_chunks, D)
+            lc = lt.reshape(n_chunks, n // n_chunks)
+            if layers.FORCE_UNROLL_CHUNKS and n_chunks <= 64:
+                # cost probes: count every chunk (lax.map bodies are counted
+                # once by cost_analysis — see layers.FORCE_UNROLL_CHUNKS)
+                total = sum(chunk_nll((xc[i], lc[i]))
+                            for i in range(n_chunks))
+            else:
+                total = jax.lax.map(chunk_nll, (xc, lc)).sum()
+        return total / n
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        x = layers.apply_norm(self.cfg, params["final_norm"], x)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x,
+            fsdp_use(params["head"], ("embed", "w_vocab"), x.dtype))
+        return constrain(logits, ("batch", "seq", "vocab_act"))
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Tuple[Params, Params]:
+        """(cache, logical-axes) pytrees; leaves stacked over superblocks."""
+        cfg = self.cfg
+        n_sb = cfg.n_superblocks
+        cache: Params = {}
+        axes: Params = {}
+        for j, kind in enumerate(cfg.pattern):
+            key = _kind_key(kind, j)
+            if kind == "mamba":
+                spec = ssm_mod.mamba_cache_spec(cfg, batch)
+                cache[key] = {
+                    name: jnp.zeros((n_sb,) + shp, dt)
+                    for name, (shp, dt, ax) in spec.items()}
+                axes[key] = {name: (None,) + ax
+                             for name, (shp, dt, ax) in spec.items()}
+                continue
+            T = cfg.window if kind == "local" else max_len
+            if cfg.mla is not None:
+                m = cfg.mla
+                cache[key] = {
+                    "ckv": jnp.zeros((n_sb, batch, T, m.kv_lora_rank),
+                                     COMPUTE_DTYPE),
+                    "krope": jnp.zeros((n_sb, batch, T, m.qk_rope_dim),
+                                       COMPUTE_DTYPE),
+                    "k_pos": jnp.full((n_sb, T), -1, jnp.int32),
+                }
+                axes[key] = {
+                    "ckv": (None, "batch", "cache_seq", "kv_lora"),
+                    "krope": (None, "batch", "cache_seq", None),
+                    "k_pos": (None, "cache_seq"),
+                }
+            else:
+                KV, hd = cfg.n_kv_heads, cfg.hd
+                cache[key] = {
+                    "k": jnp.zeros((n_sb, batch, T, KV, hd), COMPUTE_DTYPE),
+                    "v": jnp.zeros((n_sb, batch, T, KV, hd), COMPUTE_DTYPE),
+                    "k_pos": jnp.full((n_sb, T), -1, jnp.int32),
+                }
+                axes[key] = {
+                    "k": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+                    "v": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+                    "k_pos": (None, "cache_seq"),
+                }
+        return ({"pos": jnp.int32(0), "layers": cache},
+                {"pos": (), "layers": axes})
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                cache: Params) -> Tuple[Params, jax.Array]:
+        """Run the prompt through the model, filling the cache."""
+        x = self.embed_inputs(params, batch)
+        S = x.shape[1]
+        x, new_layers = self._run_blocks(params, x, jnp.int32(0),
+                                         cache["layers"], True)
+        logits = self._head(params, x[:, -1:])
+        return {"pos": jnp.int32(S), "layers": new_layers}, logits
+
+    def decode_step(self, params: Params, cache: Params,
+                    tokens: jax.Array) -> Tuple[jax.Array, Params]:
+        """One decode step: tokens (B,1) -> logits (B,1,V), updated cache."""
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            # audio stub: decode consumes the embedding of the last emitted
+            # codebook token through the (stub) frontend = embed via head^T.
+            x = jnp.take(params["head"].T, tokens[:, 0], axis=0)[:, None, :]
+            x = x.astype(COMPUTE_DTYPE)
+        else:
+            x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+        x = constrain(x, ("batch", "seq", "act_embed"))
+        pos = cache["pos"]
+        x, new_layers = self._run_blocks(params, x, pos, cache["layers"], True)
+        logits = self._head(params, x)
+        return logits, {"pos": pos + tokens.shape[1], "layers": new_layers}
+
+
+# ---------------------------------------------------------------------------
+# Cache write helpers (ring buffers with explicit position tracking).
+# ---------------------------------------------------------------------------
+
+def _ring_write(buf: jax.Array, new: jax.Array, pos_buf: jax.Array,
+                q_pos: jax.Array, axis: int = 1):
+    """Write new (B,S,...) into ring buffer (B,T,...) at q_pos % T."""
+    T = buf.shape[axis]
+    S = new.shape[axis]
+    if S >= T:
+        # keep the last T entries (prefill longer than the window), rolled so
+        # the ring invariant ``slot(p) = p % T`` holds — decode writes rely on
+        # it to evict exactly the oldest (out-of-window) entry.
+        tail = jax.lax.slice_in_dim(new, S - T, S, axis=axis)
+        tail_pos = jax.lax.slice_in_dim(q_pos, S - T, S, axis=0)
+        shift = tail_pos[0] % T
+        tail = jnp.roll(tail, shift, axis=axis)
+        tail_pos = jnp.roll(tail_pos, shift, axis=0)
+        return tail.astype(buf.dtype), tail_pos
+    start = q_pos[0] % T
+    idx = (start + jnp.arange(S)) % T      # wraparound with static shapes
+    out = _scatter_axis(buf, new.astype(buf.dtype), idx, axis)
+    pos_out = pos_buf.at[idx].set(q_pos)
+    return out, pos_out
+
+
+def _scatter_axis(buf: jax.Array, new: jax.Array, idx: jax.Array, axis: int):
+    moved = jnp.moveaxis(buf, axis, 0)
+    new_m = jnp.moveaxis(new, axis, 0)
+    moved = moved.at[idx].set(new_m)
+    return jnp.moveaxis(moved, 0, axis)
+
+
+def _cache_write_kv(cache: Params, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, write: bool):
+    kb, vb, pb = cache["k"], cache["v"], cache["k_pos"]
+    if not write:
+        return kb, vb, pb, None
+    kn, pn = _ring_write(kb, k, pb, q_pos)
+    vn, _ = _ring_write(vb, v, pb, q_pos)
+    return kn, vn, pn, {"k": kn, "v": vn, "k_pos": pn}
+
+
+def _cache_write_mla(cache: Params, ckv: jax.Array, krope: jax.Array,
+                     q_pos: jax.Array, write: bool):
+    cb, rb, pb = cache["ckv"], cache["krope"], cache["k_pos"]
+    if not write:
+        return cb, rb, pb, None
+    cn, pn = _ring_write(cb, ckv, pb, q_pos)
+    rn, _ = _ring_write(rb, krope, pb, q_pos)
+    return cn, rn, pn, {"ckv": cn, "krope": rn, "k_pos": pn}
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

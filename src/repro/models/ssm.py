@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked scan for train/prefill,
+O(1) recurrent state for decode.
+
+Chunked SSD (paper: arXiv:2405.21060): the sequence is split into chunks of
+``cfg.ssm.chunk``; within a chunk the contribution is an attention-like
+masked matmul (the "dual" form, MXU-friendly), across chunks a short
+lax.scan carries the (nh, hd, ds) state.  The pure-jnp implementation here is
+also the oracle for the ``kernels/ssd_scan`` Pallas kernel.
+
+Shapes: x (B,S,nh,hd); B/C projections (B,S,ds) (single group, shared across
+heads, as in Mamba2); dt (B,S,nh); A (nh,) negative reals.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import constrain, fsdp_use
+
+from .layers import dense_init
+
+
+def init_mamba(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    ds = s.d_state
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["wz"], a["wz"] = dense_init(ks[0], (D, di), ("embed", "ssm_inner"))
+    p["wx"], a["wx"] = dense_init(ks[1], (D, di), ("embed", "ssm_inner"))
+    p["wB"], a["wB"] = dense_init(ks[2], (D, ds), ("embed", "ssm_state"))
+    p["wC"], a["wC"] = dense_init(ks[3], (D, ds), ("embed", "ssm_state"))
+    p["wdt"], a["wdt"] = dense_init(ks[4], (D, nh), ("embed", None))
+    p["conv"] = jax.random.normal(ks[5], (s.d_conv, di + 2 * ds)) * 0.1
+    a["conv"] = ("conv", None)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh))      # A = -exp(A_log)
+    a["A_log"] = (None,)
+    p["dt_bias"] = jnp.zeros((nh,))
+    a["dt_bias"] = (None,)
+    p["Dskip"] = jnp.ones((nh,))
+    a["Dskip"] = (None,)
+    p["norm_scale"] = jnp.ones((di,))
+    a["norm_scale"] = (None,)
+    p["wo"], a["wo"] = dense_init(ks[6], (di, D), ("ssm_inner", "embed"))
+    return p, a
+
+
+def _causal_conv(u: jax.Array, kernel: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv, width W: u (B,S,C), kernel (W,C).
+
+    ``tail`` (B,W-1,C) is the conv state from previous tokens (decode)."""
+    W = kernel.shape[0]
+    if tail is None:
+        pad = jnp.zeros(u.shape[:1] + (W - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = tail.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1], :] * kernel[i].astype(u.dtype)
+              for i in range(W))
+    return out
+
+
+def ssd_chunked(xw: jax.Array, da: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                chunk: int, init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xw (B,S,nh,hd): dt-weighted inputs (x * dt)
+    da (B,S,nh):    per-step log-decay (dt * A, negative)
+    Bm, Cm (B,S,ds)
+    init_state (B,nh,hd,ds) or None
+    returns y (B,S,nh,hd), final_state (B,nh,hd,ds)
+    """
+    B, S, nh, hd = xw.shape
+    ds = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xw = xw.reshape(B, nc, chunk, nh, hd)
+    da = da.reshape(B, nc, chunk, nh).astype(jnp.float32)
+    Bm = Bm.reshape(B, nc, chunk, ds)
+    Cm = Cm.reshape(B, nc, chunk, ds)
+
+    cum = jnp.cumsum(da, axis=2)                        # (B,nc,L,nh)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Li,Lj,nh)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # Mask INSIDE the exponent: at non-causal positions seg > 0 and exp(seg)
+    # overflows; masking after exp makes the VJP compute 0*inf = NaN.
+    L = jnp.exp(jnp.where(causal, seg, -jnp.inf))       # intra-chunk decay
+
+    scores = jnp.einsum("bcis,bcjs->bcij", Cm, Bm,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                         scores, L, xw.astype(jnp.float32))
+
+    # End-of-chunk states: sum_j exp(cum_end - cum_j) * B_j (x) xw_j
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,L,nh)
+    chunk_state = jnp.einsum("bcjs,bcjh,bcjhp->bchps",
+                             Bm, w_end, xw.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,nc,nh)
+
+    s0 = (jnp.zeros((B, nh, hd, ds), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inputs):
+        cstate, cdecay = inputs                          # (B,nh,hd,ds),(B,nh)
+        new = state * cdecay[:, :, None, None] + cstate
+        return new, state                                # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)             # (B,nc,nh,hd,ds)
+
+    y_inter = jnp.einsum("bcis,bchps,bcih->bcihp",
+                         Cm, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    return y.astype(xw.dtype), final
+
+
+def ssd_reference(xw, da, Bm, Cm, init_state=None):
+    """O(S) sequential recurrence — ground truth for tests."""
+    B, S, nh, hd = xw.shape
+    ds = Bm.shape[-1]
+    s0 = (jnp.zeros((B, nh, hd, ds), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, t):
+        decay = jnp.exp(da[:, t].astype(jnp.float32))     # (B,nh)
+        upd = jnp.einsum("bs,bhp->bhps", Bm[:, t], xw[:, t].astype(jnp.float32))
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bs,bhps->bhp", Cm[:, t], state)
+        return state, y
+
+    final, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    return ys.swapaxes(0, 1).astype(xw.dtype), final
+
+
+def mamba_block(cfg: ArchConfig, p: Dict, x: jax.Array,
+                cache: Optional[Dict] = None,
+                use_kernel: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full Mamba2 block.  x (B,S,D).
+
+    cache = {"conv": (B, W-1, di+2ds), "state": (B,nh,hd,ds)}; pass a cache
+    dict for decode/prefill-with-state; returns (y, new_cache or None).
+    """
+    s = cfg.ssm
+    D = cfg.d_model
+    di, nh, ds = s.d_inner(D), s.n_heads(D), s.d_state
+    B, S, _ = x.shape
+
+    z = jnp.einsum("bsd,de->bse", x, fsdp_use(p["wz"], ("embed", "ssm_inner"), x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, fsdp_use(p["wx"], ("embed", "ssm_inner"), x.dtype))
+    Bm = jnp.einsum("bsd,de->bse", x, fsdp_use(p["wB"], ("embed", "ssm_state"), x.dtype))
+    Cm = jnp.einsum("bsd,de->bse", x, fsdp_use(p["wC"], ("embed", "ssm_state"), x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x,
+                   fsdp_use(p["wdt"], ("embed", None), x.dtype)
+                   ).astype(jnp.float32)
+        + p["dt_bias"])                                   # (B,S,nh)
+
+    u = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    tail = cache["conv"] if cache is not None else None
+    u = jax.nn.silu(_causal_conv(u, p["conv"], tail))
+    new_tail = None
+    if cache is not None:
+        full = (jnp.concatenate([tail.astype(u.dtype),
+                                 jnp.concatenate([xs, Bm, Cm], -1)], axis=1)
+                if tail is not None else jnp.concatenate([xs, Bm, Cm], -1))
+        new_tail = full[:, -(s.d_conv - 1):, :]
+    xs, Bm, Cm = (u[..., :di], u[..., di:di + ds], u[..., di + ds:])
+
+    xh = xs.reshape(B, S, nh, s.head_dim)
+    xh = constrain(xh, ("batch", "seq", "heads", "head_dim"))
+    A = -jnp.exp(p["A_log"])                              # (nh,)
+    da = dt * A
+    xw = xh * dt[..., None].astype(xh.dtype)
+
+    init_state = cache["state"] if cache is not None else None
+    if S == 1:
+        # decode: one recurrence step, no chunking
+        y, final = ssd_reference(xw, da, Bm, Cm, init_state)
+    elif use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, final = ssd_ops.ssd(xw, da, Bm, Cm, s.chunk, init_state)
+    else:
+        pad = (-S) % s.chunk
+        if pad:
+            xw = jnp.pad(xw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            da = jnp.pad(da, ((0, 0), (0, pad)) + ((0, 0),) * (da.ndim - 2))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, final = ssd_chunked(xw, da, Bm, Cm, s.chunk, init_state)
+        y = y[:, :S]
+
+    y = y + xh * p["Dskip"][:, None].astype(xh.dtype)
+    y = y.reshape(B, S, di)
+    # gated RMSNorm then out-projection
+    g = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), -1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * p["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", g,
+                 fsdp_use(p["wo"], ("ssm_inner", "embed"), x.dtype))
+    out = constrain(out, ("batch", "seq", "act_embed"))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail, "state": final}
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg: ArchConfig, batch: int):
+    """Abstract (shape, dtype, logical-axes) for one block's cache."""
+    s = cfg.ssm
+    D = cfg.d_model
+    di, nh, ds = s.d_inner(D), s.n_heads(D), s.d_state
+    return {
+        "conv": ((batch, s.d_conv - 1, di + 2 * ds), jnp.bfloat16,
+                 ("batch", None, None)),
+        "state": ((batch, nh, s.head_dim, ds), jnp.float32,
+                  ("batch", "heads", "head_dim", "ssm_state")),
+    }

@@ -1,0 +1,94 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+Two standard schemes, both with error feedback so compression error
+accumulates into the next step instead of being lost:
+
+* ``int8_compress`` — per-tensor symmetric int8 with stochastic rounding
+  (4x fewer DCN bytes than f32; unbiased in expectation).
+* ``topk_compress`` — keep the largest k fraction of entries by magnitude
+  (sparsity encodes as values+indices; ~2/k reduction).
+
+The trainer applies compress->decompress around the gradient aggregation
+point; on real multi-pod hardware the compressed representation is what
+crosses the DCN link (the decompressed all-reduce is mathematically
+equivalent under layer-wise scales).  Error-feedback residuals live in a
+pytree mirroring the grads and are carried in the train state.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def init_residual(grads_like: Params) -> Params:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+# ---------------------------------------------------------------------------
+# int8 stochastic rounding.
+# ---------------------------------------------------------------------------
+
+def _int8_roundtrip(g: jax.Array, key: jax.Array) -> jax.Array:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = g / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q8 = jnp.clip(jnp.round(q + noise), -127, 127).astype(jnp.int8)
+    return q8.astype(jnp.float32) * scale
+
+
+def int8_compress(grads: Params, residual: Params, key: jax.Array
+                  ) -> Tuple[Params, Params]:
+    """Returns (compressed-roundtripped grads, new residual)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    keys_tree = jax.tree.unflatten(treedef, list(keys))
+
+    def one(g, r, k):
+        g32 = g.astype(jnp.float32) + r
+        out = _int8_roundtrip(g32, k)
+        return out, g32 - out
+
+    pairs = jax.tree.map(one, grads, residual, keys_tree)
+    comp = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res
+
+
+# ---------------------------------------------------------------------------
+# top-k with error feedback.
+# ---------------------------------------------------------------------------
+
+def topk_compress(grads: Params, residual: Params, frac: float = 0.05
+                  ) -> Tuple[Params, Params]:
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        flat = g32.reshape(-1)
+        k = max(1, int(flat.shape[0] * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        kept = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(g32.shape)
+        return kept, g32 - kept
+
+    pairs = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return comp, res
+
+
+def compressed_bytes(grads: Params, scheme: Optional[str], frac: float = 0.05) -> int:
+    """DCN bytes per grad sync under a scheme (for the roofline's pod term)."""
+    n = sum(int(jnp.size(g)) for g in jax.tree.leaves(grads))
+    if scheme is None:
+        return 4 * n
+    if scheme == "int8":
+        return n + 4 * len(jax.tree.leaves(grads))
+    if scheme == "topk":
+        return int(n * frac) * 8          # value + index
+    raise ValueError(scheme)

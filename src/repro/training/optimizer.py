@@ -1,0 +1,179 @@
+"""Optimizers implemented from scratch (no optax): AdamW and Adafactor.
+
+API mirrors the optax convention so the trainer can swap them:
+
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Optimizer state mirrors the parameter pytree, so the FSDP sharding specs of
+the params apply verbatim to the moments (ZeRO-style sharded optimizer
+state) — ``state_axes(param_axes)`` returns the matching logical-axes trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params], Tuple[Params, Any]]
+    state_axes: Callable[[Any], Any]
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW.
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          max_grad_norm: Optional[float] = 1.0,
+          schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+          ) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr_t = lr if schedule is None else lr * schedule(step)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = -lr_t * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u.astype(jnp.float32)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, AdamWState(step, mu, nu)
+
+    def state_axes(param_axes):
+        return AdamWState((), param_axes, param_axes)
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory-lean for giant models).
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Params      # row second-moment (or full moment for <2D leaves)
+    vc: Params      # col second-moment (zeros-like placeholder for <2D)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        def vr0(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        def vc0(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vr0, params),
+                              jax.tree.map(vc0, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def upd(g, p, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(g):
+                nvr = beta * vr + (1 - beta) * g2.mean(-1)
+                nvc = beta * vc + (1 - beta) * g2.mean(-2)
+                r = nvr / jnp.maximum(nvr.mean(-1, keepdims=True), eps)
+                pre = (r[..., None] * nvc[..., None, :])
+                u = g * jax.lax.rsqrt(jnp.maximum(pre, eps))
+            else:
+                nvr, nvc = beta * vr + (1 - beta) * g2, vc
+                u = g * jax.lax.rsqrt(jnp.maximum(nvr, eps))
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr * (u + weight_decay * p.astype(jnp.float32))
+            return u, nvr, nvc
+
+        out = jax.tree.map(upd, grads, params, state.vr, state.vc)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        vr = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdafactorState(step, vr, vc)
+
+    def state_axes(param_axes):
+        def row_axes(ax):
+            return ax[:-1] if isinstance(ax, tuple) and len(ax) >= 2 else ax
+
+        def col_axes(ax):
+            return (ax[:-2] + ax[-1:]
+                    if isinstance(ax, tuple) and len(ax) >= 2 else (None,))
+
+        is_ax = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        return AdafactorState(
+            (),
+            jax.tree.map(row_axes, param_axes, is_leaf=is_ax),
+            jax.tree.map(col_axes, param_axes, is_leaf=is_ax))
+
+    return Optimizer(init, update, state_axes)
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return warm * cos
+    return fn

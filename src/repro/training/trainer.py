@@ -1,0 +1,193 @@
+"""Training loop: jit'd train_step factory (grad accumulation, compression,
+remat) plus a host-level ``Trainer`` integrating the consensus control plane
+(checkpoint manifests, straggler verdicts, elastic epochs).
+
+``make_train_step`` is the function the multi-pod dry-run lowers — its
+signature and sharding are identical on CPU smoke tests and the 512-chip
+mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import DecoderLM
+from repro.parallel.sharding import constrain
+
+from . import compress as compress_mod
+from .optimizer import Optimizer, apply_updates, global_norm
+
+Params = Any
+
+
+def make_train_step(model: DecoderLM, opt: Optimizer,
+                    n_microbatches: int = 1,
+                    compression: Optional[str] = None,
+                    param_axes=None,
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, residual, batch, rng) ->
+    (params, opt_state, residual, metrics).
+
+    Microbatching: when ``n_microbatches > 1`` the batch must arrive with a
+    leading microbatch dim — (n_micro, B/n_micro, ...) — shaped by the host
+    data pipeline (reshaping a batch-sharded dim inside the program forces a
+    resharding GSPMD handles poorly).  Microbatches are accumulated with
+    lax.scan into f32 grad buffers sharded like the params.  Compression
+    round-trips grads through int8/top-k with error feedback before the
+    optimizer — emulating what crosses the pod-level DCN all-reduce.
+
+    ``param_axes`` (the logical-axis pytree from model.init / abstract_params)
+    makes each microbatch's grads get a sharding constraint MATCHING the FSDP
+    param sharding before accumulation.  Without it GSPMD materializes the
+    batch-partial grads with a ring all-reduce (2x bytes) and then discards
+    15/16 of every buffer into the sharded accumulator; with it the partial
+    sums go through a reduce-scatter at half the link bytes
+    (EXPERIMENTS.md §Perf, deepseek_7b iteration 1).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def shard_like_params(g):
+        if param_axes is None:
+            return g
+        from repro.parallel.sharding import constrain
+        return jax.tree.map(lambda x, ax: constrain(x, ax), g, param_axes)
+
+    def train_step(params, opt_state, residual, batch, rng):
+        if n_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+            grads = shard_like_params(grads)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                l, g = grads_of(params, mb)
+                g = shard_like_params(g)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / n_microbatches,
+                    acc, g)
+                return (acc,), l
+
+            zero = shard_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads,), losses = jax.lax.scan(micro, (zero,), batch)
+            loss = losses.mean()
+
+        if compression == "int8":
+            grads, residual = compress_mod.int8_compress(grads, residual, rng)
+        elif compression == "topk":
+            grads, residual = compress_mod.topk_compress(grads, residual)
+
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads),
+                   "update_norm": global_norm(updates)}
+        return params, opt_state, residual, metrics
+
+    return train_step
+
+
+def make_serve_step(model: DecoderLM) -> Callable:
+    """serve_step(params, cache, tokens) -> (logits, cache) — the function
+    lowered for decode_* / long_* shapes."""
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill(model: DecoderLM) -> Callable:
+    def prefill(params, cache, batch):
+        return model.prefill(params, batch, cache)
+    return prefill
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    n_microbatches: int = 1
+    compression: Optional[str] = None
+    log_every: int = 10
+
+
+class Trainer:
+    """Host-level loop: data cursor, checkpoints through the control plane,
+    preemption-safe resume.  Used by examples/train_lm.py (which also
+    simulates failures/stragglers around it)."""
+
+    def __init__(self, model: DecoderLM, opt: Optimizer, pipeline,
+                 tcfg: TrainerConfig, plane=None):
+        self.model = model
+        self.opt = opt
+        self.pipe = pipeline
+        self.tcfg = tcfg
+        self.plane = plane
+        self.step_fn = jax.jit(make_train_step(
+            model, opt, tcfg.n_microbatches, tcfg.compression),
+            donate_argnums=(0, 1, 2))
+        self.params: Optional[Params] = None
+        self.opt_state = None
+        self.residual = None
+        self.step = 0
+        self.cursor = 0
+        self.history: list = []
+
+    def init(self, key) -> None:
+        self.params, self.axes = self.model.init(key)
+        self.opt_state = self.opt.init(self.params)
+        self.residual = (compress_mod.init_residual(self.params)
+                         if self.tcfg.compression else
+                         jax.tree.map(lambda p: jnp.zeros((1,), jnp.float32),
+                                      {"_": 0}))
+
+    def try_restore(self) -> bool:
+        from . import checkpoint as ckpt
+        manifest = ckpt.latest_manifest(self.tcfg.ckpt_dir, self.plane)
+        if manifest is None:
+            return False
+        state, step, cursor = ckpt.restore(
+            {"params": self.params, "opt": self.opt_state}, manifest)
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step, self.cursor = step, cursor
+        return True
+
+    def save(self) -> None:
+        from . import checkpoint as ckpt
+        ckpt.save(self.tcfg.ckpt_dir, self.step,
+                  {"params": self.params, "opt": self.opt_state},
+                  self.cursor, self.plane)
+
+    def run(self, n_steps: int, rng=None) -> Dict[str, float]:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        last = {}
+        nm = self.tcfg.n_microbatches
+        for _ in range(n_steps):
+            batch = self.pipe.batch_at(self.cursor)
+            if nm > 1:
+                batch = jax.tree.map(
+                    lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]),
+                    batch)
+            rng, sub = jax.random.split(rng)
+            t0 = time.perf_counter()
+            (self.params, self.opt_state, self.residual,
+             metrics) = self.step_fn(self.params, self.opt_state,
+                                     self.residual, batch, sub)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_s"] = time.perf_counter() - t0
+            self.step += 1
+            self.cursor += 1
+            self.history.append(metrics)
+            last = metrics
+            if self.tcfg.ckpt_every and self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        return last

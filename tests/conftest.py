@@ -1,0 +1,9 @@
+import sys
+import os
+
+# repo root on sys.path so `benchmarks.*` imports resolve in tests
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running end-to-end test")

@@ -1,0 +1,132 @@
+"""Cluster control-plane tests: consensus log, typed records, elastic
+membership, failure detection, straggler verdicts."""
+import pytest
+
+from repro.cluster import (ConsensusLog, ControlPlane, MembershipManager,
+                           PhiAccrualDetector, StragglerPolicy)
+from repro.cluster.membership import plan_mesh, quorum_policy
+from repro.core.quorum import QuorumSpec
+
+SPEC = QuorumSpec.paper_headline(11)
+
+
+def test_fast_path_commit():
+    log = ConsensusLog(SPEC, seed=0)
+    out = log.propose("x")
+    assert out.fast and out.value == "x" and out.slot == 0
+    assert log.stats["fast"] == 1
+
+
+def test_race_resolves_to_single_value():
+    log = ConsensusLog(SPEC, seed=1)
+    out = log.propose_racing(["a", "b"])
+    assert out.value in ("a", "b")
+    assert log.decided[out.slot].value == out.value
+
+
+def test_forced_collision_recovery():
+    log = ConsensusLog(SPEC, seed=2)
+    # interleave arrivals so neither value reaches q2f=7 of 11:
+    order_a = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10]
+    order_b = list(reversed(order_a))
+    out = log.propose_racing(["a", "b"], arrival_orders=[order_a, order_b])
+    assert out.recovered and not out.fast
+    assert out.value in ("a", "b")
+    # round-robin interleave: a gets 0..4 + 5, b gets 10..6 -> 6/5 split < 7
+    assert log.stats["recovered"] == 1
+
+
+def test_slot_already_decided_aborts_later_proposals():
+    log = ConsensusLog(SPEC, seed=3)
+    out1 = log.propose("a", slot=5)
+    out2 = log.propose("b", slot=5)
+    assert out2.value == "a"
+    assert log.stats["aborted_proposals"] == 1
+
+
+def test_crash_tolerance_and_liveness_loss():
+    log = ConsensusLog(SPEC, seed=4)
+    for a in range(4):
+        log.crash(a)                 # 7 live = exactly q2f
+    out = log.propose("x")
+    assert out.value == "x"
+    log.crash(4)                     # 6 live < q2f AND < q1=9 -> stuck
+    with pytest.raises(RuntimeError):
+        log.propose("y")
+
+
+def test_control_plane_records_and_views():
+    cp = ControlPlane(SPEC, seed=0)
+    cp.commit_checkpoint(10, {"dir": "/ckpt/a"}, data_cursor=10)
+    cp.commit_cursor(11, 11)
+    cp.commit_checkpoint(20, {"dir": "/ckpt/b"}, data_cursor=20)
+    last = cp.latest_checkpoint()
+    assert last["step"] == 20 and last["shards"]["dir"] == "/ckpt/b"
+    assert cp.latest_cursor()["cursor"] == 11
+    kinds = [h["kind"] for h in cp.history()]
+    assert kinds == ["checkpoint", "cursor", "checkpoint"]
+
+
+def test_membership_epochs_and_quorum_rescaling():
+    cp = ControlPlane(SPEC, seed=0)
+    mm = MembershipManager(cp, initial_hosts=range(8), model_parallel=16,
+                           devices_per_host=4)
+    e1 = mm.current()
+    assert e1.mesh_shape == (2, 16)
+    assert e1.quorums.is_valid()
+    e2 = mm.scale_up(range(8, 16))
+    assert e2.mesh_shape == (4, 16)
+    assert e2.epoch == e1.epoch + 1
+    e3 = mm.evict_failed([0, 1, 2, 3])
+    assert e3.mesh_shape == (3, 16)
+    assert len(e3.hosts) == 12
+    # acceptor quorums always satisfy the paper's Eqs. 13/14
+    for e in (e1, e2, e3):
+        assert e.quorums.is_valid()
+
+
+def test_quorum_policy_valid_across_sizes():
+    for n in range(3, 40):
+        assert quorum_policy(n).is_valid()
+
+
+def test_plan_mesh():
+    assert plan_mesh(8, 16, 4) == (2, 16)
+    with pytest.raises(ValueError):
+        plan_mesh(1, 16, 4)
+
+
+def test_phi_accrual_detector():
+    d = PhiAccrualDetector(threshold=8.0)
+    for t in range(0, 2000, 100):
+        d.heartbeat(1, float(t))
+        d.heartbeat(2, float(t) + (t % 300) * 0.1)   # jittery but alive
+    assert d.phi(1, 2050.0) < 8.0
+    assert d.phi(1, 9000.0) > 8.0
+    assert d.suspected([1, 2], 9000.0) == [1, 2]
+    assert d.suspected([1, 2], 2050.0) == []
+
+
+def test_straggler_policy_commits_verdict():
+    cp = ControlPlane(SPEC, seed=0)
+    sp = StragglerPolicy(cp, patience=3)
+    verdicts = []
+    for step in range(4):
+        times = {h: 100.0 + h * 0.1 for h in range(8)}
+        times[5] = 900.0
+        v = sp.observe_step(step, times)
+        if v:
+            verdicts.append((step, v))
+    assert verdicts == [(2, [5])]
+    hist = cp.history()
+    assert hist[-1]["kind"] == "straggler" and hist[-1]["slow_hosts"] == [5]
+
+
+def test_straggler_transient_spike_not_verdicted():
+    cp = ControlPlane(SPEC, seed=0)
+    sp = StragglerPolicy(cp, patience=3)
+    for step in range(6):
+        times = {h: 100.0 for h in range(8)}
+        if step == 2:
+            times[4] = 900.0          # single spike
+        assert sp.observe_step(step, times) is None

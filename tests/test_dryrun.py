@@ -1,0 +1,109 @@
+"""Dry-run machinery tests.
+
+The full 512-device sweep is a deliverable run via
+``python -m repro.launch.dryrun --all --both-meshes``; here we verify the
+pieces — HLO collective parsing, roofline arithmetic, extrapolation — plus
+one real (subprocess) lower+compile on the production mesh for the fastest
+cell, proving the end-to-end path inside the test suite.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import benchmarks.roofline as rl
+
+
+def test_parse_collectives_brace_groups():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %ar = (f32[64]{0}, f32[32]{0}) all-reduce(%a, %b), replica_groups={{0,1}}, to_apply=%sum
+  %rs = f32[16]{0} reduce-scatter(%c), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[4]{0} collective-permute(%d), source_target_pairs={{0,1}}
+"""
+    ops = rl.parse_collectives(hlo)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "reduce-scatter"]
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.out_bytes == 8 * 128 * 2 and ag.group == 4
+    assert ag.link_bytes == pytest.approx(8 * 128 * 2 * 3 / 4)
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.out_bytes == 64 * 4 + 32 * 4
+    rs = next(o for o in ops if o.kind == "reduce-scatter")
+    assert rs.link_bytes == pytest.approx(16 * 4 * 3)
+
+
+def test_parse_collectives_iota_groups_and_pod_detection():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(%a), replica_groups=[16,32]<=[512], to_apply=%s
+  %ag = f32[64]{0} all-gather(%b), replica_groups={{0,256},{1,257}}, dimensions={0}
+"""
+    ops = rl.parse_collectives(hlo)
+    assert ops[0].group == 32
+    assert not ops[0].crosses_pod
+    assert ops[1].group == 2 and ops[1].crosses_pod
+    summary = rl.collective_summary(ops)
+    assert summary["dcn_bytes"] > 0 and summary["link_bytes"] > 0
+
+
+def test_roofline_terms_and_dominance():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 * 2}
+    coll = {"link_bytes": 50e9 * 0.5, "dcn_bytes": 0.0}
+    t = rl.roofline_terms(cost, coll)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["collective_s"] == pytest.approx(0.5)
+    assert t["dominant"] == "memory_s"
+
+
+def test_model_flops_conventions():
+    from repro.configs.base import SHAPES, get_config
+    cfg = get_config("olmo_1b")
+    tr = rl.model_flops(cfg, SHAPES["train_4k"], 256)
+    pf = rl.model_flops(cfg, SHAPES["prefill_32k"], 256)
+    dc = rl.model_flops(cfg, SHAPES["decode_32k"], 256)
+    assert tr == pytest.approx(3 * pf, rel=1e-6)      # 6ND vs 2ND, same tokens
+    assert dc < pf / 1000                             # one token per seq
+
+
+def test_zamba2_shared_block_flops_multiplicity():
+    from repro.configs.base import _param_count, get_config
+    cfg = get_config("zamba2_2_7b")
+    storage = _param_count(cfg)
+    flops_n = _param_count(cfg, flops_multiplicity=True)
+    assert flops_n > storage          # shared block executes 9x, stored 1x
+
+
+def test_lerp_extrapolation():
+    from repro.launch import dryrun as dr
+    c1 = {"cost": {"flops": 10.0}, "collectives": {
+        "link_bytes": 4.0, "dcn_bytes": 0.0, "count": 2,
+        "by_kind": {"all-reduce": 4.0}}}
+    c2 = {"cost": {"flops": 16.0}, "collectives": {
+        "link_bytes": 7.0, "dcn_bytes": 0.0, "count": 3,
+        "by_kind": {"all-reduce": 7.0}}}
+    out = dr._lerp_costs(c1, c2, 5)
+    assert out["cost"]["flops"] == pytest.approx(10 + 4 * 6)
+    assert out["collectives"]["link_bytes"] == pytest.approx(4 + 4 * 3)
+
+
+@pytest.mark.slow
+def test_real_dryrun_subprocess(tmp_path):
+    """End-to-end: 512 host devices, production mesh, smallest cell."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src:."
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "olmo_1b", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(),
+        timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(tmp_path / "olmo_1b.decode_32k.single.json"))
+    assert rec["status"] == "ok"
+    assert rec["cost"]["flops"] > 0
+    assert rec["roofline"]["dominant"] in ("compute_s", "memory_s",
+                                           "collective_s")
+    assert rec["memory"]["per_device_total"] < 16 * 2**30

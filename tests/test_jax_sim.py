@@ -1,0 +1,77 @@
+"""Vectorized Monte-Carlo model: internal invariants + cross-validation
+against the discrete-event simulator (same latency distribution)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import jax_sim
+from repro.core.quorum import QuorumSpec
+from repro.core.simulator import (FastPaxosSim, conflict_free_workload,
+                                  latency_stats)
+
+FFP = QuorumSpec.paper_headline(11)
+FP = QuorumSpec.fast_paxos(11)
+KEY = jax.random.PRNGKey(0)
+
+
+def test_fast_path_monotone_in_quorum_size():
+    lat7 = jax_sim.fast_path_latency(KEY, 11, 7, 50_000)
+    lat9 = jax_sim.fast_path_latency(KEY, 11, 9, 50_000)
+    assert float(lat7.mean()) < float(lat9.mean())
+
+
+def test_cross_validation_with_discrete_event_sim():
+    """The analytic order-statistic model and the event-driven simulator
+    must agree on mean fast-path latency within a few percent."""
+    mc = float(jax_sim.fast_path_latency(KEY, 11, FFP.q2f, 200_000).mean())
+    sim = FastPaxosSim(FFP, seed=11)
+    conflict_free_workload(sim, 3000, rate_per_s=1400)
+    des = latency_stats(sim.run())["mean_ms"]
+    assert abs(mc - des) / des < 0.05, (mc, des)
+
+
+def test_conflict_probability_decreasing_in_interval():
+    """Fig. 2c: larger inter-command intervals -> fewer recoveries."""
+    ps = [jax_sim.conflict_probability(KEY, FFP, d, samples=30_000)
+          for d in (0.0, 0.3, 0.8, 2.0)]
+    assert ps[0] >= ps[1] >= ps[2] >= ps[3]
+    assert ps[3] < 0.01
+
+
+def test_ffp_recovers_less_than_fp():
+    p_ffp = jax_sim.conflict_probability(KEY, FFP, 0.3, samples=50_000)
+    p_fp = jax_sim.conflict_probability(KEY, FP, 0.3, samples=50_000)
+    assert p_ffp < p_fp
+
+
+def test_race_outcomes_partition():
+    out = jax_sim.conflict_race(KEY, 11, FFP.q1, FFP.q2f, FFP.q2c,
+                                10_000, 0.3)
+    total = (out["a_wins_fast"].astype(jnp.int32)
+             + out["b_wins_fast"].astype(jnp.int32)
+             + out["recovery"].astype(jnp.int32))
+    assert bool((total == 1).all())
+    assert bool(jnp.isfinite(out["latency_ms"]).all())
+
+
+def test_kernel_path_matches_ref_path():
+    o1 = jax_sim.conflict_race(KEY, 11, FFP.q1, FFP.q2f, FFP.q2c,
+                               5_000, 0.3, use_kernel=True)
+    o2 = jax_sim.conflict_race(KEY, 11, FFP.q1, FFP.q2f, FFP.q2c,
+                               5_000, 0.3, use_kernel=False)
+    assert bool((o1["recovery"] == o2["recovery"]).all())
+    assert float(jnp.abs(o1["latency_ms"] - o2["latency_ms"]).max()) < 1e-5
+
+
+def test_mixed_workload_summary():
+    s = jax_sim.mixed_workload_latency(KEY, FFP, conflict_frac=0.01,
+                                       delta_ms=0.3, samples=20_000)
+    assert s["p99_ms"] >= s["p95_ms"] >= s["p50_ms"] > 0
+    assert 0.0 <= s["recovery_rate"] <= 0.01
+
+
+def test_classic_path_slower_than_fast():
+    fast = jax_sim.fast_path_latency(KEY, 11, FFP.q2f, 30_000)
+    classic = jax_sim.classic_path_latency(KEY, 11, 6, 30_000)
+    # classic adds the client->leader relay hop
+    assert float(classic.mean()) > float(fast.mean())

@@ -1,0 +1,155 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), swept over
+shapes and dtypes per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.quorum_tally import ops as qt_ops, ref as qt_ref
+from repro.kernels.rmsnorm import ops as rn_ops, ref as rn_ref
+from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# quorum_tally
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,n,V", [(100, 11, 2), (1024, 11, 3), (3000, 7, 2),
+                                   (5000, 32, 5)])
+def test_quorum_tally_shapes(S, n, V):
+    votes = jax.random.randint(KEY, (S, n), 0, V)
+    np.testing.assert_array_equal(np.asarray(qt_ops.tally_votes(votes, V)),
+                                  np.asarray(qt_ref.tally_votes(votes, V)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(S=st.integers(1, 300), n=st.integers(1, 24), V=st.integers(1, 4),
+       q=st.integers(1, 12))
+def test_quorum_tally_property(S, n, V, q):
+    votes = jax.random.randint(jax.random.PRNGKey(S * 31 + n), (S, n), 0, V)
+    kq = qt_ops.quorum_reached(votes, V, q)
+    rq = qt_ref.quorum_reached(votes, V, q)
+    np.testing.assert_array_equal(np.asarray(kq), np.asarray(rq))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, H, KV, S, T, hd, causal, window, dtype)
+    (2, 4, 2, 256, 256, 64, True, None, jnp.float32),
+    (1, 8, 8, 128, 128, 128, True, None, jnp.float32),
+    (1, 4, 1, 128, 128, 64, True, 64, jnp.float32),
+    (2, 2, 2, 64, 512, 32, True, None, jnp.float32),     # decode-style S<T
+    (1, 4, 2, 256, 256, 64, False, None, jnp.float32),
+    (2, 4, 2, 256, 256, 64, True, None, jnp.bfloat16),
+    (1, 2, 2, 128, 128, 256, True, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,KV,S,T,hd,causal,window,dtype", ATTN_CASES)
+def test_flash_attention_vs_ref(B, H, KV, S, T, hd, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, T, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, T, hd), dtype)
+    out = fa_ops.attention(q, k, v, causal=causal, window=window,
+                           block_q=64, block_k=64)
+    exp = fa_ref.attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32), causal=causal,
+                           window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    err = float(jnp.abs(out.astype(jnp.float32) - exp).max())
+    assert err < tol, err
+
+
+def test_flash_attention_block_shape_independent():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    outs = [fa_ops.attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(64, 64), (128, 64), (256, 128), (64, 256)]]
+    for o in outs[1:]:
+        assert float(jnp.abs(o - outs[0]).max()) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (2, 128, 4, 16, 32, 32, jnp.float32),
+    (1, 256, 8, 64, 128, 64, jnp.float32),
+    (2, 64, 24, 64, 128, 64, jnp.float32),
+    (1, 128, 4, 32, 64, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,S,nh,hd,ds,chunk,dtype", SSD_CASES)
+def test_ssd_vs_recurrence(B, S, nh, hd, ds, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    xw = (jax.random.normal(ks[0], (B, S, nh, hd)) * 0.5).astype(dtype)
+    da = -jnp.abs(jax.random.normal(ks[1], (B, S, nh))) * 0.3
+    Bm = jax.random.normal(ks[2], (B, S, ds)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, ds)) * 0.5
+    s0 = jax.random.normal(ks[4], (B, nh, hd, ds)) * 0.1
+    y1, f1 = ssd_ops.ssd(xw, da, Bm, Cm, chunk=chunk, init_state=s0)
+    y2, f2 = ssd_ref.ssd(xw.astype(jnp.float32), da, Bm, Cm, init_state=s0)
+    tol = 1e-3 if dtype == jnp.float32 else 3e-2
+    assert float(jnp.abs(y1.astype(jnp.float32) - y2.astype(jnp.float32)).max()) < tol
+    assert float(jnp.abs(f1 - f2).max()) < tol
+
+
+def test_ssd_chunk_invariance():
+    ks = jax.random.split(KEY, 4)
+    B, S, nh, hd, ds = 1, 128, 2, 16, 16
+    xw = jax.random.normal(ks[0], (B, S, nh, hd)) * 0.5
+    da = -jnp.abs(jax.random.normal(ks[1], (B, S, nh))) * 0.3
+    Bm = jax.random.normal(ks[2], (B, S, ds)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, S, ds)) * 0.5
+    outs = [ssd_ops.ssd(xw, da, Bm, Cm, chunk=c)[0] for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        assert float(jnp.abs(o - outs[0]).max()) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 64, 256), jnp.float32),
+    ((2, 100, 384), jnp.bfloat16),
+    ((8, 300), jnp.float32),
+    ((1, 7, 130), jnp.bfloat16),          # pad both rows and lanes
+])
+def test_rmsnorm_vs_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],))
+    out = rn_ops.rmsnorm(x, s)
+    exp = rn_ref.rmsnorm(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - exp.astype(jnp.float32)).max()) < tol
+
+
+# ---------------------------------------------------------------------------
+# kernels wired into the model paths
+# ---------------------------------------------------------------------------
+
+def test_ssd_kernel_inside_mamba_block():
+    from repro.configs import get_config, reduced_config
+    from repro.models.model import DecoderLM
+    cfg = reduced_config(get_config("mamba2_130m"))
+    toks = jax.random.randint(KEY, (1, 64), 0, cfg.vocab)
+    m_ref = DecoderLM(cfg, remat=False, use_ssd_kernel=False)
+    m_ker = DecoderLM(cfg, remat=False, use_ssd_kernel=True)
+    params, _ = m_ref.init(jax.random.PRNGKey(0))
+    l1 = m_ref.forward(params, {"tokens": toks}).astype(jnp.float32)
+    l2 = m_ker.forward(params, {"tokens": toks}).astype(jnp.float32)
+    assert float(jnp.abs(l1 - l2).max()) < 0.1

@@ -1,0 +1,67 @@
+"""TLC-lite model checking of the protocol (the paper's Appendix A, §4)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.model_check import explore
+from repro.core.quorum import QuorumSpec, ffp_card_ok
+
+
+def test_valid_n3_safe():
+    # q1=2, q2c=2, q2f=3: Eqs. 13/14 hold -> no reachable violation.
+    r = explore(QuorumSpec(3, 2, 2, 3), max_states=500_000)
+    assert r.ok and not r.truncated
+    assert r.states > 5_000          # non-trivial exploration
+
+
+def test_broken_eq14_violates_consistency():
+    # q1=2, q2f=2 on n=3 violates Eq.14 only (q1+2*q2f = 6, not > 6):
+    # the checker must find two values decided.
+    spec = QuorumSpec(3, 2, 2, 2)
+    assert not spec.is_valid()
+    r = explore(spec, max_states=500_000)
+    assert not r.ok
+    assert r.violation == "Consistency"
+    assert r.trace and r.trace[0] == "Init"
+
+
+def test_broken_eq13_violates_consistency():
+    # q1=1, q2c=2 on n=3 violates Eq.13 (1+2 = 3, not > 3): a classic round
+    # can decide without intersecting the next phase-1 quorum.
+    spec = QuorumSpec(3, 1, 2, 3)
+    assert not spec.is_valid()
+    r = explore(spec, fast_rounds="none", max_states=500_000)
+    assert not r.ok
+    assert r.violation == "Consistency"
+
+
+def test_valid_asymmetric_n4():
+    # n=4: q1=4, q2c=1, q2f=3 (4+1>4; 4+6>8) — extreme §5-style tradeoff.
+    spec = QuorumSpec(4, 4, 1, 3)
+    assert spec.is_valid()
+    r = explore(spec, max_states=400_000)
+    assert r.ok
+
+
+def test_uncoordinated_recovery_safe():
+    spec = QuorumSpec(3, 2, 2, 3)
+    r = explore(spec, max_round=3, fast_rounds="odd",
+                uncoordinated=True, max_states=250_000)
+    assert r.ok     # truncation acceptable; no violation within the cap
+
+
+def test_nontriviality_always_holds_in_valid_configs():
+    r = explore(QuorumSpec(3, 3, 1, 3), max_states=300_000)
+    assert r.ok and r.violation is None
+
+
+@settings(max_examples=8, deadline=None)
+@given(q1=st.integers(1, 4), q2c=st.integers(1, 4), q2f=st.integers(1, 4))
+def test_valid_specs_never_violate(q1, q2c, q2f):
+    """Property (paper Property 1-3): any spec satisfying Eqs.13/14 is safe
+    under bounded exploration."""
+    n = 4
+    spec = QuorumSpec(n, min(q1 + 1, n), q2c, q2f)
+    if not spec.is_valid():
+        return
+    r = explore(spec, max_states=120_000)
+    assert r.ok, (spec, r.violation, r.trace)

@@ -1,0 +1,65 @@
+"""Property-based system invariants (hypothesis)."""
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import ConsensusLog
+from repro.core.quorum import QuorumSpec, all_valid_specs
+
+
+@st.composite
+def valid_spec(draw):
+    n = draw(st.integers(3, 11))
+    specs = list(itertools.islice(all_valid_specs(n), 200))
+    return specs[draw(st.integers(0, len(specs) - 1))]
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=valid_spec(),
+       orders_seed=st.integers(0, 10_000),
+       n_values=st.integers(1, 3))
+def test_consensus_log_single_value_per_slot(spec, orders_seed, n_values):
+    """For ANY valid quorum spec and ANY racing delivery order, a slot
+    decides at most one value, and that value was proposed."""
+    import random
+    rng = random.Random(orders_seed)
+    log = ConsensusLog(spec, seed=orders_seed)
+    values = [f"v{i}" for i in range(n_values)]
+    orders = [rng.sample(range(spec.n), spec.n) for _ in values]
+    out = log.propose_racing(values, arrival_orders=orders)
+    assert out.value in values
+    # re-proposing the slot cannot change the decision
+    out2 = log.propose_racing(list(reversed(values)), slot=out.slot)
+    assert out2.value == out.value
+
+
+@settings(max_examples=30, deadline=None)
+@given(spec=valid_spec(), crash_seed=st.integers(0, 1000))
+def test_consensus_log_safe_under_crashes(spec, crash_seed):
+    """Crashing up to n - max(q1, q2f) acceptors never loses a decided
+    value; decisions made before the crash remain visible."""
+    import random
+    rng = random.Random(crash_seed)
+    log = ConsensusLog(spec, seed=crash_seed)
+    out = log.propose("before")
+    assert out.value == "before"
+    budget = spec.n - max(spec.q1, spec.q2f)
+    for a in rng.sample(range(spec.n), budget):
+        log.crash(a)
+    # decided slot still reads back
+    assert log.decided[out.slot].value == "before"
+    # and the cluster is still live
+    out2 = log.propose("after")
+    assert out2.value == "after"
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(3, 30))
+def test_paper_policy_spec_always_valid(n):
+    from repro.cluster.membership import quorum_policy
+    spec = quorum_policy(n)
+    assert spec.is_valid()
+    # phase-2 quorums are minimal given q1 (the §5 tradeoff)
+    from repro.core.quorum import ffp_min_q2c, ffp_min_q2f
+    assert spec.q2f == ffp_min_q2f(n, spec.q1)
+    assert spec.q2c == ffp_min_q2c(n, spec.q1)

@@ -1,0 +1,157 @@
+"""Unit tests of the protocol state machines and the IsPickableVal rule."""
+import pytest
+
+from repro.core.protocol import (ANY, NONE, Acceptor, Coordinator, Learner,
+                                 Phase1a, Phase1b, Phase2a, Phase2b,
+                                 RoundSystem, choose_value, p2b_to_p1b,
+                                 pick_values)
+from repro.core.quorum import QuorumSpec
+
+
+def rs11():
+    return RoundSystem(QuorumSpec.paper_headline(11), fast_rounds="odd")
+
+
+# ---------------------------------------------------------------------------
+# pick_values (TLA+ IsPickableVal).
+# ---------------------------------------------------------------------------
+
+def test_pick_k0_classic_round_offers_proposed():
+    rs = rs11()
+    msgs = [Phase1b(2, 0, ANY, a) for a in range(9)]
+    picks = pick_values(rs, 2, msgs, {"a", "b"})
+    assert picks == {"a", "b"}       # no ANY in classic rounds is enforced
+    assert ANY not in pick_values(rs, 2, msgs, {"a"})
+
+
+def test_pick_k0_fast_round_offers_any():
+    rs = rs11()
+    msgs = [Phase1b(3, 0, ANY, a) for a in range(9)]
+    picks = pick_values(rs, 3, msgs, {"a"})
+    assert ANY in picks and "a" in picks
+
+
+def test_pick_single_value_must_be_chosen():
+    rs = rs11()
+    msgs = [Phase1b(2, 1, "v", a) for a in range(3)] + \
+           [Phase1b(2, 0, ANY, a) for a in range(3, 9)]
+    assert pick_values(rs, 2, msgs, {"x"}) == {"v"}
+
+
+def test_pick_o4_elimination():
+    """Paper §4 Property 3: with q1=9, q2f=7 on n=11, a value voted by 5
+    in-quorum acceptors (5 + 2 outside = 7 >= q2f) passes O4; a value voted
+    by 2 (2 + 2 < 7) is eliminated."""
+    rs = rs11()
+    msgs = ([Phase1b(2, 1, "A", a) for a in range(5)]
+            + [Phase1b(2, 1, "B", a) for a in range(5, 7)]
+            + [Phase1b(2, 0, ANY, a) for a in range(7, 9)])
+    picks = pick_values(rs, 2, msgs, {"A", "B"})
+    assert picks == {"A"}
+
+
+def test_pick_no_o4_winner_falls_back_to_proposed():
+    rs = rs11()
+    # 3/3 split with 3 unheard: 3+2=5 < 7 for both -> neither decidable.
+    msgs = ([Phase1b(2, 1, "A", a) for a in range(3)]
+            + [Phase1b(2, 1, "B", a) for a in range(3, 6)]
+            + [Phase1b(2, 0, ANY, a) for a in range(6, 9)])
+    picks = pick_values(rs, 2, msgs, {"A", "B", "C"})
+    assert picks == {"A", "B", "C"}  # free choice — nothing was decided
+
+
+def test_choose_value_deterministic():
+    assert choose_value({"b", "a"}) == "a"
+    assert choose_value({ANY, "z"}) == "z"
+    assert choose_value({ANY}) == ANY
+
+
+# ---------------------------------------------------------------------------
+# Acceptor.
+# ---------------------------------------------------------------------------
+
+def test_acceptor_promise_monotone():
+    a = Acceptor(0, rs11())
+    assert a.on_phase1a(Phase1a(3)) == Phase1b(3, 0, ANY, 0)
+    assert a.on_phase1a(Phase1a(2)) is None      # smaller round refused
+    assert a.rnd == 3
+
+
+def test_acceptor_vote_and_refuse():
+    a = Acceptor(0, rs11())
+    out = a.on_phase2a(Phase2a(1, "v"))
+    assert out == Phase2b(1, "v", 0)
+    assert (a.rnd, a.vrnd, a.vval) == (1, 1, "v")
+    assert a.on_phase2a(Phase2a(1, "w")) is None  # already voted this round
+
+
+def test_acceptor_any_vote_uses_client_value():
+    a = Acceptor(0, rs11())
+    assert a.on_phase2a(Phase2a(1, ANY), proposed_val="c") == Phase2b(1, "c", 0)
+    assert a.on_phase2a(Phase2a(1, ANY), proposed_val=None) is None
+
+
+def test_acceptor_last_msg():
+    a = Acceptor(0, rs11())
+    a.on_phase1a(Phase1a(2))
+    assert a.last_msg() == Phase1b(2, 0, ANY, 0)
+    a.on_phase2a(Phase2a(3, "v"))
+    assert a.last_msg() == Phase2b(3, "v", 0)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator + Learner end-to-end (in-memory happy paths).
+# ---------------------------------------------------------------------------
+
+def test_classic_round_end_to_end():
+    rs = RoundSystem(QuorumSpec.paper_headline(11), fast_rounds="none")
+    acceptors = [Acceptor(i, rs) for i in range(11)]
+    c = Coordinator(0, rs)
+    learner = Learner(rs)
+
+    m1a = c.start_round(2)
+    assert m1a == Phase1a(2)
+    for a in acceptors:
+        m = a.on_phase1a(m1a)
+        if m:
+            c.on_phase1b(m)
+    m2a = c.try_phase2a({"v"})
+    assert m2a is not None and m2a.val == "v"
+    decided = None
+    for a in acceptors:
+        m = a.on_phase2a(m2a)
+        if m:
+            decided = learner.on_phase2b(m) or decided
+    assert decided == "v"
+
+
+def test_fast_round_collision_and_coordinated_recovery():
+    rs = rs11()
+    acceptors = [Acceptor(i, rs) for i in range(11)]
+    c = Coordinator(0, rs)
+    c.crnd, c.cval = 1, ANY          # steady state: ANY already sent
+    learner = Learner(rs)
+    # split vote 5/6 — 6 < q2f=7: no fast decision
+    for i, a in enumerate(acceptors):
+        v = "A" if i < 5 else "B"
+        m = a.on_phase2a(Phase2a(1, ANY), proposed_val=v)
+        learner.on_phase2b(m)
+        c.on_phase2b(m)
+    assert not learner.learned
+    assert learner.collision_suspected(1)
+    m2a = c.coordinated_recovery({"A", "B"})
+    assert m2a is not None and m2a.rnd == 2
+    # B had 6 votes: 6 + 2 outside any 9-quorum >= 7 -> B passes O4.
+    assert m2a.val == "B"
+    decided = None
+    for a in acceptors:
+        m = a.on_phase2a(m2a)
+        if m:
+            decided = learner.on_phase2b(m) or decided
+    assert decided == "B"
+
+
+def test_p2b_to_p1b():
+    msgs = [Phase2b(1, "v", 3), Phase2b(2, "w", 4)]
+    out = p2b_to_p1b(msgs, 1)
+    assert out == [Phase1b(2, 1, "v", 3)]

@@ -1,0 +1,117 @@
+"""Deeper protocol coverage: uncoordinated recovery, plurality preference,
+retransmission semantics, and liveness edge conditions around the quorum
+thresholds (§5 of the paper: liveness depends on BOTH phase quorums)."""
+import pytest
+
+from repro.core.protocol import (ANY, Acceptor, Coordinator, Learner,
+                                 Phase1a, Phase1b, Phase2a, Phase2b,
+                                 RoundSystem, choose_value, p2b_to_p1b,
+                                 pick_values)
+from repro.core.quorum import QuorumSpec
+
+
+def rs11():
+    return RoundSystem(QuorumSpec.paper_headline(11), n_coordinators=1,
+                       fast_rounds="odd")
+
+
+def _split_vote(accs, split):
+    """Make acceptors vote in fast round 1 per `split` = {val: count}."""
+    msgs = []
+    i = 0
+    for val, cnt in split.items():
+        for _ in range(cnt):
+            m = accs[i].on_phase2a(Phase2a(1, ANY), proposed_val=val)
+            msgs.append(m)
+            i += 1
+    return msgs
+
+
+def test_uncoordinated_recovery_round2_must_be_fast():
+    """Uncoordinated recovery jumps to round i+1 only if it is fast; with
+    fast_rounds='odd', round 2 is classic, so acceptors refuse."""
+    rs = rs11()
+    accs = [Acceptor(i, rs) for i in range(11)]
+    votes = _split_vote(accs, {"A": 6, "B": 5})
+    p1b = p2b_to_p1b(votes, 1)
+    out = accs[0].uncoordinated_recovery(1, p1b, {"A", "B"})
+    assert out is None                      # round 2 is classic here
+
+
+def test_uncoordinated_recovery_in_fast_round():
+    rs = RoundSystem(QuorumSpec.paper_headline(11), n_coordinators=1,
+                     fast_rounds="all")
+    accs = [Acceptor(i, rs) for i in range(11)]
+    votes = _split_vote(accs, {"A": 6, "B": 5})
+    p1b = p2b_to_p1b(votes, 1)
+    out = accs[0].uncoordinated_recovery(1, p1b, {"A", "B"})
+    assert out is not None and out.rnd == 2
+    # plurality preference: A had 6 of 11 votes
+    assert out.val == "A"
+
+
+def test_plurality_preference_only_in_free_choice():
+    """When one value passes O4 it MUST be picked even against plurality."""
+    rs = rs11()
+    # 9-message phase-1 quorum: 7 voted A (>= q2f among Q + outside), 2 B
+    msgs = [Phase1b(2, 1, "A", a) for a in range(7)]
+    msgs += [Phase1b(2, 1, "B", a) for a in range(7, 9)]
+    picks = pick_values(rs, 2, msgs, {"A", "B"})
+    # outside = 2, votes_A = 7 -> 9 >= q2f=7 passes; votes_B = 2+2=4 < 7
+    assert picks == {"A"}
+    # counts can't override an O4 winner (singleton set)
+    assert choose_value(picks, {"B": 100}) == "A"
+
+
+def test_coordinated_recovery_waits_for_phase1_quorum():
+    rs = rs11()
+    accs = [Acceptor(i, rs) for i in range(11)]
+    c = Coordinator(0, rs)
+    c.crnd, c.cval = 1, ANY
+    votes = _split_vote(accs, {"A": 5, "B": 3})      # only 8 < q1=9 votes
+    for m in votes:
+        c.on_phase2b(m)
+    assert c.coordinated_recovery({"A", "B"}) is None
+
+
+def test_retransmission_is_idempotent():
+    rs = rs11()
+    a = Acceptor(3, rs)
+    a.on_phase1a(Phase1a(2))
+    m1 = a.last_msg()
+    m2 = a.last_msg()
+    assert m1 == m2
+    assert isinstance(m1, Phase1b) and m1.rnd == 2
+
+
+def test_learner_needs_exact_q2():
+    rs = rs11()
+    learner = Learner(rs)
+    # classic round 2: q2c = 3
+    assert learner.on_phase2b(Phase2b(2, "v", 0)) is None
+    assert learner.on_phase2b(Phase2b(2, "v", 1)) is None
+    assert learner.on_phase2b(Phase2b(2, "v", 2)) == "v"
+
+
+def test_learner_fast_round_needs_q2f():
+    rs = rs11()
+    learner = Learner(rs)
+    for a in range(6):
+        assert learner.on_phase2b(Phase2b(1, "v", a)) is None
+    assert learner.on_phase2b(Phase2b(1, "v", 6)) == "v"   # 7th = q2f
+
+
+def test_duplicate_votes_not_double_counted():
+    rs = rs11()
+    learner = Learner(rs)
+    for _ in range(10):
+        assert learner.on_phase2b(Phase2b(1, "v", 0)) is None
+    assert not learner.learned
+
+
+@pytest.mark.parametrize("n", [4, 5, 7, 11, 16])
+def test_generalized_headline_valid(n):
+    spec = QuorumSpec.paper_headline(n)
+    assert spec.is_valid()
+    # §5: fast quorums at least as large as classic phase-2 quorums
+    assert spec.q2f >= spec.q2c or spec.q1 == n

@@ -1,0 +1,152 @@
+"""Quorum-system tests: the paper's Eqs. 1-14, set-level vs cardinality
+equivalence, and the strict-relaxation claims of §3/§5."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quorum import (ExplicitQuorumSystem, QuorumSpec,
+                               WeightedQuorumSystem, all_valid_specs,
+                               fast_paxos_card_ok, fast_paxos_suggested,
+                               ffp_card_ok, ffp_min_q2c, ffp_min_q2f,
+                               flexible_card_ok, pairwise_intersect,
+                               paxos_card_ok, triple_intersect)
+
+
+# ---------------------------------------------------------------------------
+# Cardinality <-> set-level equivalence (small n, exhaustive).
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(3, 7), q1=st.integers(1, 7), q2c=st.integers(1, 7),
+       q2f=st.integers(1, 7))
+def test_ffp_cardinality_matches_set_semantics(n, q1, q2c, q2f):
+    q1, q2c, q2f = min(q1, n), min(q2c, n), min(q2f, n)
+    spec = QuorumSpec(n, q1, q2c, q2f)
+    assert spec.is_valid() == spec.check_sets()
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(3, 7), q=st.integers(1, 7))
+def test_paxos_cardinality_matches_sets(n, q):
+    q = min(q, n)
+    quorums = [frozenset(c) for c in itertools.combinations(range(n), q)]
+    assert paxos_card_ok(n, q) == pairwise_intersect(quorums)
+
+
+# ---------------------------------------------------------------------------
+# The paper's headline configs (§5/§6).
+# ---------------------------------------------------------------------------
+
+def test_paper_headline_n11():
+    spec = QuorumSpec.paper_headline(11)
+    assert (spec.q1, spec.q2c, spec.q2f) == (9, 3, 7)
+    assert spec.is_valid()
+    # ... but this config violates Fast Paxos' own requirements (Eq. 9/10):
+    assert not fast_paxos_card_ok(11, qc=spec.q2c, qf=spec.q2f)
+
+
+def test_fast_paxos_suggested_configs_are_ffp_valid():
+    # §5: Fast Paxos' suggestions are conservative — both satisfy FFP.
+    for n in range(3, 30):
+        for variant in ("three_quarters", "two_thirds"):
+            qc, qf = fast_paxos_suggested(n, variant)
+            assert fast_paxos_card_ok(n, qc, qf), (n, variant)
+            assert ffp_card_ok(n, q1=qc, q2c=qc, q2f=qf), (n, variant)
+
+
+def test_ffp_strictly_weaker_than_fast_paxos():
+    # every FP-valid (qc, qf) is FFP-valid with q1=qc; and there exist
+    # FFP-valid configs that are not FP-valid (the relaxation is strict).
+    strictly_weaker = False
+    for n in range(3, 12):
+        for qc in range(1, n + 1):
+            for qf in range(1, n + 1):
+                if fast_paxos_card_ok(n, qc, qf):
+                    assert ffp_card_ok(n, qc, qc, qf)
+        for spec in all_valid_specs(n):
+            if not fast_paxos_card_ok(n, spec.q2c, spec.q2f):
+                strictly_weaker = True
+    assert strictly_weaker
+
+
+def test_section5_implications():
+    # "a simple majority of acceptors is sufficient for phase-1 of fast
+    #  rounds" given q_f = ceil(3n/4):
+    for n in range(3, 30):
+        import math
+        qf = math.ceil(3 * n / 4)
+        q1_majority = n // 2 + 1
+        assert ffp_card_ok(n, q1_majority, q2c=n - q1_majority + 1, q2f=qf)
+    # "only one third of acceptors are needed for phase-2 of classic rounds"
+    # given q1 = qf = floor(2n/3)+1:
+    for n in range(3, 30):
+        import math
+        q = (2 * n) // 3 + 1
+        q2c = math.ceil(n / 3)
+        assert ffp_card_ok(n, q1=q, q2c=q2c, q2f=q)
+
+
+def test_minimal_phase2_quorums():
+    for n in range(3, 20):
+        for q1 in range(n // 2 + 1, n + 1):
+            q2f = ffp_min_q2f(n, q1)
+            q2c = ffp_min_q2c(n, q1)
+            assert ffp_card_ok(n, q1, q2c, q2f)
+            # minimality: one less breaks the requirement
+            if q2f > 1:
+                assert not ffp_card_ok(n, q1, q2c, q2f - 1)
+            if q2c > 1:
+                assert not ffp_card_ok(n, q1, q2c - 1, q2f)
+
+
+def test_fault_tolerance_accounting():
+    spec = QuorumSpec.paper_headline(11)
+    ft = spec.fault_tolerance()
+    assert ft["phase1"] == 2          # 11 - 9
+    assert ft["steady_state_fast"] == 4   # 11 - 7
+    assert ft["steady_state_classic"] == 8  # 11 - 3
+
+
+# ---------------------------------------------------------------------------
+# Non-cardinality systems (§6 closing remark).
+# ---------------------------------------------------------------------------
+
+def test_grid_system_valid_for_three_rows():
+    for cols in (2, 3, 4):
+        g = ExplicitQuorumSystem.grid(cols)
+        assert g.is_valid()
+
+
+def test_grid_requires_three_rows():
+    with pytest.raises(ValueError):
+        ExplicitQuorumSystem.grid(3, rows=4)
+
+
+def test_weighted_system():
+    w = WeightedQuorumSystem(weights=(2, 2, 1, 1, 1), t1=6, t2c=2, t2f=5)
+    assert w.is_valid()
+    # its minimal fast quorums are genuinely non-uniform in cardinality:
+    sizes = {len(q) for q in w.enumerate("p2f")}
+    assert len(sizes) > 1
+    # set-level check of Eq.11/12 on the enumerated quorums:
+    p1 = list(w.enumerate("p1"))
+    p2c = list(w.enumerate("p2c"))
+    p2f = list(w.enumerate("p2f"))
+    assert pairwise_intersect(p1, p2c)
+    assert triple_intersect(p1, p2f, p2f)
+
+
+def test_invalid_weighted_rejected():
+    with pytest.raises(ValueError):
+        WeightedQuorumSystem(weights=(1, 1, 1), t1=1, t2c=1, t2f=1).validate()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(3, 25))
+def test_all_valid_specs_really_valid(n):
+    count = 0
+    for spec in itertools.islice(all_valid_specs(n), 50):
+        assert spec.is_valid()
+        count += 1
+    assert count > 0

@@ -1,0 +1,69 @@
+"""Unit tests for the roofline HLO parsers — the measurement instrument
+behind §Roofline/§Perf (EXPERIMENTS.md §Method)."""
+import benchmarks.roofline as rl
+
+
+def test_shape_bytes():
+    assert rl._shape_bytes("f32[8,4096,4096]") == 8 * 4096 * 4096 * 4
+    assert rl._shape_bytes("bf16[16,24]") == 16 * 24 * 2
+    assert rl._shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert rl._shape_bytes("pred[7]") == 7
+
+
+def test_group_info_iota_within_pod():
+    g, c = rl._group_info("replica_groups=[32,16]<=[512]")
+    assert (g, c) == (16, 0)
+    g, c = rl._group_info("replica_groups=[32,16]<=[32,16]T(1,0)")
+    assert (g, c) == (16, 0)
+
+
+def test_group_info_iota_cross_pod():
+    g, c = rl._group_info("replica_groups=[16,32]<=[32,16]T(1,0)")
+    assert (g, c) == (32, 1)
+    g, c = rl._group_info("replica_groups=[1,512]<=[512]")
+    assert (g, c) == (512, 1)
+
+
+def test_group_info_brace():
+    assert rl._group_info("replica_groups={{0,1,2,3}}") == (4, 0)
+    assert rl._group_info("replica_groups={{0,256},{1,257}}") == (2, 1)
+
+
+def test_link_bytes_ring_conversions():
+    ag = rl.CollectiveOp("all-gather", 1600, 16, 0)
+    assert ag.link_bytes == 1600 * 15 / 16
+    ar = rl.CollectiveOp("all-reduce", 1600, 16, 0)
+    assert ar.link_bytes == 2 * 1600 * 15 / 16
+    rs = rl.CollectiveOp("reduce-scatter", 100, 16, 0)
+    assert rs.link_bytes == 100 * 15
+
+
+def test_promoted_reduction_counted_at_bf16():
+    hlo = """
+  %convert_fusion.1 = f32[8,4096]{1,0} fusion(%dot.3)
+  %ar = f32[8,4096]{1,0} all-reduce(%convert_fusion.1), replica_groups=[32,16]<=[512], to_apply=%add_promoted
+  %ar2 = f32[8,4096]{1,0} all-reduce(%plain.2), replica_groups=[32,16]<=[512], to_apply=%add
+"""
+    ops = rl.parse_collectives(hlo)
+    assert len(ops) == 2
+    promoted = [o for o in ops if o.promoted]
+    plain = [o for o in ops if not o.promoted]
+    assert len(promoted) == 1 and len(plain) == 1
+    assert promoted[0].out_bytes * 2 == plain[0].out_bytes
+
+
+def test_collective_summary_buckets_dcn():
+    ops = [rl.CollectiveOp("all-reduce", 100, 16, 0),
+           rl.CollectiveOp("all-reduce", 100, 32, 1)]
+    s = rl.collective_summary(ops)
+    assert s["link_bytes"] > 0 and s["dcn_bytes"] > 0
+    assert s["count"] == 2
+
+
+def test_roofline_terms_dominant():
+    t = rl.roofline_terms({"flops": 197e12, "bytes accessed": 819e9 * 10},
+                          {"link_bytes": 50e9, "dcn_bytes": 0.0})
+    assert t["dominant"] == "memory_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 10.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9

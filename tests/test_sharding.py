@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules: divisibility fallbacks, mesh-awareness,
+no-mesh no-ops, and the dry-run's abstract-state machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, reduced_config
+from repro.launch.abstract import abstract_params, eval_shape_with_axes
+from repro.models.model import DecoderLM
+from repro.parallel.sharding import (constrain, default_rules, named_sharding,
+                                     sharding_ctx, spec_for, tree_shardings)
+
+
+def tiny_mesh():
+    # single device, two named axes — rule resolution works identically
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_spec_divisible_dims_shard():
+    mesh = tiny_mesh()
+    rules = default_rules()
+    spec = spec_for((256, 4096), ("batch", None), mesh, rules)
+    assert spec == P(("data",), None)
+    spec = spec_for((4096, 16384), ("embed", "mlp"), mesh, rules)
+    assert spec == P(("data",), ("model",))
+
+
+def test_spec_fallback_on_indivisible():
+    """With a conceptual 16-way model axis, 56 heads can't shard; with the
+    1x1 test mesh everything divides — emulate by checking the rule engine
+    skips candidates whose axis size doesn't divide."""
+    import numpy as np
+    from repro.parallel import sharding as sh
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = default_rules()
+    spec = sh.spec_for((56,), ("heads",), FakeMesh(), rules)
+    assert spec == P(None)                       # 56 % 16 != 0 -> replicated
+    spec = sh.spec_for((48,), ("heads",), FakeMesh(), rules)
+    assert spec == P(("model",))
+    # batch picks ('pod','data') only when 'pod' exists:
+    spec = sh.spec_for((256,), ("batch",), FakeMesh(), rules)
+    assert spec == P(("data",))
+
+    class PodMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    spec = sh.spec_for((256,), ("batch",), PodMesh(), rules)
+    assert spec == P(("pod", "data"))
+
+
+def test_no_double_use_of_mesh_axis():
+    from repro.parallel import sharding as sh
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    # experts take 'model'; the expert-mlp dim must then fall back.
+    spec = sh.spec_for((64, 2048, 1408), ("experts", "embed", "mlp"),
+                       FakeMesh(), default_rules())
+    assert spec == P(("model",), ("data",), None)
+
+
+def test_cache_seq_prefers_widest_free():
+    from repro.parallel import sharding as sh
+
+    class PodlessMesh:
+        shape = {"data": 16, "model": 16}
+
+    # decode: batch on data -> cache_seq takes model
+    spec = sh.spec_for((8, 128, 32768, 8, 256),
+                       (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+                       PodlessMesh(), default_rules())
+    assert spec == P(None, ("data",), ("model",), None, None)
+    # long-context: batch=1 replicated -> cache spreads over data x model
+    spec = sh.spec_for((8, 1, 524288, 8, 256),
+                       (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+                       PodlessMesh(), default_rules())
+    assert spec == P(None, None, ("data", "model"), None, None)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    y = constrain(x, ("batch", None))
+    assert y is x
+
+
+def test_constrain_applies_in_ctx():
+    mesh = tiny_mesh()
+    with sharding_ctx(mesh):
+        y = jax.jit(lambda x: constrain(x, ("batch", None)))(jnp.ones((4, 8)))
+    assert y.shape == (4, 8)
+
+
+def test_abstract_params_no_allocation():
+    """480B-parameter arctic 'initializes' abstractly in well under a
+    second and reports full shapes."""
+    import time
+    model = DecoderLM(get_config("arctic_480b"))
+    t0 = time.time()
+    shapes, axes = abstract_params(model)
+    assert time.time() - t0 < 30.0
+    total = sum(np.prod(s.shape) for s in jax.tree.leaves(shapes))
+    assert total > 4e11                     # ~480B params present as specs
+    leaves_ax = jax.tree.leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    assert all(isinstance(a, tuple) for a in leaves_ax)
+
+
+def test_tree_shardings_structure_matches():
+    mesh = tiny_mesh()
+    model = DecoderLM(reduced_config(get_config("olmo_1b")))
+    shapes, axes = abstract_params(model)
+    sh = tree_shardings(shapes, axes, mesh)
+    assert jax.tree.structure(sh) == jax.tree.structure(shapes)
+
+
+def test_eval_shape_with_axes_captures():
+    def fn(key):
+        return {"w": jax.random.normal(key, (4, 4))}, {"w": ("embed", None)}
+
+    shapes, axes = eval_shape_with_axes(fn, jax.random.PRNGKey(0))
+    assert shapes["w"].shape == (4, 4)
+    assert axes == {"w": ("embed", None)}

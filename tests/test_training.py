@@ -1,0 +1,260 @@
+"""Training substrate: optimizers, data determinism, checkpoint/restore,
+gradient compression, end-to-end convergence."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import ControlPlane
+from repro.configs import get_config, reduced_config
+from repro.core.quorum import QuorumSpec
+from repro.models.model import DecoderLM
+from repro.training import checkpoint as ckpt
+from repro.training import compress
+from repro.training.data import DataConfig, SyntheticPipeline
+from repro.training.optimizer import (adafactor, adamw, apply_updates,
+                                      clip_by_global_norm, cosine_schedule,
+                                      global_norm)
+from repro.training.trainer import Trainer, TrainerConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Optimizers.
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference_math():
+    params = {"w": jnp.array([1.0, -2.0])}
+    grads = {"w": jnp.array([0.1, 0.2])}
+    opt = adamw(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                max_grad_norm=None)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    # step 1: mhat = g, vhat = g^2  ->  update = -lr * g/(|g|+eps)
+    np.testing.assert_allclose(np.asarray(updates["w"]),
+                               -0.1 * np.sign([0.1, 0.2]), rtol=1e-4)
+
+
+def test_adamw_weight_decay():
+    params = {"w": jnp.array([1.0])}
+    grads = {"w": jnp.array([0.0])}
+    opt = adamw(lr=0.1, weight_decay=0.5, max_grad_norm=None)
+    state = opt.init(params)
+    updates, _ = opt.update(grads, state, params)
+    np.testing.assert_allclose(np.asarray(updates["w"]), [-0.05], rtol=1e-5)
+
+
+def test_adafactor_factored_state_shapes():
+    params = {"m": jnp.zeros((8, 16)), "v": jnp.zeros((5,))}
+    opt = adafactor()
+    state = opt.init(params)
+    assert state.vr["m"].shape == (8,)
+    assert state.vc["m"].shape == (16,)
+    assert state.vr["v"].shape == (5,)
+    grads = jax.tree.map(jnp.ones_like, params)
+    updates, state = opt.update(grads, state, params)
+    assert updates["m"].shape == (8, 16)
+    assert all(bool(jnp.isfinite(u).all()) for u in jax.tree.leaves(updates))
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule():
+    fn = cosine_schedule(warmup=10, total=100)
+    assert float(fn(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(fn(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(fn(jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline.
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_distinct():
+    pipe = SyntheticPipeline(DataConfig(vocab=128, seq_len=32, global_batch=8))
+    b1 = pipe.batch_at(5)
+    b2 = pipe.batch_at(5)
+    b3 = pipe.batch_at(6)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    # tokens/labels are each seq_len long (drawn from a seq_len+1 window),
+    # matching the train_step/input_specs contract: tokens (B, seq).
+    assert b1["tokens"].shape == (8, 32)
+    assert b1["labels"].shape == (8, 32)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+
+
+def test_data_host_sharding_partitions_global_batch():
+    pipe = SyntheticPipeline(DataConfig(vocab=128, seq_len=16, global_batch=8))
+    full = np.asarray(pipe.batch_at(3)["tokens"])
+    h0 = np.asarray(pipe.batch_at(3, host=0, n_hosts=2)["tokens"])
+    h1 = np.asarray(pipe.batch_at(3, host=1, n_hosts=2)["tokens"])
+    np.testing.assert_array_equal(np.concatenate([h0, h1])[np.argsort(
+        np.concatenate([np.arange(0, 8, 2), np.arange(1, 8, 2)]))], full)
+
+
+def test_frontend_batches():
+    pipe = SyntheticPipeline(DataConfig(vocab=128, seq_len=32, global_batch=4))
+    a = pipe.frontend_batch_at(0, d_model=64, frontend="audio_frames")
+    assert a["frame_emb"].shape == (4, 32, 64)
+    v = pipe.frontend_batch_at(0, d_model=64, frontend="vision_patches",
+                               vision_tokens=8)
+    assert v["patch_emb"].shape == (4, 8, 64)
+    assert v["tokens"].shape == (4, 24)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression.
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_bounded_error():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 256))}
+    r = compress.init_residual(g)
+    out, res = compress.int8_compress(g, r, jax.random.PRNGKey(1))
+    scale = float(jnp.abs(g["w"]).max()) / 127.0
+    assert float(jnp.abs(out["w"] - g["w"]).max()) <= scale * 1.01
+    # error feedback: residual holds exactly what was lost
+    np.testing.assert_allclose(np.asarray(res["w"]),
+                               np.asarray(g["w"] - out["w"]), atol=1e-6)
+
+
+def test_error_feedback_recovers_signal():
+    """A tiny constant gradient below one quantization step must eventually
+    pass through thanks to error feedback."""
+    g = {"w": jnp.full((64,), 1e-3)}
+    big = {"w": jnp.zeros((64,)).at[0].set(1.0)}   # sets the scale
+    grads = jax.tree.map(lambda a, b: a + b, g, big)
+    r = compress.init_residual(g)
+    total = jnp.zeros((64,))
+    key = jax.random.PRNGKey(0)
+    for i in range(50):
+        key, k = jax.random.split(key)
+        out, r = compress.int8_compress(grads, r, k)
+        total = total + out["w"]
+    mean_passed = float(total[1:].mean()) / 50
+    assert mean_passed == pytest.approx(1e-3, rel=0.2)
+
+
+def test_topk_keeps_largest():
+    g = {"w": jnp.arange(100.0)}
+    r = compress.init_residual(g)
+    out, res = compress.topk_compress(g, r, frac=0.1)
+    kept = np.asarray(out["w"])
+    assert (kept[-10:] > 0).all() and (kept[:-10] == 0).all()
+    np.testing.assert_allclose(np.asarray(res["w"])[:-10],
+                               np.arange(90.0), atol=1e-6)
+
+
+def test_compressed_bytes_accounting():
+    g = {"w": jnp.zeros((1000,))}
+    assert compress.compressed_bytes(g, None) == 4000
+    assert compress.compressed_bytes(g, "int8") == 1004
+    assert compress.compressed_bytes(g, "topk", 0.05) == 400
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint + restore through the consensus control plane.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_with_consensus_manifest(tmp_path):
+    plane = ControlPlane(QuorumSpec.paper_headline(11))
+    state = {"params": {"w": jnp.arange(8.0)},
+             "opt": {"mu": jnp.zeros(8)}}
+    ckpt.save(str(tmp_path), 7, state, data_cursor=42, plane=plane)
+    manifest = ckpt.latest_manifest(str(tmp_path), plane)
+    assert manifest["step"] == 7
+    restored, step, cursor = ckpt.restore(state, manifest)
+    assert step == 7 and cursor == 42
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.arange(8.0))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    state = {"w": jnp.arange(16.0)}
+    d = ckpt.save(str(tmp_path), 1, state, data_cursor=0)
+    # corrupt the shard
+    np.save(os.path.join(d, "w.npy"), np.zeros(16))
+    manifest = ckpt.latest_manifest(str(tmp_path))
+    with pytest.raises(ValueError, match="digest"):
+        ckpt.restore(state, manifest)
+
+
+def test_torn_checkpoint_invisible_without_manifest(tmp_path):
+    # shards written but no manifest commit -> restore sees nothing
+    os.makedirs(tmp_path / "step-00000009")
+    np.save(tmp_path / "step-00000009" / "w.npy", np.zeros(4))
+    assert ckpt.latest_manifest(str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: convergence, resume, microbatching, compression.
+# ---------------------------------------------------------------------------
+
+def _mk_trainer(tmp, plane=None, **kw):
+    cfg = reduced_config(get_config("olmo_1b"))
+    model = DecoderLM(cfg, remat=True)
+    pipe = SyntheticPipeline(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                        global_batch=8))
+    t = Trainer(model, adamw(lr=3e-3), pipe,
+                TrainerConfig(ckpt_dir=str(tmp), **kw), plane=plane)
+    t.init(jax.random.PRNGKey(0))
+    return t
+
+
+def test_loss_decreases(tmp_path):
+    t = _mk_trainer(tmp_path, ckpt_every=0)
+    first = t.run(1)["loss"]
+    last = t.run(25)["loss"]
+    assert last < first - 0.5
+
+
+def test_preemption_resume_bit_exact(tmp_path):
+    plane = ControlPlane(QuorumSpec.paper_headline(11))
+    t1 = _mk_trainer(tmp_path, plane=plane, ckpt_every=5)
+    t1.run(10)
+    w10 = np.asarray(jax.tree.leaves(t1.params)[0])
+    t1.run(3)      # lost to preemption
+    t2 = _mk_trainer(tmp_path, plane=plane, ckpt_every=5)
+    assert t2.try_restore()
+    assert t2.step == 10 and t2.cursor == 10
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(t2.params)[0]),
+                                  w10)
+
+
+def test_microbatched_step_matches_full_batch(tmp_path):
+    cfg = reduced_config(get_config("olmo_1b"))
+    model = DecoderLM(cfg, remat=True)
+    pipe = SyntheticPipeline(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                        global_batch=8))
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = adamw(lr=1e-3)
+    batch = pipe.batch_at(0)
+
+    s1 = make_train_step(model, opt, n_microbatches=1)
+    p1, _, _, m1 = s1(params, opt.init(params), None, batch,
+                      jax.random.PRNGKey(0))
+    s2 = make_train_step(model, opt, n_microbatches=2)
+    mb = jax.tree.map(lambda x: x.reshape((2, 4) + x.shape[1:]), batch)
+    p2, _, _, m2 = s2(params, opt.init(params), None, mb,
+                      jax.random.PRNGKey(0))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-2)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 2e-2   # bf16 accumulation-order differences only
+
+
+def test_compressed_training_still_converges(tmp_path):
+    t = _mk_trainer(tmp_path, ckpt_every=0, compression="int8")
+    first = t.run(1)["loss"]
+    last = t.run(25)["loss"]
+    assert last < first - 0.4
