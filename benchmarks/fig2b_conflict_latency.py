@@ -5,16 +5,17 @@ enters coordinated recovery ~1/3 as often as Fast Paxos (q2f 7 vs 9 — fewer
 races leave *neither* value able to reach the smaller fast quorum).
 
 Reproduced with the discrete-event simulator (protocol state machines, racy
-submissions to shared instances) and the jax mixed-workload model.
+submissions to shared instances) and the batched mixed-workload scenario
+from ``repro.montecarlo`` (both specs scored in one engine call).
 """
 from __future__ import annotations
 
 import jax
 
-from repro.core.jax_sim import mixed_workload_latency
 from repro.core.quorum import QuorumSpec
 from repro.core.simulator import (FastPaxosSim, conflict_workload,
                                   latency_stats)
+from repro.montecarlo import build_spec_table, scenarios
 
 N_REQUESTS = 4000
 RATE = 2700.0
@@ -50,15 +51,15 @@ def run(quick: bool = False, seed: int = 0):
         rows.append(("fig2b.sim.recovery_ratio_fp_over_ffp",
                      de["fast_paxos"]["recoveries"] / de["ffp"]["recoveries"]))
 
-    # jax model at the observed effective conflict fraction
+    # batched MC model at the observed effective conflict fraction
+    table = build_spec_table(list(specs.values()))
+    scen = scenarios.mixed_workload(conflict_frac=0.01, delta_ms=0.2, n=11)
+    summ = scen.summary(jax.random.PRNGKey(seed), table, samples)
     mc = {}
-    for name, spec in specs.items():
-        out = mixed_workload_latency(jax.random.PRNGKey(seed), spec,
-                                     conflict_frac=0.01, delta_ms=0.2,
-                                     samples=samples)
-        mc[name] = out
+    for i, name in enumerate(specs):
+        mc[name] = {k: float(v[i]) for k, v in summ.items()}
         for k in ("mean_ms", "p50_ms", "p99_ms", "recovery_rate"):
-            rows.append((f"fig2b.mc.{name}.{k}", out[k]))
+            rows.append((f"fig2b.mc.{name}.{k}", mc[name][k]))
     rows.append(("fig2b.mc.ffp_mean_latency_gain",
                  1.0 - mc["ffp"]["mean_ms"] / mc["fast_paxos"]["mean_ms"]))
     return rows

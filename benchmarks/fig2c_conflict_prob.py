@@ -4,16 +4,19 @@ between two racing commands.
 A command pair races for one instance with inter-arrival Δ; recovery happens
 iff *neither* value reaches a fast phase-2 quorum.  Smaller q2f (FFP's 7 vs
 Fast Paxos' 9 on n=11) makes a split that blocks both values much rarer.
-Swept with the vmapped jax Monte-Carlo model; spot-checked against the
-discrete-event simulator.
+Swept with the batched Monte-Carlo engine: both specs live in one spec
+table and the inter-command interval is a *traced* proposer offset, so the
+whole two-curve sweep reuses a single compiled race program.  Spot-checked
+against the discrete-event simulator.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.jax_sim import conflict_probability
 from repro.core.quorum import QuorumSpec
 from repro.core.simulator import FastPaxosSim
+from repro.montecarlo import build_spec_table, engine
 
 DELTAS_MS = (0.0, 0.1, 0.2, 0.4, 0.8, 1.6, 3.2)
 SAMPLES = 100_000
@@ -39,15 +42,20 @@ def run(quick: bool = False, seed: int = 0):
         "ffp": QuorumSpec.paper_headline(11),
     }
     rows = []
-    curves = {}
-    for name, spec in specs.items():
-        curve = []
-        for d in DELTAS_MS:
-            p = conflict_probability(jax.random.PRNGKey(seed), spec, d,
-                                     samples)
-            curve.append(p)
+    table = build_spec_table(list(specs.values()))
+    t0 = engine.TRACE_COUNTS["race"]
+    curves = {name: [] for name in specs}
+    for d in DELTAS_MS:
+        out = engine.race(jax.random.PRNGKey(seed), table,
+                          jnp.array([0.0, d], jnp.float32),
+                          n=11, k_proposers=2, samples=samples)
+        p_rec = out["recovery"].mean(axis=-1)
+        for i, name in enumerate(specs):
+            curves[name].append(float(p_rec[i]))
+    assert engine.TRACE_COUNTS["race"] - t0 <= 1, "Δ sweep must not re-jit"
+    for name in specs:
+        for d, p in zip(DELTAS_MS, curves[name]):
             rows.append((f"fig2c.mc.{name}.p_recovery@{d}ms", p))
-        curves[name] = curve
     # spot-check two points against the event simulator
     for name, spec in specs.items():
         for d in (0.0, 0.4):

@@ -6,6 +6,8 @@ own microbenches and the roofline table summary.
 Sections:
   fig2a / fig2b / fig2c   paper §6 reproduction (FP vs FFP, n=11)
   sweep                   beyond-paper quorum-space sweep (§5)
+  mc.*                    montecarlo engine end-to-end: whole spec table per
+                          call, traced thresholds (DESIGN.md §2)
   kernel.*                per-kernel timing: jnp reference under jit (wall),
                           Pallas interpret-mode parity asserted in tests/
   roofline.*              aggregate of experiments/dryrun/*.json
@@ -26,9 +28,7 @@ import jax.numpy as jnp
 
 
 def _time_us(fn, *args, iters: int = 20) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
-    out = fn(*args)
-    jax.block_until_ready(out)
+    jax.block_until_ready(fn(*args))      # warm-up: compile once, any pytree
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -74,6 +74,37 @@ def kernel_benches(quick: bool):
     votes = jax.random.randint(key, (100_000, 11), 0, 2)
     fn = jax.jit(lambda v: qt_ref.tally_votes(v, 2))
     rows.append(("kernel.quorum_tally.ref_us[100000x11]", _time_us(fn, votes)))
+
+    q = jnp.int32(7)
+    fn = jax.jit(lambda v, q: qt_ref.tally_decide(v, 2, q))
+    rows.append(("kernel.quorum_tally.decide_ref_us[100000x11]",
+                 _time_us(fn, votes, q)))
+    return rows
+
+
+def montecarlo_benches(quick: bool):
+    """End-to-end engine wall time: the whole n=11 minimal frontier (one
+    spec table) per call — the number the traced-threshold batching is
+    meant to move."""
+    import jax.numpy as jnp
+
+    from benchmarks.quorum_sweep import enumerate_valid, minimal_frontier
+    from repro.montecarlo import build_spec_table, engine
+
+    frontier = minimal_frontier(enumerate_valid(11))
+    table = build_spec_table(frontier)
+    samples = 10_000 if quick else 100_000
+    key = jax.random.PRNGKey(0)
+    offs = jnp.array([0.0, 0.2], jnp.float32)
+    rows = []
+
+    fn = lambda k: engine.fast_path(k, table, n=11, samples=samples)
+    rows.append((f"mc.engine.fast_path_us[{len(frontier)}specs.{samples}]",
+                 _time_us(fn, key, iters=10)))
+    fn = lambda k: engine.race(k, table, offs, n=11, k_proposers=2,
+                               samples=samples)["latency_ms"]
+    rows.append((f"mc.engine.race_us[{len(frontier)}specs.{samples}]",
+                 _time_us(fn, key, iters=10)))
     return rows
 
 
@@ -106,7 +137,7 @@ def main() -> None:
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
-                         "kernels,roofline")
+                         "mc,kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -126,6 +157,9 @@ def main() -> None:
     if want("sweep"):
         from benchmarks import quorum_sweep
         quorum_sweep.main(quick=args.quick)
+    if want("mc"):
+        for name, val in montecarlo_benches(args.quick):
+            print(f"{name},{val:.6g}")
     if not args.skip_kernels and want("kernels"):
         for name, val in kernel_benches(args.quick):
             print(f"{name},{val:.6g}")

@@ -1,57 +1,43 @@
-"""Vectorized Monte-Carlo model of Fast (Flexible) Paxos commit latency.
+"""Compatibility shim over ``repro.montecarlo`` (the batched scenario engine).
 
-This is the JAX-native adaptation of the paper's evaluation (DESIGN.md §2):
-one fast-round instance is, analytically, an exercise in *order statistics*
-over per-message network delays plus a *vote tally* — both embarrassingly
-parallel across instances.  We vmap/jit over 10^5–10^6 instances so quorum-
-system sweeps (the paper's §5 tradeoff space) run in milliseconds, and we
-cross-validate the model against the discrete-event simulator
-(``tests/test_sim_cross_validation.py``).
+This module used to *be* the vectorized Monte-Carlo model of Fast (Flexible)
+Paxos commit latency; the implementation now lives in
+``repro.montecarlo.engine`` (DESIGN.md §2), which generalizes it to K
+proposers, pluggable delay models, and whole quorum-spec tables evaluated
+under one compile.  The public API here is preserved exactly — one spec at a
+time, the original signatures — so existing callers and the cross-validation
+suite (``tests/test_sim_cross_validation.py``) keep working:
 
-Latency model (mirrors ``simulator.LatencyModel``): one-way delay =
-``base + LogNormal(mu, sigma)`` ms, i.i.d. per message.
+  LatencyParams            shifted-lognormal delay parameters
+  kth_smallest             k-th order statistic helper
+  fast_path_latency        Fig. 2a conflict-free fast path
+  classic_path_latency     leader-relayed classic commit
+  conflict_race            two proposals race for one instance (Fig. 2b/2c)
+  conflict_probability     P(coordinated recovery) at a given Δ
+  mixed_workload_latency   Fig. 2b blend of clean and racing commands
+  latency_summary          quantile summary of a latency sample
 
-Fast path (no conflict):
-    client --> acceptor_a   (d1[a])
-    acceptor_a --> learner  (d2[a])
-    commit when q2f acceptor paths completed:
-        latency = kth_smallest_a(d1[a] + d2[a], k=q2f)
-
-Collision race (Fig. 2c): proposers A (t=0) and B (t=Δ) target one instance;
-acceptor a votes for whichever proposal arrives first.  If either value
-gathers q2f votes the other aborts; otherwise the coordinator enters
-*coordinated recovery* (observed ~3x less often under the paper's FFP
-config, since q2f drops from 9 to 7 on n=11).
-
-The vote tally across (instances x acceptors) is the compute hot-spot and is
-served by the ``kernels/quorum_tally`` Pallas kernel (with a pure-jnp oracle
-in ``kernels/quorum_tally/ref.py``); set ``use_kernel=False`` to force the
-reference path.
+New code should target ``repro.montecarlo`` directly: the shim pays one
+engine call per spec, while the engine scores an entire spec table in a
+single call.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.montecarlo import engine, scenarios
+from repro.montecarlo.latency import ShiftedLognormalDelay
+
 from .quorum import QuorumSpec
 
+# The old LatencyParams dataclass is the lognormal delay model: same fields
+# (base_ms, mu, sigma), same as_tuple(); now also a pytree the engine traces.
+LatencyParams = ShiftedLognormalDelay
 
-@dataclass(frozen=True)
-class LatencyParams:
-    base_ms: float = 0.25
-    mu: float = -1.20
-    sigma: float = 0.55
-
-    def as_tuple(self) -> Tuple[float, float, float]:
-        return (self.base_ms, self.mu, self.sigma)
-
-
-def _one_way(key: jax.Array, shape, p: LatencyParams) -> jax.Array:
-    return p.base_ms + jnp.exp(p.mu + p.sigma * jax.random.normal(key, shape))
+_DEFAULT = LatencyParams()
 
 
 def kth_smallest(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
@@ -59,49 +45,24 @@ def kth_smallest(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
     return jnp.sort(x, axis=axis).take(k - 1, axis=axis)
 
 
-# ---------------------------------------------------------------------------
-# Fast path latency (Fig. 2a model).
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def fast_path_latency(key: jax.Array, n: int, q2f: int, samples: int,
-                      lat: LatencyParams = LatencyParams()) -> jax.Array:
+                      lat: LatencyParams = _DEFAULT) -> jax.Array:
     """Commit latency of ``samples`` conflict-free fast-round instances."""
-    k1, k2 = jax.random.split(key)
-    d1 = _one_way(k1, (samples, n), lat)          # client -> acceptors
-    d2 = _one_way(k2, (samples, n), lat)          # acceptors -> learner
-    return kth_smallest(d1 + d2, q2f, axis=-1)
+    table = jnp.array([[n, n, q2f]], jnp.int32)
+    return engine.fast_path(key, table, lat, n=n, samples=samples)[0]
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def classic_path_latency(key: jax.Array, n: int, q2c: int, samples: int,
-                         lat: LatencyParams = LatencyParams()) -> jax.Array:
+                         lat: LatencyParams = _DEFAULT) -> jax.Array:
     """Leader-relayed classic commit (Multi-Paxos steady state): client ->
     leader -> acceptors -> leader."""
-    k0, k1, k2 = jax.random.split(key, 3)
-    d0 = _one_way(k0, (samples,), lat)            # client -> leader
-    d1 = _one_way(k1, (samples, n), lat)          # leader -> acceptors
-    d2 = _one_way(k2, (samples, n), lat)          # acceptors -> leader
-    return d0 + kth_smallest(d1 + d2, q2c, axis=-1)
+    table = jnp.array([[n, q2c, n]], jnp.int32)
+    return engine.classic_path(key, table, lat, n=n, samples=samples)[0]
 
 
-# ---------------------------------------------------------------------------
-# Collision race (Fig. 2b / 2c model).
-# ---------------------------------------------------------------------------
-
-def _tally(votes: jax.Array, n_values: int, use_kernel: bool) -> jax.Array:
-    """Count votes per value: (S, n) int32 -> (S, n_values) int32."""
-    if use_kernel:
-        from repro.kernels.quorum_tally import ops as qt_ops
-        return qt_ops.tally_votes(votes, n_values)
-    from repro.kernels.quorum_tally import ref as qt_ref
-    return qt_ref.tally_votes(votes, n_values)
-
-
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 7, 8))
 def conflict_race(key: jax.Array, n: int, q1: int, q2f: int, q2c: int,
                   samples: int, delta_ms: float | jax.Array = 0.5,
-                  lat: LatencyParams = LatencyParams(),
+                  lat: LatencyParams = _DEFAULT,
                   use_kernel: bool = False) -> Dict[str, jax.Array]:
     """Two proposals race for one instance; B starts ``delta_ms`` after A.
 
@@ -112,49 +73,22 @@ def conflict_race(key: jax.Array, n: int, q1: int, q2f: int, q2c: int,
       recovery                  : no value reached q2f -> coordinated recovery
       latency_ms                : commit time of the decided value
     """
-    kA, kB, kr1, kr2, kr3 = jax.random.split(key, 5)
-    dA = _one_way(kA, (samples, n), lat)              # A -> acceptors
-    dB = _one_way(kB, (samples, n), lat)              # B -> acceptors
-    tA = dA
-    tB = delta_ms + dB
-    votes = (tB < tA).astype(jnp.int32)               # 0: A, 1: B
-    counts = _tally(votes, 2, use_kernel)             # (S, 2)
-    a_cnt, b_cnt = counts[:, 0], counts[:, 1]
-    a_fast = a_cnt >= q2f
-    b_fast = b_cnt >= q2f
-    recovery = ~(a_fast | b_fast)
-
-    vote_time = jnp.where(votes == 0, tA, tB)         # when each acceptor voted
-    d_ret = _one_way(kr1, (samples, n), lat)          # acceptor -> learner
-    arrive = vote_time + d_ret                        # 2b arrival at learner
-
-    # Fast-path commit: q2f-th smallest 2b arrival among same-value voters.
-    big = jnp.float32(1e9)
-    a_arr = jnp.where(votes == 0, arrive, big)
-    b_arr = jnp.where(votes == 1, arrive, big)
-    t_a_fast = kth_smallest(a_arr, q2f, axis=-1)
-    t_b_fast = kth_smallest(b_arr, q2f, axis=-1)
-
-    # Recovery: coordinator needs a phase-1 quorum (q1) of round-1 votes to
-    # run IsPickableVal, then one classic round trip committing with q2c.
-    t_detect = kth_smallest(arrive, q1, axis=-1)
-    d_2a = _one_way(kr2, (samples, n), lat)
-    d_2b = _one_way(kr3, (samples, n), lat)
-    t_recover = t_detect + kth_smallest(d_2a + d_2b, q2c, axis=-1)
-
-    latency = jnp.where(a_fast, t_a_fast,
-               jnp.where(b_fast, t_b_fast, t_recover))
+    table = jnp.array([[q1, q2c, q2f]], jnp.int32)
+    offsets = jnp.stack([jnp.float32(0.0), jnp.asarray(delta_ms, jnp.float32)])
+    out = engine.race(key, table, offsets, lat, n=n, k_proposers=2,
+                      samples=samples, use_kernel=use_kernel)
+    winner, reached = out["fast_winner"][0], out["reached_fast"][0]
     return {
-        "a_wins_fast": a_fast,
-        "b_wins_fast": b_fast,
-        "recovery": recovery,
-        "latency_ms": latency,
+        "a_wins_fast": reached & (winner == 0),
+        "b_wins_fast": reached & (winner == 1),
+        "recovery": out["recovery"][0] | out["undecided"][0],
+        "latency_ms": out["latency_ms"][0],
     }
 
 
 def conflict_probability(key: jax.Array, spec: QuorumSpec, delta_ms: float,
                          samples: int = 100_000,
-                         lat: LatencyParams = LatencyParams(),
+                         lat: LatencyParams = _DEFAULT,
                          use_kernel: bool = False) -> float:
     """P(coordinated recovery) for a given inter-command interval (Fig. 2c)."""
     out = conflict_race(key, spec.n, spec.q1, spec.q2f, spec.q2c,
@@ -163,31 +97,18 @@ def conflict_probability(key: jax.Array, spec: QuorumSpec, delta_ms: float,
 
 
 def latency_summary(lat_ms: jax.Array) -> Dict[str, float]:
-    q = jnp.quantile(lat_ms, jnp.array([0.5, 0.95, 0.99]))
-    return {
-        "mean_ms": float(lat_ms.mean()),
-        "p50_ms": float(q[0]),
-        "p95_ms": float(q[1]),
-        "p99_ms": float(q[2]),
-    }
+    s = engine.summarize(lat_ms)
+    return {k: float(v) for k, v in s.items()}
 
-
-# ---------------------------------------------------------------------------
-# Mixed workload (Fig. 2b model): fraction p of commands race, rest are clean.
-# ---------------------------------------------------------------------------
 
 def mixed_workload_latency(key: jax.Array, spec: QuorumSpec,
                            conflict_frac: float, delta_ms: float,
                            samples: int = 100_000,
-                           lat: LatencyParams = LatencyParams(),
+                           lat: LatencyParams = _DEFAULT,
                            use_kernel: bool = False) -> Dict[str, float]:
-    k1, k2, k3 = jax.random.split(key, 3)
-    n_conf = max(1, int(samples * conflict_frac))
-    n_free = samples - n_conf
-    free = fast_path_latency(k1, spec.n, spec.q2f, n_free, lat)
-    race = conflict_race(k2, spec.n, spec.q1, spec.q2f, spec.q2c,
-                         n_conf, delta_ms, lat, use_kernel)
-    all_lat = jnp.concatenate([free, race["latency_ms"]])
-    out = latency_summary(all_lat)
-    out["recovery_rate"] = float(race["recovery"].mean()) * conflict_frac
+    scen = scenarios.mixed_workload(conflict_frac, delta_ms, k=2, n=spec.n,
+                                    delay=lat)
+    table = jnp.array([[spec.q1, spec.q2c, spec.q2f]], jnp.int32)
+    s = scen.summary(key, table, samples, use_kernel)
+    out = {k: float(v[0]) for k, v in s.items() if k != "undecided_rate"}
     return out

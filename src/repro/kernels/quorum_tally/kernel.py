@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched quorum vote tally.
+"""Pallas TPU kernels: batched quorum vote tally, and fused tally+decide.
 
 The Monte-Carlo simulator's hot loop counts, for every simulated consensus
 instance, how many acceptors voted for each candidate value — an
@@ -12,6 +12,14 @@ boundary; output block (BLOCK_S, n_values_pad).  For S = 10^6, n = 11,
 V = 2 the working set per block is BLOCK_S * 128 * 4 B = 512 KiB at
 BLOCK_S = 1024 — comfortably inside the ~16 MiB v5e VMEM alongside the
 output tile.
+
+``tally_decide`` extends the tally into the decision reduction the engine
+needs anyway: per-instance winning value (argmax count, first-max tie-break),
+its count, and a quorum-reached flag against a threshold ``q`` held in SMEM —
+one VMEM pass instead of tally + three follow-up reductions over HBM.  The
+decide columns come back packed in a single (BLOCK_S, LANE) int32 tile
+(lane 0 winner, lane 1 max count, lane 2 reached) so the output keeps the
+128-lane layout; the wrapper unpacks.  See DESIGN.md §3.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_S = 1024
 LANE = 128
@@ -59,3 +68,83 @@ def tally_votes(votes: jax.Array, n_values: int, interpret: bool = True) -> jax.
         interpret=interpret,
     )(votes_p)
     return out[:S, :n_values]
+
+
+# ---------------------------------------------------------------------------
+# Fused tally + decide.
+# ---------------------------------------------------------------------------
+
+def _tally_decide_kernel(votes_ref, q_ref, counts_ref, decide_ref,
+                         *, n: int, n_values: int):
+    votes = votes_ref[...]                                   # (BS, n_pad) int32
+    n_pad = votes.shape[-1]
+    acc_valid = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1) < n
+    vals_pad = counts_ref.shape[-1]
+    cols = []
+    for v in range(n_values):
+        hit = jnp.where(acc_valid, (votes == v).astype(jnp.int32), 0)
+        cols.append(hit.sum(axis=-1))                        # (BS,)
+    # running argmax over the (small, static) value axis; strict > keeps the
+    # first-max tie-break of jnp.argmax.
+    max_cnt = cols[0]
+    winner = jnp.zeros_like(cols[0])
+    for v in range(1, n_values):
+        better = cols[v] > max_cnt
+        winner = jnp.where(better, v, winner)
+        max_cnt = jnp.maximum(max_cnt, cols[v])
+    reached = (max_cnt >= q_ref[0, 0]).astype(jnp.int32)
+
+    for v in range(n_values, vals_pad):
+        cols.append(jnp.zeros_like(cols[0]))
+    counts_ref[...] = jnp.stack(cols, axis=-1)               # (BS, vals_pad)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, decide_ref.shape, 1)
+    decide_ref[...] = jnp.where(
+        lane == 0, winner[:, None],
+        jnp.where(lane == 1, max_cnt[:, None],
+                  jnp.where(lane == 2, reached[:, None], 0)))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3))
+def tally_decide(votes: jax.Array, n_values: int, q: jax.Array,
+                 interpret: bool = True):
+    """Fused histogram + decision: one VMEM pass over (S, n) votes.
+
+    votes: (S, n) int32 in [0, n_values); entries < 0 count as "no vote".
+    q:     scalar quorum threshold (traced — lives in SMEM, so sweeping it
+           never recompiles).
+
+    Returns ``(counts, winner, max_count, reached)``:
+      counts    (S, n_values) int32 per-value vote counts
+      winner    (S,) int32 argmax-count value id (first max on ties)
+      max_count (S,) int32 the winner's vote count
+      reached   (S,) bool  max count >= q
+    """
+    S, n = votes.shape
+    n_pad = max(LANE, ((n + LANE - 1) // LANE) * LANE)
+    vals_pad = max(LANE, ((n_values + LANE - 1) // LANE) * LANE)
+    s_pad = ((S + BLOCK_S - 1) // BLOCK_S) * BLOCK_S
+    votes_p = jnp.full((s_pad, n_pad), -1, jnp.int32).at[:S, :n].set(
+        votes.astype(jnp.int32))
+    q_arr = jnp.asarray(q, jnp.int32).reshape(1, 1)
+
+    counts, decide = pl.pallas_call(
+        functools.partial(_tally_decide_kernel, n=n, n_values=n_values),
+        grid=(s_pad // BLOCK_S,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_S, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_S, vals_pad), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_S, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, vals_pad), jnp.int32),
+            jax.ShapeDtypeStruct((s_pad, LANE), jnp.int32),
+        ],
+        interpret=interpret,
+    )(votes_p, q_arr)
+    return (counts[:S, :n_values], decide[:S, 0], decide[:S, 1],
+            decide[:S, 2].astype(jnp.bool_))

@@ -23,3 +23,9 @@ def tally_votes(votes: jax.Array, n_values: int) -> jax.Array:
 
 def quorum_reached(votes: jax.Array, n_values: int, q: int) -> jax.Array:
     return (tally_votes(votes, n_values) >= q).any(axis=-1)
+
+
+def tally_decide(votes: jax.Array, n_values: int, q) -> tuple:
+    """Fused (counts, winner, max_count, reached) in one kernel pass; ``q``
+    is traced (SMEM scalar), so threshold sweeps reuse one compile."""
+    return kernel.tally_decide(votes, n_values, q, interpret=not _on_tpu())

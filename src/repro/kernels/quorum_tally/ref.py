@@ -17,3 +17,15 @@ def tally_votes(votes: jnp.ndarray, n_values: int) -> jnp.ndarray:
 def quorum_reached(votes: jnp.ndarray, n_values: int, q: int) -> jnp.ndarray:
     """(S,) bool: some value gathered >= q votes."""
     return (tally_votes(votes, n_values) >= q).any(axis=-1)
+
+
+def tally_decide(votes: jnp.ndarray, n_values: int, q) -> tuple:
+    """Oracle for the fused tally+decide kernel.
+
+    Returns (counts (S, V) int32, winner (S,) int32 argmax count with
+    first-max tie-break, max_count (S,) int32, reached (S,) bool
+    max count >= q)."""
+    counts = tally_votes(votes, n_values)
+    winner = counts.argmax(axis=-1).astype(jnp.int32)
+    max_count = counts.max(axis=-1)
+    return counts, winner, max_count, max_count >= q

@@ -1,0 +1,27 @@
+"""Batched Monte-Carlo scenario engine for the Fast Flexible Paxos evaluation.
+
+Layout (DESIGN.md §2):
+
+  ``latency``    pluggable per-message delay models, registered as JAX pytrees
+                 so their parameters are *traced* (no recompile on change):
+                 shifted-lognormal (EC2 same-region fit), Pareto heavy tail,
+                 multi-region WAN delay matrix, and a loss wrapper.
+  ``engine``     the core K-proposer conflict race.  Quorum thresholds
+                 (q1, q2c, q2f) are traced arrays: a whole table of specs is
+                 evaluated under one ``vmap`` with a single XLA compile — the
+                 expensive sampling + sorting work is shared across specs and
+                 the per-spec decision logic reduces to gathers and compares.
+  ``scenarios``  named scenario builders (conflict-free, K-way race, mixed
+                 workload, WAN, lossy acceptors) bundling a delay model with
+                 race geometry.
+
+The old per-spec API lives on as a compatibility shim in
+``repro.core.jax_sim``.
+"""
+from . import engine, latency, scenarios  # noqa: F401
+from .engine import (build_spec_table, classic_path, fast_path,  # noqa: F401
+                     race, summarize)
+from .latency import (LossyDelay, ParetoDelay,  # noqa: F401
+                      ShiftedLognormalDelay, WanDelay)
+from .scenarios import (Scenario, conflict_free, k_way_race,  # noqa: F401
+                        lossy_acceptors, mixed_workload, wan)

@@ -1,0 +1,240 @@
+"""K-proposer conflict-race engine with traced quorum thresholds.
+
+The paper's §5 point is that Eqs. 13/14 admit a *space* of (q1, q2c, q2f)
+configurations; evaluating that space is this module's job.  The old
+``repro.core.jax_sim`` jitted each spec separately (quorum sizes were
+``static_argnums``), so a sweep over the n=11 frontier recompiled dozens of
+times.  Here the thresholds are **traced** int32 operands and a whole
+(M, 3) spec table is evaluated under one ``vmap`` with a single compile.
+
+The trick (DESIGN.md §2): a race's random structure — who arrives where,
+when, and therefore who votes for what — does not depend on the thresholds
+at all.  ``_sample_race`` draws and *pre-sorts* everything once:
+
+  sorted per-value 2b arrivals   (S, K, n)   fast-path order statistics
+  sorted all-votes 2b arrivals   (S, n)      recovery detection (q1)
+  sorted classic round trips     (S, n)      recovery commit (q2c)
+  per-value vote counts          (S, K)      via the quorum_tally kernel
+
+``_decide`` then reduces a spec to three gathers and a compare against the
+presorted arrays, which is what ``vmap`` maps over the spec table.  Work is
+O(sample + sort) once, plus O(M * S) gathers — instead of M full re-runs —
+and every spec sees identical sampled delays (common random numbers), so
+cross-spec comparisons are variance-free.
+
+All simulated clocks are milliseconds from proposer 0's submission (the
+paper's instance latency).  Messages with delay >= ``latency.LOST_MS`` never
+arrive: acceptors that see no proposal cast no vote, and instances that
+cannot gather q1 votes report ``undecided``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quorum import QuorumSpec
+
+from . import latency as lat_mod
+from .latency import LOST_MS, default_delay
+
+BIG = jnp.float32(LOST_MS)
+# latencies at or beyond this are "never happened" (lost-message sentinel
+# arithmetic); shared with scenarios.py so both layers classify identically
+UNDECIDED_MS = LOST_MS / 2
+
+# Incremented at trace time inside each jitted entry point; benchmarks assert
+# a full spec-table sweep costs exactly one trace (no per-spec re-jit).
+TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0}
+
+
+def build_spec_table(specs: Sequence[QuorumSpec]) -> jax.Array:
+    """(M, 3) int32 [q1, q2c, q2f] rows; all specs must share one n."""
+    ns = {s.n for s in specs}
+    if len(ns) != 1:
+        raise ValueError(f"spec table mixes cluster sizes {sorted(ns)}")
+    return jnp.array([[s.q1, s.q2c, s.q2f] for s in specs], jnp.int32)
+
+
+def _check_table(spec_table: jax.Array) -> None:
+    # out-of-bounds gathers clamp silently in XLA, so a malformed table
+    # would otherwise produce wrong numbers instead of an error
+    if spec_table.ndim != 2 or spec_table.shape[-1] != 3:
+        raise ValueError(
+            f"spec_table must be (M, 3) [q1, q2c, q2f] rows, "
+            f"got shape {spec_table.shape}")
+
+
+def _kth(sorted_x: jax.Array, k: jax.Array) -> jax.Array:
+    """k-th order statistic (1-indexed, traced k) from a presorted last axis."""
+    idx = jnp.clip(k - 1, 0, sorted_x.shape[-1] - 1).astype(jnp.int32)
+    idx = jnp.broadcast_to(idx, sorted_x.shape[:-1])[..., None]
+    return jnp.take_along_axis(sorted_x, idx, axis=-1)[..., 0]
+
+
+def _counts_winner(votes: jax.Array, k_proposers: int, use_kernel: bool):
+    """(S, n) votes -> ((S, K) counts, (S,) winner, (S,) max count).
+
+    The fused Pallas tally+decide kernel does the whole n-axis reduction in
+    one VMEM pass; the threshold it is handed here is a placeholder (0) since
+    per-spec thresholds are applied by ``_decide`` — only the spec-independent
+    outputs are consumed.
+    """
+    if use_kernel:
+        from repro.kernels.quorum_tally import ops as qt_ops
+        counts, winner, max_cnt, _ = qt_ops.tally_decide(votes, k_proposers,
+                                                         jnp.int32(0))
+    else:
+        from repro.kernels.quorum_tally import ref as qt_ref
+        counts, winner, max_cnt, _ = qt_ref.tally_decide(votes, k_proposers,
+                                                         jnp.int32(0))
+    return counts, winner, max_cnt
+
+
+def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
+                 k_proposers: int, samples: int, use_kernel: bool) -> Dict:
+    """Draw one race per sample and presort everything spec-independent."""
+    K = k_proposers
+    kp, kl, k2a, k2b = jax.random.split(key, 4)
+
+    d_prop = delay.sample_hops(kp, (samples, n, K), lat_mod.PROPOSAL)
+    arrival = jnp.broadcast_to(offsets, (K,)).astype(d_prop.dtype) + d_prop
+
+    # each acceptor votes for the first proposal to arrive; no arrival at all
+    # (all K lost) means no vote (-1, ignored by the tally).
+    votes = jnp.argmin(arrival, axis=-1).astype(jnp.int32)        # (S, n)
+    vote_time = jnp.min(arrival, axis=-1)                         # (S, n)
+    voted = vote_time < UNDECIDED_MS
+    votes = jnp.where(voted, votes, -1)
+
+    d_ret = delay.sample_hops(kl, (samples, n), lat_mod.TO_LEARNER)
+    arrive = jnp.where(voted, vote_time + d_ret, BIG)             # 2b @ learner
+    arrive = jnp.where(arrive < UNDECIDED_MS, arrive, BIG)
+
+    counts, winner, max_cnt = _counts_winner(votes, K, use_kernel)
+
+    # per-value 2b arrival times, non-voters masked out, presorted over n.
+    val_arr = jnp.where(votes[:, None, :] == jnp.arange(K)[None, :, None],
+                        arrive[:, None, :], BIG)                  # (S, K, n)
+
+    # coordinated recovery: one classic round trip after q1 votes are seen.
+    d_2a = delay.sample_hops(k2a, (samples, n), lat_mod.FROM_COORDINATOR)
+    d_2b = delay.sample_hops(k2b, (samples, n), lat_mod.TO_COORDINATOR)
+    classic = d_2a + d_2b
+    classic = jnp.where(classic < UNDECIDED_MS, classic, BIG)
+
+    return {
+        "counts": counts,                                # (S, K) int32
+        "winner": winner,                                # (S,) int32
+        "max_cnt": max_cnt,                              # (S,) int32
+        "sorted_val_arrive": jnp.sort(val_arr, axis=-1),  # (S, K, n)
+        "sorted_arrive": jnp.sort(arrive, axis=-1),       # (S, n)
+        "sorted_classic": jnp.sort(classic, axis=-1),     # (S, n)
+    }
+
+
+def _decide(draws: Dict, q1: jax.Array, q2c: jax.Array,
+            q2f: jax.Array) -> Dict[str, jax.Array]:
+    """Apply one (traced) threshold triple to presorted draws: gathers only."""
+    winner = draws["winner"]
+    win_sorted = jnp.take_along_axis(
+        draws["sorted_val_arrive"], winner[:, None, None], axis=1)[:, 0, :]
+    t_fast = _kth(win_sorted, q2f)                                # (S,)
+    # a fast commit needs q2f acceptor *votes* AND the learner actually
+    # receiving the q2f-th 2b (lost 2bs leave t_fast at the sentinel);
+    # otherwise the coordinator falls back to recovery like any collision.
+    fast_ok = (draws["max_cnt"] >= q2f) & (t_fast < UNDECIDED_MS)
+
+    t_detect = _kth(draws["sorted_arrive"], q1)
+    t_recover = t_detect + _kth(draws["sorted_classic"], q2c)
+
+    latency = jnp.where(fast_ok, t_fast, t_recover)
+    undecided = latency >= UNDECIDED_MS
+    return {
+        "fast_winner": jnp.where(fast_ok, winner, -1),
+        "reached_fast": fast_ok,
+        "recovery": ~fast_ok & ~undecided,
+        "undecided": undecided,
+        "latency_ms": latency,
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k_proposers", "samples",
+                                             "use_kernel"))
+def race(key: jax.Array, spec_table: jax.Array, offsets: jax.Array,
+         delay=None, *, n: int, k_proposers: int, samples: int,
+         use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """K proposals race for one instance, scored under M quorum specs at once.
+
+    key         PRNG key (delays are shared across specs — common random
+                numbers, so spec-vs-spec deltas carry no sampling noise)
+    spec_table  (M, 3) int32 [q1, q2c, q2f] rows (traced: new tables of the
+                same shape reuse the compile)
+    offsets     (K,) proposer submission times in ms (traced)
+    delay       a ``repro.montecarlo.latency`` model (traced pytree)
+
+    Returns per-spec-per-sample arrays, each (M, S):
+      fast_winner   proposer id that won on the fast path, -1 otherwise
+      reached_fast  some value gathered q2f round-1 votes
+      recovery      coordinated recovery decided the instance
+      undecided     not enough votes ever arrived (message loss)
+      latency_ms    decision latency from proposer 0's submission
+    """
+    _check_table(spec_table)
+    TRACE_COUNTS["race"] += 1
+    if delay is None:
+        delay = default_delay()
+    draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
+                         samples=samples, use_kernel=use_kernel)
+    return jax.vmap(lambda q: _decide(draws, q[0], q[1], q[2]))(spec_table)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "samples"))
+def fast_path(key: jax.Array, spec_table: jax.Array, delay=None, *,
+              n: int, samples: int) -> jax.Array:
+    """(M, S) conflict-free fast-path commit latencies (client -> acceptors
+    -> learner, q2f-th order statistic), one compile for the whole table."""
+    _check_table(spec_table)
+    TRACE_COUNTS["fast_path"] += 1
+    if delay is None:
+        delay = default_delay()
+    k1, k2 = jax.random.split(key)
+    d1 = delay.sample_hops(k1, (samples, n, 1), lat_mod.PROPOSAL)[..., 0]
+    d2 = delay.sample_hops(k2, (samples, n), lat_mod.TO_LEARNER)
+    path = d1 + d2
+    path = jnp.where(path < UNDECIDED_MS, path, BIG)   # lost => never arrives
+    srt = jnp.sort(path, axis=-1)
+    return jax.vmap(lambda q: _kth(srt, q[2]))(spec_table)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "samples"))
+def classic_path(key: jax.Array, spec_table: jax.Array, delay=None, *,
+                 n: int, samples: int) -> jax.Array:
+    """(M, S) leader-relayed classic commit latencies (q2c-th order
+    statistic after the client -> leader hop)."""
+    _check_table(spec_table)
+    TRACE_COUNTS["classic_path"] += 1
+    if delay is None:
+        delay = default_delay()
+    k0, k1, k2 = jax.random.split(key, 3)
+    d0 = delay.sample_hops(k0, (samples,), lat_mod.CLIENT_TO_LEADER)
+    d1 = delay.sample_hops(k1, (samples, n), lat_mod.FROM_COORDINATOR)
+    d2 = delay.sample_hops(k2, (samples, n), lat_mod.TO_COORDINATOR)
+    path = d1 + d2
+    path = jnp.where(path < UNDECIDED_MS, path, BIG)   # lost => never arrives
+    srt = jnp.sort(path, axis=-1)
+    return jax.vmap(lambda q: d0 + _kth(srt, q[1]))(spec_table)
+
+
+def summarize(latency_ms: jax.Array,
+              axis: int = -1) -> Dict[str, jax.Array]:
+    """Latency quantiles over the sample axis; works on (S,) or (M, S)."""
+    q = jnp.quantile(latency_ms, jnp.array([0.5, 0.95, 0.99]), axis=axis)
+    return {
+        "mean_ms": latency_ms.mean(axis=axis),
+        "p50_ms": q[0],
+        "p95_ms": q[1],
+        "p99_ms": q[2],
+    }

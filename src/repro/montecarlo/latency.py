@@ -1,0 +1,194 @@
+"""Pluggable network-delay models for the Monte-Carlo engine.
+
+Each model is a frozen dataclass registered as a JAX pytree whose *leaves are
+the distribution parameters*.  That is the load-bearing design decision: the
+engine jits over the model, so parameters are traced operands — sweeping a
+delay parameter (or swapping fitted values per deployment) never triggers a
+recompile, and models can ride through ``vmap``/``grad`` like any other
+operand.  Only structural fields (e.g. the number of WAN regions) are static.
+
+The engine asks a model for delays through one method::
+
+    sample_hops(key, shape, kind)
+
+``kind`` names the hop so topology-aware models can vary the distribution per
+endpoint pair; i.i.d. models ignore it.  Kinds used by the engine:
+
+  ``proposal``         proposer k -> acceptor a, shape (S, n, K)
+  ``to_learner``       acceptor a -> learner,    shape (S, n)
+  ``from_coordinator`` coordinator -> acceptor,  shape (S, n)
+  ``to_coordinator``   acceptor -> coordinator,  shape (S, n)
+  ``client_to_leader`` client -> leader relay,   shape (S,)
+
+A delay >= ``LOST_MS`` means the message never arrives (used by
+``LossyDelay``); the engine treats such paths as missing votes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel one-way delay for a dropped message.  Anything this large is
+# treated as "never arrived" by the engine (real delays are a few ms).
+LOST_MS = 1e9
+
+PROPOSAL = "proposal"
+TO_LEARNER = "to_learner"
+FROM_COORDINATOR = "from_coordinator"
+TO_COORDINATOR = "to_coordinator"
+CLIENT_TO_LEADER = "client_to_leader"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class ShiftedLognormalDelay:
+    """one_way = base + LogNormal(mu, sigma) ms — the EC2 same-region m5a fit
+    used by the discrete-event simulator (``simulator.LatencyModel``)."""
+
+    base_ms: float = 0.25
+    mu: float = -1.20
+    sigma: float = 0.55
+
+    def as_tuple(self) -> Tuple[float, float, float]:
+        return (self.base_ms, self.mu, self.sigma)
+
+    def sample_hops(self, key: jax.Array, shape, kind: str = PROPOSAL) -> jax.Array:
+        return self.base_ms + jnp.exp(
+            self.mu + self.sigma * jax.random.normal(key, shape))
+
+    def tree_flatten(self):
+        return (self.base_ms, self.mu, self.sigma), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class ParetoDelay:
+    """Heavy-tailed one-way delay: base + scale * (Pareto(alpha) - 1).
+
+    Pareto(alpha) has support [1, inf), so delays start exactly at ``base_ms``
+    and fall off polynomially — the classic model for congested links where
+    the lognormal's tail is too optimistic.  ``alpha > 1`` keeps the mean
+    finite (mean = base + scale / (alpha - 1))."""
+
+    base_ms: float = 0.25
+    scale_ms: float = 0.12
+    alpha: float = 2.2
+
+    def sample_hops(self, key: jax.Array, shape, kind: str = PROPOSAL) -> jax.Array:
+        return self.base_ms + self.scale_ms * (
+            jax.random.pareto(key, self.alpha, shape=shape) - 1.0)
+
+    def tree_flatten(self):
+        return (self.base_ms, self.scale_ms, self.alpha), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class WanDelay:
+    """Multi-region WAN model for geo-distributed deployments.
+
+    ``oneway_ms`` is an (R, R) matrix of deterministic one-way propagation
+    delays between regions; every message additionally pays a lognormal
+    in-region jitter.  Placement:
+
+      ``acceptor_region``  (n,) region id per acceptor
+      ``proposer_region``  (K,) region id per proposer (also the clients)
+      ``learner_region``   scalar region id of the learner / coordinator
+
+    All placement arrays are leaves, so moving replicas between regions is a
+    traced change (one compile covers every placement of the same shape).
+    """
+
+    oneway_ms: jax.Array            # (R, R) float
+    acceptor_region: jax.Array      # (n,) int32
+    proposer_region: jax.Array      # (K,) int32
+    learner_region: jax.Array = field(default_factory=lambda: jnp.int32(0))
+    jitter_mu: float = -2.0
+    jitter_sigma: float = 0.4
+
+    def _jitter(self, key: jax.Array, shape) -> jax.Array:
+        return jnp.exp(self.jitter_mu
+                       + self.jitter_sigma * jax.random.normal(key, shape))
+
+    def _base(self, shape, kind: str) -> jax.Array:
+        ow, acc = self.oneway_ms, self.acceptor_region
+        if kind == PROPOSAL:                   # (S, n, K)
+            # tolerate a requested K different from the placement table
+            # (e.g. the conflict-free fast path asks for one proposer)
+            k_req = shape[-1]
+            prop = self.proposer_region[
+                jnp.arange(k_req) % self.proposer_region.shape[0]]
+            return ow[prop[None, :], acc[:, None]][None]
+        if kind in (TO_LEARNER, TO_COORDINATOR):      # (S, n)
+            return ow[acc, self.learner_region][None]
+        if kind == FROM_COORDINATOR:                  # (S, n)
+            return ow[self.learner_region, acc][None]
+        if kind == CLIENT_TO_LEADER:                  # (S,)
+            return ow[self.proposer_region[0], self.learner_region]
+        raise ValueError(f"unknown hop kind {kind!r}")
+
+    def sample_hops(self, key: jax.Array, shape, kind: str = PROPOSAL) -> jax.Array:
+        return jnp.broadcast_to(self._base(shape, kind), shape) \
+            + self._jitter(key, shape)
+
+    def tree_flatten(self):
+        leaves = (self.oneway_ms, self.acceptor_region, self.proposer_region,
+                  self.learner_region, self.jitter_mu, self.jitter_sigma)
+        return leaves, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @classmethod
+    def symmetric(cls, inter_region_ms: float, n: int, k_proposers: int,
+                  n_regions: int = 3, **kw) -> "WanDelay":
+        """All region pairs ``inter_region_ms`` apart, zero intra-region
+        propagation; acceptors round-robin over regions, proposer k in
+        region k mod R, learner in region 0."""
+        r = n_regions
+        ow = inter_region_ms * (1.0 - jnp.eye(r))
+        return cls(oneway_ms=ow,
+                   acceptor_region=jnp.arange(n, dtype=jnp.int32) % r,
+                   proposer_region=jnp.arange(k_proposers, dtype=jnp.int32) % r,
+                   learner_region=jnp.int32(0), **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class LossyDelay:
+    """Wrap any delay model with i.i.d. message loss: with probability
+    ``loss_prob`` a hop's delay becomes ``LOST_MS`` (the message is dropped).
+    Mirrors ``simulator.LatencyModel.loss_prob``."""
+
+    inner: object
+    loss_prob: float = 0.01
+
+    def sample_hops(self, key: jax.Array, shape, kind: str = PROPOSAL) -> jax.Array:
+        k_delay, k_loss = jax.random.split(key)
+        d = self.inner.sample_hops(k_delay, shape, kind)
+        lost = jax.random.uniform(k_loss, shape) < self.loss_prob
+        return jnp.where(lost, jnp.asarray(LOST_MS, d.dtype), d)
+
+    def tree_flatten(self):
+        return (self.inner, self.loss_prob), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def default_delay() -> ShiftedLognormalDelay:
+    """The paper-§6 EC2 fit shared with the discrete-event simulator."""
+    return ShiftedLognormalDelay()

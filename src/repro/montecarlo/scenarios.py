@@ -1,0 +1,144 @@
+"""Named scenario builders: a scenario bundles race geometry (how many
+proposers, at what offsets) with a delay model, and knows how to run itself
+over a quorum-spec table in one engine call.
+
+Builders cover the paper's §6 workloads plus the deployments the relaxation
+is aimed at:
+
+  conflict_free     Fig. 2a — one proposer, pure fast-path order statistics
+  k_way_race        Fig. 2b/2c generalized — K proposers staggered by Δ
+  mixed_workload    fraction p of commands race, the rest are clean
+  wan               geo-distributed acceptors (multi-region delay matrix)
+  lossy_acceptors   i.i.d. message loss on every hop
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import engine
+from .latency import (LossyDelay, ShiftedLognormalDelay, WanDelay,
+                      default_delay)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A runnable workload: K proposers at ``offsets_ms`` under ``delay``.
+
+    ``conflict_frac`` < 1 mixes in conflict-free commands: the reported
+    per-spec latency distribution is the blend, as in Fig. 2b.
+    """
+
+    name: str
+    n: int
+    k_proposers: int
+    offsets_ms: jax.Array            # (K,)
+    delay: object
+    conflict_frac: float = 1.0
+
+    def run(self, key: jax.Array, spec_table: jax.Array, samples: int,
+            use_kernel: bool = False) -> Dict[str, jax.Array]:
+        """Evaluate every spec in ``spec_table`` over ``samples`` instances.
+
+        Returns (M, S)-shaped ``latency_ms`` plus race outcome flags (for the
+        racing fraction) — one engine compile per (shape, scenario type).
+        """
+        if self.k_proposers == 1 or self.conflict_frac == 0.0:
+            lat = engine.fast_path(key, spec_table, self.delay,
+                                   n=self.n, samples=samples)
+            m = spec_table.shape[0]
+            undecided = lat >= engine.UNDECIDED_MS   # q2f-th path never arrived
+            return {"latency_ms": lat, "reached_fast": ~undecided,
+                    "recovery": jnp.zeros((m, samples), bool),
+                    "undecided": undecided,
+                    "fast_winner": jnp.where(undecided, -1, 0).astype(
+                        jnp.int32)}
+
+        k_race, k_free = jax.random.split(key)
+        n_conf = max(1, int(round(samples * self.conflict_frac)))
+        out = engine.race(k_race, spec_table, self.offsets_ms, self.delay,
+                          n=self.n, k_proposers=self.k_proposers,
+                          samples=n_conf, use_kernel=use_kernel)
+        n_free = samples - n_conf
+        if n_free > 0:
+            scen_free = Scenario(self.name, self.n, 1, self.offsets_ms[:1],
+                                 self.delay)
+            free = scen_free.run(k_free, spec_table, n_free)
+            out = {k: jnp.concatenate([free[k], out[k]], axis=-1)
+                   for k in out}
+        return out
+
+    def summary(self, key: jax.Array, spec_table: jax.Array, samples: int,
+                use_kernel: bool = False) -> Dict[str, jax.Array]:
+        """Per-spec latency quantiles + outcome rates, each entry (M,).
+
+        Quantiles cover *decided* instances only; instances that never
+        gathered enough votes (message loss) are reported separately via
+        ``undecided_rate`` instead of polluting the distribution with the
+        LOST_MS sentinel."""
+        out = self.run(key, spec_table, samples, use_kernel)
+        lat = jnp.where(out["undecided"], jnp.nan, out["latency_ms"])
+        q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99]), axis=-1)
+        return {
+            "mean_ms": jnp.nanmean(lat, axis=-1),
+            "p50_ms": q[0],
+            "p95_ms": q[1],
+            "p99_ms": q[2],
+            "recovery_rate": out["recovery"].mean(axis=-1),
+            "undecided_rate": out["undecided"].mean(axis=-1),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Builders.
+# ---------------------------------------------------------------------------
+
+def conflict_free(n: int = 11, delay=None) -> Scenario:
+    """Fig. 2a: a steady conflict-free stream; latency is the q2f-th order
+    statistic of client->acceptor->learner paths."""
+    return Scenario("conflict_free", n, 1, jnp.zeros((1,)),
+                    delay if delay is not None else default_delay())
+
+
+def k_way_race(k: int, delta_ms: float = 0.5, n: int = 11,
+               delay=None) -> Scenario:
+    """K proposals race for one instance; proposer i submits at i * Δ.
+    k=2, Δ swept reproduces Fig. 2c; larger k models hotter keys."""
+    if k < 2:
+        raise ValueError("a race needs at least 2 proposers")
+    offs = delta_ms * jnp.arange(k, dtype=jnp.float32)
+    return Scenario(f"{k}_way_race", n, k, offs,
+                    delay if delay is not None else default_delay())
+
+
+def mixed_workload(conflict_frac: float = 0.10, delta_ms: float = 0.5,
+                   k: int = 2, n: int = 11, delay=None) -> Scenario:
+    """Fig. 2b: ``conflict_frac`` of commands race (K-way, Δ apart), the
+    rest commit conflict-free."""
+    base = k_way_race(k, delta_ms, n, delay)
+    return replace(base, name="mixed_workload", conflict_frac=conflict_frac)
+
+
+def wan(n: int = 11, k: int = 2, inter_region_ms: float = 30.0,
+        n_regions: int = 3, delta_ms: float = 0.5) -> Scenario:
+    """Geo-distributed deployment: acceptors round-robin across
+    ``n_regions`` regions ``inter_region_ms`` apart (one-way), proposers in
+    distinct regions.  Here quorum choice interacts with *which* acceptors
+    are near, not just how many — the regime the relaxation targets."""
+    delay = WanDelay.symmetric(inter_region_ms, n, k, n_regions)
+    offs = delta_ms * jnp.arange(k, dtype=jnp.float32)
+    return Scenario("wan", n, k, offs, delay)
+
+
+def lossy_acceptors(loss_prob: float = 0.01, k: int = 2,
+                    delta_ms: float = 0.5, n: int = 11,
+                    inner=None) -> Scenario:
+    """Every hop independently drops with ``loss_prob``; lost proposals mean
+    missing votes, surfacing as higher recovery and ``undecided`` rates."""
+    delay = LossyDelay(inner if inner is not None else default_delay(),
+                       loss_prob)
+    offs = delta_ms * jnp.arange(k, dtype=jnp.float32)
+    return Scenario("lossy_acceptors", n, k, offs, delay)

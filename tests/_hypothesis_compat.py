@@ -1,0 +1,60 @@
+"""Property-testing front-end: real ``hypothesis`` when installed, otherwise a
+deterministic fallback that drives the same tests from a fixed-seed PRNG.
+
+The container this repo targets does not ship hypothesis, and installing
+packages is off-limits, so the suite gates the dependency here.  Only the
+surface the tests use is provided: ``given`` (positional and keyword
+strategies), ``settings(max_examples=..., deadline=...)``, ``st.integers`` and
+``st.composite``.  The fallback enumerates ``max_examples`` pseudo-random
+draws per test — less adversarial than hypothesis (no shrinking, no coverage
+guidance) but exercising the identical property bodies.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:
+    import random
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+    class strategies:  # noqa: N801 — mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                return _Strategy(
+                    lambda rng: fn(lambda s: s.draw(rng), *args, **kwargs))
+            return build
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(f):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples",
+                            getattr(f, "_max_examples", 20))
+                rng = random.Random(0xFFB)
+                for _ in range(n):
+                    pos = tuple(s.draw(rng) for s in arg_strats)
+                    kw = {k: s.draw(rng) for k, s in kw_strats.items()}
+                    f(*pos, **kw)
+            # plain attribute copies (not functools.wraps) so pytest sees a
+            # zero-arg signature instead of the strategy parameters
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__module__ = f.__module__
+            return wrapper
+        return deco

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.quorum_tally import ops as qt_ops, ref as qt_ref
@@ -34,6 +34,30 @@ def test_quorum_tally_property(S, n, V, q):
     kq = qt_ops.quorum_reached(votes, V, q)
     rq = qt_ref.quorum_reached(votes, V, q)
     np.testing.assert_array_equal(np.asarray(kq), np.asarray(rq))
+
+
+@pytest.mark.parametrize("V", [2, 3, 4])
+@pytest.mark.parametrize("S,n,q", [(100, 11, 7), (2049, 11, 9), (500, 7, 4)])
+def test_quorum_tally_decide_fused(S, n, q, V):
+    """Fused tally+decide kernel vs its pure-jnp oracle for K values."""
+    votes = jax.random.randint(jax.random.PRNGKey(S + V), (S, n), 0, V)
+    kc, kw, km, kr = qt_ops.tally_decide(votes, V, jnp.int32(q))
+    rc, rw, rm, rr = qt_ref.tally_decide(votes, V, q)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(kw), np.asarray(rw))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(rr))
+
+
+def test_quorum_tally_decide_ignores_missing_votes():
+    """Entries of -1 (acceptor never voted) count toward no value."""
+    votes = jnp.array([[0, 1, -1, -1, 0], [-1, -1, -1, -1, -1]], jnp.int32)
+    counts, winner, max_cnt, reached = qt_ops.tally_decide(votes, 2,
+                                                           jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(counts), [[2, 1], [0, 0]])
+    np.testing.assert_array_equal(np.asarray(max_cnt), [2, 0])
+    assert int(winner[0]) == 0
+    assert bool(reached[0]) and not bool(reached[1])
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """TLC-lite model checking of the protocol (the paper's Appendix A, §4)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.model_check import explore
 from repro.core.quorum import QuorumSpec, ffp_card_ok

@@ -1,0 +1,196 @@
+"""Unit tests for the batched Monte-Carlo scenario engine
+(``repro.montecarlo``): traced-threshold batching, delay models, scenarios,
+and agreement with the legacy per-spec shim."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import jax_sim
+from repro.core.quorum import QuorumSpec, all_valid_specs
+from repro.montecarlo import (LossyDelay, ParetoDelay, Scenario,
+                              ShiftedLognormalDelay, WanDelay,
+                              build_spec_table, engine, scenarios)
+
+KEY = jax.random.PRNGKey(7)
+FFP = QuorumSpec.paper_headline(11)
+FP = QuorumSpec.fast_paxos(11)
+
+
+# ---------------------------------------------------------------------------
+# spec tables + traced-threshold batching
+# ---------------------------------------------------------------------------
+
+def test_spec_table_shape_and_mixed_n_rejected():
+    t = build_spec_table([FFP, FP])
+    assert t.shape == (2, 3) and t.dtype == jnp.int32
+    with pytest.raises(ValueError):
+        build_spec_table([FFP, QuorumSpec(7, 6, 2, 6)])
+
+
+def test_batched_fast_path_matches_per_spec_shim():
+    specs = [FP, FFP, QuorumSpec(11, 11, 1, 6)]
+    table = build_spec_table(specs)
+    batched = engine.fast_path(KEY, table, n=11, samples=40_000)
+    for i, s in enumerate(specs):
+        solo = jax_sim.fast_path_latency(KEY, s.n, s.q2f, 40_000)
+        # identical sampled delays -> identical order statistics
+        assert float(jnp.abs(batched[i] - solo).max()) < 1e-5
+
+
+def test_batched_race_matches_per_spec_shim():
+    specs = [FP, FFP]
+    table = build_spec_table(specs)
+    out = engine.race(KEY, table, jnp.array([0.0, 0.3]), n=11,
+                      k_proposers=2, samples=30_000)
+    for i, s in enumerate(specs):
+        solo = jax_sim.conflict_race(KEY, s.n, s.q1, s.q2f, s.q2c,
+                                     30_000, 0.3)
+        assert bool((out["recovery"][i] == solo["recovery"]).all())
+        assert float(jnp.abs(out["latency_ms"][i]
+                             - solo["latency_ms"]).max()) < 1e-5
+
+
+def test_full_valid_space_single_trace():
+    """The whole Eq.13/14-valid space for n=7 (hundreds of specs) must cost
+    one race trace, and a different same-shape table must cost zero."""
+    specs = list(all_valid_specs(7))
+    assert len(specs) > 50
+    table = build_spec_table(specs)
+    before = engine.TRACE_COUNTS["race"]
+    out = engine.race(KEY, table, jnp.array([0.0, 0.2]), n=7,
+                      k_proposers=2, samples=2_000)
+    assert out["latency_ms"].shape == (len(specs), 2_000)
+    assert engine.TRACE_COUNTS["race"] - before == 1
+    table2 = build_spec_table(list(reversed(specs)))
+    engine.race(KEY, table2, jnp.array([0.0, 0.7]), n=7,
+                k_proposers=2, samples=2_000)
+    assert engine.TRACE_COUNTS["race"] - before == 1
+
+
+def test_race_outcomes_partition_k3():
+    table = build_spec_table([FFP])
+    out = engine.race(KEY, table, jnp.array([0.0, 0.2, 0.4]), n=11,
+                      k_proposers=3, samples=10_000)
+    total = (out["reached_fast"].astype(jnp.int32)
+             + out["recovery"].astype(jnp.int32)
+             + out["undecided"].astype(jnp.int32))
+    assert bool((total == 1).all())
+    assert bool((out["fast_winner"][out["reached_fast"]] >= 0).all())
+    assert bool((out["fast_winner"][~out["reached_fast"]] == -1).all())
+
+
+def test_race_outcomes_partition_under_loss():
+    """With lossy hops the three outcomes must still partition: a quorum of
+    acceptor votes whose 2bs never reach the learner is NOT a fast commit —
+    it falls back to recovery (or undecided), never both flags at once."""
+    from repro.montecarlo.latency import default_delay
+    table = build_spec_table([FFP])
+    out = engine.race(KEY, table, jnp.array([0.0, 0.3]),
+                      LossyDelay(default_delay(), 0.4),
+                      n=11, k_proposers=2, samples=20_000)
+    total = (out["reached_fast"].astype(jnp.int32)
+             + out["recovery"].astype(jnp.int32)
+             + out["undecided"].astype(jnp.int32))
+    assert bool((total == 1).all())
+    decided = ~out["undecided"]
+    assert bool((out["latency_ms"][decided] < engine.UNDECIDED_MS).all())
+    assert bool(out["undecided"].any())          # 40% loss must bite
+    assert bool((out["fast_winner"][~out["reached_fast"]] == -1).all())
+
+
+def test_kernel_and_ref_paths_identical():
+    table = build_spec_table([FFP, FP])
+    kw = dict(n=11, k_proposers=2, samples=8_000)
+    offs = jnp.array([0.0, 0.3])
+    o_ref = engine.race(KEY, table, offs, use_kernel=False, **kw)
+    o_ker = engine.race(KEY, table, offs, use_kernel=True, **kw)
+    assert bool((o_ref["fast_winner"] == o_ker["fast_winner"]).all())
+    assert float(jnp.abs(o_ref["latency_ms"]
+                         - o_ker["latency_ms"]).max()) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# delay models
+# ---------------------------------------------------------------------------
+
+def test_delay_models_are_pytrees():
+    for model in (ShiftedLognormalDelay(), ParetoDelay(),
+                  LossyDelay(ShiftedLognormalDelay(), 0.05),
+                  WanDelay.symmetric(30.0, n=11, k_proposers=2)):
+        leaves = jax.tree_util.tree_leaves(model)
+        assert leaves, model
+        rebuilt = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(model), leaves)
+        assert type(rebuilt) is type(model)
+
+
+def test_pareto_tail_heavier_than_lognormal():
+    ln = ShiftedLognormalDelay().sample_hops(KEY, (200_000,))
+    pa = ParetoDelay().sample_hops(KEY, (200_000,))
+    tail = lambda x: float(jnp.quantile(x, 0.999) / jnp.quantile(x, 0.5))
+    assert tail(pa) > tail(ln)
+
+
+def test_wan_delay_topology():
+    wan = WanDelay.symmetric(30.0, n=6, k_proposers=2, n_regions=3)
+    d = wan.sample_hops(KEY, (1000, 6), kind="to_learner")
+    # acceptors 0 and 3 share the learner's region (round-robin): no 30 ms hop
+    assert float(d[:, 0].mean()) < 5.0 < float(d[:, 1].mean())
+    prop = wan.sample_hops(KEY, (1000, 6, 2), kind="proposal")
+    assert prop.shape == (1000, 6, 2)
+    # proposer 1 (region 1) is local to acceptors 1 and 4 only
+    assert float(prop[:, 1, 1].mean()) < 5.0 < float(prop[:, 0, 1].mean())
+
+
+def test_lossy_delay_marks_losses():
+    d = LossyDelay(ShiftedLognormalDelay(), 0.2).sample_hops(KEY, (50_000,))
+    frac = float((d >= 1e8).mean())
+    assert 0.17 < frac < 0.23
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+def test_conflict_free_scenario_equals_fast_path():
+    table = build_spec_table([FFP])
+    scen = scenarios.conflict_free(n=11)
+    out = scen.run(KEY, table, 5_000)
+    direct = engine.fast_path(KEY, table, n=11, samples=5_000)
+    assert float(jnp.abs(out["latency_ms"] - direct).max()) < 1e-6
+    assert not bool(out["recovery"].any())
+
+
+def test_mixed_workload_blend():
+    table = build_spec_table([FFP])
+    s = scenarios.mixed_workload(0.01, 0.3, n=11).summary(KEY, table, 20_000)
+    assert float(s["p99_ms"][0]) >= float(s["p50_ms"][0]) > 0
+    assert 0.0 <= float(s["recovery_rate"][0]) <= 0.01
+
+
+def test_wan_scenario_latency_dominated_by_geography():
+    table = build_spec_table([FFP])
+    local = scenarios.conflict_free(n=11).summary(KEY, table, 5_000)
+    geo = scenarios.wan(n=11, inter_region_ms=30.0)
+    geo = Scenario(geo.name, geo.n, 1, geo.offsets_ms[:1], geo.delay)
+    far = geo.summary(KEY, table, 5_000)
+    assert float(far["p50_ms"][0]) > 10 * float(local["p50_ms"][0])
+
+
+def test_lossy_scenario_increases_recovery():
+    table = build_spec_table([FFP])
+    clean = scenarios.k_way_race(2, 0.3, n=11).run(KEY, table, 30_000)
+    lossy = scenarios.lossy_acceptors(0.15, delta_ms=0.3, n=11).run(
+        KEY, table, 30_000)
+    p_clean = float(clean["recovery"].mean() + clean["undecided"].mean())
+    p_lossy = float(lossy["recovery"].mean() + lossy["undecided"].mean())
+    assert p_lossy > p_clean + 0.05
+    # with 15% loss per hop some instances can still decide via recovery
+    assert bool(lossy["reached_fast"].any())
+
+
+def test_summarize_shapes():
+    lat = jax.random.uniform(KEY, (3, 1000)) + 1.0
+    s = engine.summarize(lat)
+    for v in s.values():
+        assert v.shape == (3,)

@@ -1,7 +1,7 @@
 """Property-based system invariants (hypothesis)."""
 import itertools
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.cluster import ConsensusLog
 from repro.core.quorum import QuorumSpec, all_valid_specs

@@ -3,7 +3,7 @@ equivalence, and the strict-relaxation claims of §3/§5."""
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.quorum import (ExplicitQuorumSystem, QuorumSpec,
                                WeightedQuorumSystem, all_valid_specs,

@@ -1,0 +1,81 @@
+"""Monte-Carlo engine vs discrete-event simulator cross-validation.
+
+The batched engine (``repro.montecarlo``) is an *analytic* model — order
+statistics over sampled delays — while ``repro.core.simulator`` runs the
+actual protocol state machines over a simulated network.  They share one
+delay distribution (the §6 EC2 shifted-lognormal fit), so on the paper's
+n=11 configurations they must agree, within Monte-Carlo tolerance, on
+
+  * conflict-free fast-path p50 latency, and
+  * P(coordinated recovery) in K-proposer races, K ∈ {2, 3}.
+
+Agreement here is what licenses the benchmarks to sweep the quorum space
+with the (much faster) engine.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.quorum import QuorumSpec
+from repro.core.simulator import (FastPaxosSim, conflict_free_workload,
+                                  latency_stats)
+from repro.montecarlo import build_spec_table, engine
+
+FFP = QuorumSpec.paper_headline(11)
+FP = QuorumSpec.fast_paxos(11)
+KEY = jax.random.PRNGKey(3)
+DELTA_MS = 0.2
+MC_SAMPLES = 60_000
+DES_PAIRS = 800
+
+
+def _des_recovery_prob(spec: QuorumSpec, k_proposers: int, delta_ms: float,
+                       pairs: int, seed: int = 0) -> float:
+    """K proposals race per instance in the event simulator; instances are
+    spaced far apart so races are independent."""
+    sim = FastPaxosSim(spec, seed=seed)
+    t = 0.0
+    for i in range(pairs):
+        for k in range(k_proposers):
+            sim.submit(t + k * delta_ms, instance=i, value=f"v{i}_{k}",
+                       proposer=k)
+        t += 50.0
+    sim.run()
+    return sim.recovery_entries / pairs
+
+
+@pytest.mark.parametrize("spec", [FFP, FP], ids=["ffp", "fp"])
+def test_fast_path_p50_matches_des(spec):
+    table = build_spec_table([spec])
+    mc_p50 = float(jnp.median(
+        engine.fast_path(KEY, table, n=spec.n, samples=MC_SAMPLES)[0]))
+    sim = FastPaxosSim(spec, seed=11)
+    conflict_free_workload(sim, 3000, rate_per_s=1400)
+    des_p50 = latency_stats(sim.run())["p50_ms"]
+    assert abs(mc_p50 - des_p50) / des_p50 < 0.05, (mc_p50, des_p50)
+
+
+@pytest.mark.parametrize("spec", [FFP, FP], ids=["ffp", "fp"])
+@pytest.mark.parametrize("k_proposers", [2, 3])
+def test_recovery_probability_matches_des(spec, k_proposers):
+    table = build_spec_table([spec])
+    offsets = DELTA_MS * jnp.arange(k_proposers, dtype=jnp.float32)
+    out = engine.race(KEY, table, offsets, n=spec.n,
+                      k_proposers=k_proposers, samples=MC_SAMPLES)
+    p_mc = float(out["recovery"][0].mean())
+    p_des = _des_recovery_prob(spec, k_proposers, DELTA_MS, DES_PAIRS)
+    # binomial noise at 800 DES races is ~0.017 std at p=0.4; 0.05 gives
+    # ~3 sigma headroom while still catching modelling drift
+    assert abs(p_mc - p_des) < 0.05, (spec, k_proposers, p_mc, p_des)
+
+
+def test_more_proposers_mean_more_recoveries():
+    """Sanity on the K generalization: contention can only hurt."""
+    table = build_spec_table([FFP])
+    rates = []
+    for k in (2, 3, 4):
+        offsets = DELTA_MS * jnp.arange(k, dtype=jnp.float32)
+        out = engine.race(KEY, table, offsets, n=11, k_proposers=k,
+                          samples=MC_SAMPLES)
+        rates.append(float(out["recovery"][0].mean()))
+    assert rates[0] <= rates[1] + 0.01 <= rates[2] + 0.02, rates
