@@ -1,0 +1,148 @@
+"""Beyond-paper: the §6 closing remark made runnable — score *alternative
+quorum systems* (grid, weighted voting) against the paper's cardinality
+configurations on one cluster, in one compile.
+
+The paper closes by noting that relaxed intersection (Eqs. 11-14) lets Fast
+Paxos adopt quorum systems "not based solely on quorum cardinality" to trade
+performance against fault-tolerance.  This benchmark walks that design
+space for n = 11:
+
+  card.headline      (q1, q2c, q2f) = (9, 3, 7) — the paper's §5 example
+  card.fast_paxos    (6, 6, 9) — Fast Paxos' own three-quarters suggestion
+  card.majority      majority fast quorums (q1 = 11 extreme)
+  grid.3x3           3x3 grid (§6 construction) embedded in the 11-node
+                     cluster: fast = two full rows, classic = one column
+  weighted           Gifford-style weighted voting, three heavy acceptors
+
+All five are encoded as membership masks (``to_masks``), batched into ONE
+traced mask table, and scored by ONE ``fast_path_masked`` compile plus ONE
+``race_masked`` compile (asserted via ``engine.TRACE_COUNTS``).  On the
+cardinality rows the masked results are asserted bit-identical to the
+threshold-path engine — the differential anchor that licenses the general
+path.  Axes reported per system: fast-path p50/p99, P(recovery | race), and
+brute-force crash tolerance per phase; plus a fault-injection coda (a grid
+row outage vs the same crash count scattered) showing why *placement* starts
+to matter once quorums have structure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.quorum_systems [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quorum import ExplicitQuorumSystem, QuorumSpec
+from repro.montecarlo import build_mask_table, build_spec_table, engine
+from repro.montecarlo.scenarios import grid_wan, weighted_acceptors
+
+N = 11
+SAMPLES = 50_000
+DELTA_MS = 0.2
+
+
+def systems() -> List[Tuple[str, object]]:
+    """(name, masks) for every scored family; all masks share n = 11."""
+    grid = ExplicitQuorumSystem.grid(3).to_masks().embed(N)
+    _, weighted = weighted_acceptors()          # default 3-heavy weighting
+    return [
+        ("card.headline", QuorumSpec.paper_headline(N).to_masks()),
+        ("card.fast_paxos", QuorumSpec.fast_paxos(N).to_masks()),
+        ("card.majority", QuorumSpec.majority_fast(N).to_masks()),
+        ("grid.3x3", grid),
+        ("weighted.3heavy", weighted),
+    ]
+
+
+def run(quick: bool = False, seed: int = 0):
+    samples = 4_000 if quick else SAMPLES
+    named = systems()
+    cards = [QuorumSpec.paper_headline(N), QuorumSpec.fast_paxos(N),
+             QuorumSpec.majority_fast(N)]
+    table = build_mask_table([m for _, m in named])
+    key = jax.random.PRNGKey(seed)
+    k_fast, k_race = jax.random.split(key)
+    offs = jnp.array([0.0, DELTA_MS], jnp.float32)
+    rows: List[Tuple[str, float]] = [("qsys.n_systems", len(named))]
+
+    # -- the whole mixed-family table in two engine calls (one compile each)
+    t0 = dict(engine.TRACE_COUNTS)
+    lat = engine.fast_path_masked(k_fast, table, n=N, samples=samples)
+    race = engine.race_masked(k_race, table, offs, n=N, k_proposers=2,
+                              samples=samples)
+    traces = (engine.TRACE_COUNTS["fast_path_masked"] - t0["fast_path_masked"],
+              engine.TRACE_COUNTS["race_masked"] - t0["race_masked"])
+    assert traces[0] <= 1 and traces[1] <= 1, (
+        f"per-system re-jit crept back in: {traces} traces for "
+        f"{len(named)} quorum systems")
+    rows.append(("qsys.engine_compiles", sum(traces)))
+
+    # -- differential anchor: the cardinality rows must be bit-identical to
+    # the threshold-path engine under the same keys (common random numbers).
+    spec_table = build_spec_table(cards)
+    lat_thr = engine.fast_path(k_fast, spec_table, n=N, samples=samples)
+    race_thr = engine.race(k_race, spec_table, offs, n=N, k_proposers=2,
+                           samples=samples)
+    assert bool((lat[: len(cards)] == lat_thr).all()), \
+        "masked fast path diverged from threshold path on cardinality specs"
+    for k in race_thr:
+        assert bool((race[k][: len(cards)] == race_thr[k]).all()), (
+            f"masked race output {k!r} diverged from threshold path")
+    rows.append(("qsys.masked_matches_threshold_bitwise", len(cards)))
+
+    # -- per-system frontier rows
+    p50 = jnp.median(lat, axis=-1)
+    p99 = jnp.quantile(lat, 0.99, axis=-1)
+    p_rec = race["recovery"].mean(axis=-1)
+    for i, (name, masks) in enumerate(named):
+        ft = masks.fault_tolerance()
+        rows.append((f"qsys.[{name}].fast_p50_ms", float(p50[i])))
+        rows.append((f"qsys.[{name}].fast_p99_ms", float(p99[i])))
+        rows.append((f"qsys.[{name}].p_recovery", float(p_rec[i])))
+        rows.append((f"qsys.[{name}].ft_fast", ft["phase2_fast"]))
+        rows.append((f"qsys.[{name}].ft_classic", ft["phase2_classic"]))
+        rows.append((f"qsys.[{name}].ft_phase1", ft["phase1"]))
+
+    # -- fault-injection coda: with structured quorums, *which* acceptors
+    # fail matters, not just how many.  A full grid-row outage (one WAN
+    # region down) leaves a fast quorum intact; the same three crashes
+    # scattered one-per-row break every fast AND phase-1 quorum.
+    inj_samples = min(samples, 4_000)
+    kk = jax.random.PRNGKey(seed + 1)
+    undecided = {}
+    for tag, crashed in (("row_outage", (3, 4, 5)),
+                         ("scattered", (0, 4, 8))):
+        scen, masks = grid_wan(cols=3, k=2, delta_ms=DELTA_MS,
+                               crashed=crashed)
+        out = scen.run_masked(kk, build_mask_table([masks]), inj_samples)
+        undecided[tag] = float(out["undecided"].mean())
+        rows.append((f"qsys.grid_wan.{tag}.undecided_rate", undecided[tag]))
+        rows.append((f"qsys.grid_wan.{tag}.p_recovery",
+                     float(out["recovery"].mean())))
+    # a row outage also takes out every phase-1 quorum (each column crosses
+    # the dead row), so recovery is off — but the surviving row pair still
+    # fast-commits the large majority of instances, whereas the scattered
+    # crash set leaves no live quorum of any kind.
+    assert undecided["scattered"] > 0.99, \
+        "scattered 3-crash must break every grid quorum"
+    assert undecided["row_outage"] < 0.2, \
+        "a single-row outage must leave the grid's fast path mostly live"
+
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    for name, val in rows:
+        print(f"{name},{val:.6g}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sample count; asserts only")
+    args = ap.parse_args()
+    main(quick=args.smoke)

@@ -6,6 +6,8 @@ own microbenches and the roofline table summary.
 Sections:
   fig2a / fig2b / fig2c   paper §6 reproduction (FP vs FFP, n=11)
   sweep                   beyond-paper quorum-space sweep (§5)
+  qsys                    general quorum systems: cardinality vs grid vs
+                          weighted in one masked compile (§6 closing remark)
   mc.*                    montecarlo engine end-to-end: whole spec table per
                           call, traced thresholds (DESIGN.md §2)
   kernel.*                per-kernel timing: jnp reference under jit (wall),
@@ -137,7 +139,7 @@ def main() -> None:
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
-                         "mc,kernels,roofline")
+                         "qsys,mc,kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -157,6 +159,9 @@ def main() -> None:
     if want("sweep"):
         from benchmarks import quorum_sweep
         quorum_sweep.main(quick=args.quick)
+    if want("qsys"):
+        from benchmarks import quorum_systems
+        quorum_systems.main(quick=args.quick)
     if want("mc"):
         for name, val in montecarlo_benches(args.quick):
             print(f"{name},{val:.6g}")

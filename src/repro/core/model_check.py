@@ -26,13 +26,12 @@ the TLA+ spec, where LoseMsg only shrinks the set a node can react to).
 """
 from __future__ import annotations
 
-import itertools
 from collections import deque
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, Set, Tuple
 
 from .protocol import ANY, NONE, Phase1b, RoundSystem, pick_values
-from .quorum import QuorumSpec
+from .quorum import ExplicitQuorumSystem, QuorumSpec
 
 # Compact message encodings: ('1a', i) | ('1b', i, vrnd, vval, acc)
 #                           | ('2a', i, val) | ('2b', i, val, acc)
@@ -65,18 +64,24 @@ def _learned(sent: FrozenSet[Msg], rs: RoundSystem) -> Set:
     out: Set = set()
     for i, by_val in votes.items():
         for val, accs in by_val.items():
-            if len(accs) >= rs.q2(i):
+            if rs.contains_q2(accs, i):
                 out.add(val)
     return out
 
 
-def explore(spec: QuorumSpec,
+def explore(spec: "QuorumSpec | ExplicitQuorumSystem",
             values: Sequence = (1, 2),
             max_round: int = 2,
             fast_rounds: str = "odd",
             max_states: int = 400_000,
             uncoordinated: bool = False) -> CheckResult:
-    """BFS the reachable state space; check invariants in every state."""
+    """BFS the reachable state space; check invariants in every state.
+
+    ``spec`` may be a cardinality ``QuorumSpec`` or any
+    ``ExplicitQuorumSystem`` (grid, weighted-derived, hand-built): quorum
+    checks route through the set-level ``RoundSystem`` predicates, so the
+    checker validates arbitrary mask-encodable systems — the differential
+    backstop for the Monte-Carlo engine's general quorum support."""
     rs = RoundSystem(spec, n_coordinators=1, fast_rounds=fast_rounds)
     n = spec.n
     rounds = list(range(1, max_round + 1))
@@ -144,15 +149,14 @@ def _successors(st: State, rs: RoundSystem, values, rounds,
     # Phase2a(c, v): needs a phase-1 quorum of 1b messages for round crnd.
     if crnd > 0 and cval == C_NONE:
         got = {m[4]: m for m in sent if m[0] == "1b" and m[1] == crnd}
-        if len(got) >= rs.q1(crnd):
-            for Q in itertools.combinations(sorted(got), rs.q1(crnd)):
-                msgs = [Phase1b(crnd, got[a][2], got[a][3], a) for a in Q]
-                for v in pick_values(rs, crnd, msgs, set(proposed)):
-                    if v == ANY and not rs.is_fast(crnd):
-                        continue
-                    m = ("2a", crnd, v)
-                    yield ((rnds, vrnds, vvals, crnd, v, sent | {m}, proposed),
-                           f"Phase2a({crnd},{v})")
+        for Q in rs.q1_subsets(got, crnd):
+            msgs = [Phase1b(crnd, got[a][2], got[a][3], a) for a in Q]
+            for v in pick_values(rs, crnd, msgs, set(proposed)):
+                if v == ANY and not rs.is_fast(crnd):
+                    continue
+                m = ("2a", crnd, v)
+                yield ((rnds, vrnds, vvals, crnd, v, sent | {m}, proposed),
+                       f"Phase2a({crnd},{v})")
 
     # Phase2b(i, a, v)
     for m in sent:
@@ -174,14 +178,13 @@ def _successors(st: State, rs: RoundSystem, values, rounds,
     i = crnd
     if cval == A_ANY and (i + 1) in rounds:
         p2b = {m[3]: m for m in sent if m[0] == "2b" and m[1] == i}
-        if len(p2b) >= rs.q1(i + 1):
-            for Q in itertools.combinations(sorted(p2b), rs.q1(i + 1)):
-                msgs = [Phase1b(i + 1, i, p2b[a][2], a) for a in Q]
-                picks = pick_values(rs, i + 1, msgs, set(proposed)) - {ANY}
-                for v in picks:
-                    m = ("2a", i + 1, v)
-                    yield ((rnds, vrnds, vvals, i + 1, v, sent | {m}, proposed),
-                           f"CoordRecovery({i + 1},{v})")
+        for Q in rs.q1_subsets(p2b, i + 1):
+            msgs = [Phase1b(i + 1, i, p2b[a][2], a) for a in Q]
+            picks = pick_values(rs, i + 1, msgs, set(proposed)) - {ANY}
+            for v in picks:
+                m = ("2a", i + 1, v)
+                yield ((rnds, vrnds, vvals, i + 1, v, sent | {m}, proposed),
+                       f"CoordRecovery({i + 1},{v})")
 
     # UncoordinatedRecovery(i, a, v)
     if uncoordinated:
@@ -189,12 +192,10 @@ def _successors(st: State, rs: RoundSystem, values, rounds,
             if (i + 1) not in rounds or not rs.is_fast(i + 1):
                 continue
             p2b = {m[3]: m for m in sent if m[0] == "2b" and m[1] == i}
-            if len(p2b) < rs.q1(i + 1):
-                continue
             for a in range(n):
                 if rnds[a] > i:
                     continue
-                for Q in itertools.combinations(sorted(p2b), rs.q1(i + 1)):
+                for Q in rs.q1_subsets(p2b, i + 1):
                     msgs = [Phase1b(i + 1, i, p2b[b][2], b) for b in Q]
                     picks = pick_values(rs, i + 1, msgs, set(proposed)) - {ANY}
                     for v in picks:

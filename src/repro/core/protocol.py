@@ -20,6 +20,7 @@ against therefore share every code path except quorum sizes.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field, replace
 from typing import Dict, FrozenSet, Hashable, Iterable, List, Optional, Sequence, Set, Tuple
 
@@ -83,9 +84,16 @@ class RoundSystem:
     (steady state) and even rounds are *classic* (recovery), matching the
     deployment style of §6: the system sits in a fast round; collisions are
     resolved by the coordinator moving to the next (classic) round.
+
+    ``spec`` may be a cardinality ``QuorumSpec`` *or* an arbitrary
+    ``ExplicitQuorumSystem`` (grids, weighted-derived sets, ...): everything
+    downstream — ``pick_values``, the learner, the model checker, the
+    discrete-event simulator — speaks only the set-level predicates
+    ``contains_q1``/``contains_q2``/``q1_subsets``, which degrade to the
+    original cardinality comparisons when ``spec`` is a ``QuorumSpec``.
     """
 
-    spec: QuorumSpec
+    spec: object                  # QuorumSpec | ExplicitQuorumSystem
     n_coordinators: int = 1
     fast_rounds: str = "odd"      # "odd" | "all" | "none"
 
@@ -101,19 +109,59 @@ class RoundSystem:
     def coord_of(self, rnd: int) -> int:
         return rnd % self.n_coordinators
 
-    # -- quorum sizes ------------------------------------------------------
+    @property
+    def cardinality(self) -> bool:
+        return isinstance(self.spec, QuorumSpec)
+
+    # -- quorum sizes (cardinality systems only) ----------------------------
     def q1(self, rnd: int) -> int:          # phase-1 (fast or classic: §5)
+        if not self.cardinality:
+            raise TypeError("q1() is a cardinality-system accessor; use "
+                            "contains_q1()/q1_subsets() for explicit systems")
         return self.spec.q1
 
     def q2(self, rnd: int) -> int:          # phase-2 depends on round kind
+        if not self.cardinality:
+            raise TypeError("q2() is a cardinality-system accessor; use "
+                            "contains_q2() for explicit systems")
         return self.spec.q2f if self.is_fast(rnd) else self.spec.q2c
 
     # -- quorum predicates over acceptor-id sets ----------------------------
+    def contains_q1(self, acceptors: Iterable[int], rnd: int) -> bool:
+        """Does the set contain (a superset of) some phase-1 quorum?"""
+        s = set(acceptors)
+        if self.cardinality:
+            return len(s) >= self.spec.q1
+        return any(q <= s for q in self.spec.p1)
+
+    def contains_q2(self, acceptors: Iterable[int], rnd: int) -> bool:
+        """Does the set contain some phase-2 quorum of round ``rnd``?"""
+        s = set(acceptors)
+        if self.cardinality:
+            return len(s) >= self.q2(rnd)
+        qs = self.spec.p2f if self.is_fast(rnd) else self.spec.p2c
+        return any(q <= s for q in qs)
+
+    def q1_subsets(self, available: Iterable[int],
+                   rnd: int) -> Iterable[Tuple[int, ...]]:
+        """Every phase-1 quorum drawn from ``available`` (sorted tuples).
+        For cardinality systems these are the size-q1 combinations; for
+        explicit systems, the enumerated quorums contained in the set."""
+        avail = sorted(set(available))
+        if self.cardinality:
+            yield from itertools.combinations(avail, self.spec.q1)
+            return
+        s = set(avail)
+        for q in self.spec.p1:
+            if q <= s:
+                yield tuple(sorted(q))
+
+    # Backwards-compatible aliases (the original >=-threshold predicates).
     def is_q1(self, acceptors: Iterable[int], rnd: int) -> bool:
-        return len(set(acceptors)) >= self.q1(rnd)
+        return self.contains_q1(acceptors, rnd)
 
     def is_q2(self, acceptors: Iterable[int], rnd: int) -> bool:
-        return len(set(acceptors)) >= self.q2(rnd)
+        return self.contains_q2(acceptors, rnd)
 
 
 # ---------------------------------------------------------------------------
@@ -151,13 +199,16 @@ def pick_values(rs: RoundSystem,
         return set(V)
 
     # Multiple values seen at round k (k must be fast): O4 elimination.
-    n = rs.spec.n
-    q2k = rs.q2(k)
-    outside = n - len(Q)
+    # O4(w) asks whether some round-k phase-2 quorum could have decided w
+    # given what Q reported: the acceptors outside Q (whose round-k votes Q
+    # cannot see) plus the members of Q that voted (k, w) must still contain
+    # a round-k phase-2 quorum.  For cardinality systems this reduces to the
+    # original ``outside + in_q_voted_w >= q2(k)`` arithmetic.
+    outside = set(range(rs.spec.n)) - Q
 
     def o4(w: Value) -> bool:
-        in_q_voted_w = sum(1 for m in msgs if m.vrnd == k and m.vval == w)
-        return outside + in_q_voted_w >= q2k
+        voted_w = {m.acc for m in msgs if m.vrnd == k and m.vval == w}
+        return rs.contains_q2(outside | voted_w, k)
 
     winners = {w for w in V if o4(w)}
     if winners:
@@ -346,26 +397,27 @@ class Learner:
 
     def on_phase2b(self, m: Phase2b) -> Optional[Value]:
         self.votes.setdefault(m.rnd, {})[m.acc] = m.val
-        by_val: Dict[Value, int] = {}
+        by_val: Dict[Value, Set[int]] = {}
         for acc, val in self.votes[m.rnd].items():
-            by_val[val] = by_val.get(val, 0) + 1
-        for val, cnt in by_val.items():
-            if cnt >= self.rs.q2(m.rnd):
+            by_val.setdefault(val, set()).add(acc)
+        for val, accs in by_val.items():
+            if self.rs.contains_q2(accs, m.rnd):
                 self.learned.add(val)
                 return val
         return None
 
     def collision_suspected(self, rnd: int) -> bool:
         """True when round-rnd votes can no longer reach any single-value
-        phase-2 quorum (all outstanding acceptors could not tip any value
-        over the threshold)."""
+        phase-2 quorum: for every value, even if all outstanding acceptors
+        voted for it, its voters would not contain a quorum."""
         votes = self.votes.get(rnd, {})
         if not votes:
             return False
-        n = self.rs.spec.n
-        outstanding = n - len(votes)
-        by_val: Dict[Value, int] = {}
-        for val in votes.values():
-            by_val[val] = by_val.get(val, 0) + 1
-        best = max(by_val.values())
-        return best + outstanding < self.rs.q2(rnd) and len(by_val) > 1
+        by_val: Dict[Value, Set[int]] = {}
+        for acc, val in votes.items():
+            by_val.setdefault(val, set()).add(acc)
+        if len(by_val) <= 1:
+            return False
+        outstanding = set(range(self.rs.spec.n)) - set(votes)
+        return not any(self.rs.contains_q2(accs | outstanding, rnd)
+                       for accs in by_val.values())

@@ -20,10 +20,16 @@ from __future__ import annotations
 import itertools
 import math
 from dataclasses import dataclass, field
-from typing import FrozenSet, Iterable, Iterator, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, Iterator, Sequence, Tuple
+
+import numpy as np
 
 Acceptor = int
 Quorum = FrozenSet[Acceptor]
+
+# Threshold assigned to padding quorum rows in mask encodings: with zero
+# weights no indicator can ever reach it, so padded rows never satisfy.
+PAD_THRESHOLD = float(2 ** 30)
 
 
 # ---------------------------------------------------------------------------
@@ -85,6 +91,133 @@ def fast_paxos_suggested(n: int, variant: str = "three_quarters") -> Tuple[int, 
     if variant == "three_quarters":
         return n // 2 + 1, math.ceil(3 * n / 4)
     raise ValueError(f"unknown variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# Membership-mask encoding (DESIGN.md §2): the lingua franca between the
+# set-level quorum systems here and the batched Monte-Carlo engine / Pallas
+# masked-tally kernel.  Per phase, a (G, n) float32 weight matrix plus a (G,)
+# threshold vector; an acceptor subset S (0/1 indicator x) satisfies quorum
+# row g iff  W[g] . x >= t[g].  The three system families all fit:
+#
+#   cardinality  one row of ones, threshold q          (G = 1)
+#   weighted     one row of weights, phase threshold   (G = 1)
+#   explicit     one row per quorum: membership indicator, threshold |Q|
+#                (the row "saturates" only when every member is present)
+#
+# Padding rows carry zero weight and threshold PAD_THRESHOLD, so they are
+# never satisfied; padding acceptor columns carry zero weight.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class QuorumMasks:
+    """Mask encoding of one quorum system's three phases (numpy, host-side).
+
+    ``p1``/``p2c``/``p2f`` weights are (G, n) float32; thresholds (G,)
+    float32.  Build via the ``to_masks()`` method of ``QuorumSpec``,
+    ``ExplicitQuorumSystem`` or ``WeightedQuorumSystem``.
+    """
+
+    n: int
+    p1_w: np.ndarray
+    p1_t: np.ndarray
+    p2c_w: np.ndarray
+    p2c_t: np.ndarray
+    p2f_w: np.ndarray
+    p2f_t: np.ndarray
+    label: str = ""
+
+    def __post_init__(self) -> None:
+        for ph in ("p1", "p2c", "p2f"):
+            w, t = getattr(self, ph + "_w"), getattr(self, ph + "_t")
+            if w.ndim != 2 or w.shape[1] != self.n or t.shape != (w.shape[0],):
+                raise ValueError(
+                    f"{ph}: weights {w.shape} / thresholds {t.shape} "
+                    f"inconsistent with n={self.n}")
+            if (w < 0).any() or (t <= 0).any():
+                raise ValueError(f"{ph}: weights must be >= 0, thresholds > 0")
+
+    @property
+    def groups(self) -> Tuple[int, int, int]:
+        """(G1, G2c, G2f) quorum-row counts."""
+        return (self.p1_w.shape[0], self.p2c_w.shape[0], self.p2f_w.shape[0])
+
+    def pad_groups(self, g1: int, g2c: int, g2f: int) -> "QuorumMasks":
+        """Pad each phase to the given row count with never-satisfied rows."""
+        def pad(w, t, g):
+            G = w.shape[0]
+            if g < G:
+                raise ValueError(f"cannot pad {G} rows down to {g}")
+            return (np.concatenate([w, np.zeros((g - G, self.n), np.float32)]),
+                    np.concatenate([t, np.full(g - G, PAD_THRESHOLD,
+                                               np.float32)]))
+        p1w, p1t = pad(self.p1_w, self.p1_t, g1)
+        p2cw, p2ct = pad(self.p2c_w, self.p2c_t, g2c)
+        p2fw, p2ft = pad(self.p2f_w, self.p2f_t, g2f)
+        return QuorumMasks(self.n, p1w, p1t, p2cw, p2ct, p2fw, p2ft,
+                           self.label)
+
+    def embed(self, n: int) -> "QuorumMasks":
+        """Re-express over a larger cluster: acceptors >= self.n get zero
+        weight everywhere (present but never counted), letting systems of
+        different natural sizes share one batched mask table."""
+        if n < self.n:
+            raise ValueError(f"cannot embed n={self.n} into n={n}")
+        def wide(w):
+            return np.concatenate(
+                [w, np.zeros((w.shape[0], n - self.n), np.float32)], axis=1)
+        return QuorumMasks(n, wide(self.p1_w), self.p1_t, wide(self.p2c_w),
+                           self.p2c_t, wide(self.p2f_w), self.p2f_t,
+                           self.label)
+
+    # -- reference semantics (used by differential tests) -------------------
+    def satisfied(self, members: Iterable[Acceptor], phase: str) -> bool:
+        """Does the acceptor set satisfy some quorum row of ``phase``?"""
+        x = np.zeros(self.n, np.float32)
+        x[list(set(members))] = 1.0
+        w = getattr(self, phase + "_w")
+        t = getattr(self, phase + "_t")
+        return bool(((w @ x) >= t).any())
+
+    def fault_tolerance(self) -> Dict[str, int]:
+        """Max crashes each phase survives (some quorum stays intact),
+        by brute force over crash sets — small n only."""
+        def phase_ft(w, t):
+            f = 0
+            while f < self.n:
+                for crash in itertools.combinations(range(self.n), f + 1):
+                    alive = np.ones(self.n, np.float32)
+                    alive[list(crash)] = 0.0
+                    if not ((w @ alive) >= t).any():
+                        return f
+                f += 1
+            return f
+        ft1 = phase_ft(self.p1_w, self.p1_t)
+        ft2c = phase_ft(self.p2c_w, self.p2c_t)
+        ft2f = phase_ft(self.p2f_w, self.p2f_t)
+        return {"phase1": ft1, "phase2_classic": ft2c, "phase2_fast": ft2f,
+                "steady_state_classic": ft2c, "steady_state_fast": ft2f}
+
+
+def _card_masks(n: int, q1: int, q2c: int, q2f: int,
+                label: str = "") -> QuorumMasks:
+    ones = np.ones((1, n), np.float32)
+    return QuorumMasks(n, ones, np.array([q1], np.float32),
+                       ones.copy(), np.array([q2c], np.float32),
+                       ones.copy(), np.array([q2f], np.float32), label)
+
+
+def _explicit_masks(n: int, p1: Sequence[Quorum], p2c: Sequence[Quorum],
+                    p2f: Sequence[Quorum], label: str = "") -> QuorumMasks:
+    def rows(qs):
+        w = np.zeros((len(qs), n), np.float32)
+        for g, q in enumerate(qs):
+            w[g, list(q)] = 1.0
+        return w, np.array([len(q) for q in qs], np.float32)
+    p1w, p1t = rows(p1)
+    p2cw, p2ct = rows(p2c)
+    p2fw, p2ft = rows(p2f)
+    return QuorumMasks(n, p1w, p1t, p2cw, p2ct, p2fw, p2ft, label)
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +297,14 @@ class QuorumSpec:
         return (pairwise_intersect(p1, p2c)
                 and triple_intersect(p1, p2f, p2f))
 
+    # -- mask export (DESIGN.md §2) ----------------------------------------
+    def to_masks(self) -> QuorumMasks:
+        """One all-ones row per phase with the cardinality threshold — the
+        engine's mask path on this encoding is bit-identical to its
+        threshold path."""
+        return _card_masks(self.n, self.q1, self.q2c, self.q2f,
+                           f"card[{self.q1},{self.q2c},{self.q2f}]")
+
     # -- convenience -------------------------------------------------------
     def fault_tolerance(self) -> dict:
         """How many acceptor crashes each path tolerates while staying live."""
@@ -214,6 +355,12 @@ class ExplicitQuorumSystem:
                    tuple(spec.phase1_quorums()),
                    tuple(spec.phase2c_quorums()),
                    tuple(spec.phase2f_quorums()))
+
+    def to_masks(self) -> QuorumMasks:
+        """One membership-indicator row per quorum, threshold |Q| (a row
+        saturates only once every member is present)."""
+        return _explicit_masks(self.n, self.p1, self.p2c, self.p2f,
+                               f"explicit[n={self.n}]")
 
     @classmethod
     def grid(cls, cols: int, rows: int = 3) -> "ExplicitQuorumSystem":
@@ -297,6 +444,21 @@ class WeightedQuorumSystem:
                     s = frozenset(c)
                     if all(not self.is_quorum(s - {a}, phase) for a in s):
                         yield s
+
+    def to_explicit(self) -> ExplicitQuorumSystem:
+        """Enumerate minimal quorums into an explicit system (small n)."""
+        return ExplicitQuorumSystem(self.n, tuple(self.enumerate("p1")),
+                                    tuple(self.enumerate("p2c")),
+                                    tuple(self.enumerate("p2f")))
+
+    def to_masks(self) -> QuorumMasks:
+        """One weighted row per phase (Gifford-style voting thresholds)."""
+        w = np.asarray(self.weights, np.float32)[None, :]
+        return QuorumMasks(self.n, w, np.array([self.t1], np.float32),
+                           w.copy(), np.array([self.t2c], np.float32),
+                           w.copy(), np.array([self.t2f], np.float32),
+                           f"weighted[t1={self.t1},t2c={self.t2c},"
+                           f"t2f={self.t2f}]")
 
 
 def all_valid_specs(n: int) -> Iterator[QuorumSpec]:

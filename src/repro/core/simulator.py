@@ -35,7 +35,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 from .protocol import (ANY, Acceptor, Coordinator, Learner, Phase1b, Phase2a,
                        Phase2b, RoundSystem, choose_value, p2b_to_p1b,
                        pick_values)
-from .quorum import QuorumSpec
+from .quorum import ExplicitQuorumSystem, QuorumSpec
 
 
 # ---------------------------------------------------------------------------
@@ -126,9 +126,13 @@ class InstanceResult:
 
 class FastPaxosSim:
     """One simulated cluster running either Fast Paxos or Fast Flexible Paxos
-    (the difference is purely the ``QuorumSpec``)."""
+    (the difference is purely the quorum system).  ``spec`` may be a
+    cardinality ``QuorumSpec`` or an ``ExplicitQuorumSystem`` (grid,
+    weighted-derived, ...): all quorum checks route through the set-level
+    ``RoundSystem`` predicates."""
 
-    def __init__(self, spec: QuorumSpec, latency: LatencyModel | None = None,
+    def __init__(self, spec: "QuorumSpec | ExplicitQuorumSystem",
+                 latency: LatencyModel | None = None,
                  seed: int = 0, crashed: Sequence[int] = ()) -> None:
         self.spec = spec.validate()
         self.rs = RoundSystem(spec, n_coordinators=1, fast_rounds="odd")
@@ -203,7 +207,7 @@ class FastPaxosSim:
         (needs a phase-1 quorum of them), pick per IsPickableVal, commit
         classically with q2c."""
         votes = ist.votes_r1
-        if len(votes) < self.rs.q1(2):
+        if not self.rs.contains_q1(votes, 2):
             # Wait for more votes — re-check on each arrival.
             return
         ist.recovery_sent = True

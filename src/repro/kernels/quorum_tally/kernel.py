@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quorum import PAD_THRESHOLD
+
 BLOCK_S = 1024
 LANE = 128
 
@@ -103,6 +105,74 @@ def _tally_decide_kernel(votes_ref, q_ref, counts_ref, decide_ref,
         lane == 0, winner[:, None],
         jnp.where(lane == 1, max_cnt[:, None],
                   jnp.where(lane == 2, reached[:, None], 0)))
+
+
+# ---------------------------------------------------------------------------
+# Masked tally: arbitrary quorum systems as (G, n) weight rows.
+# ---------------------------------------------------------------------------
+
+def _masked_tally_kernel(votes_ref, w_ref, t_ref, out_ref, *, n_values: int):
+    """One VMEM pass per votes block: for every quorum row g and value v,
+    does the masked weight of v's voters reach t[g]?
+
+    The per-value hit matrix (BLOCK_S, n_pad) contracts against the resident
+    (G_pad, n_pad) weight matrix on the MXU — one 128x128-friendly matmul per
+    value — and the running minimum keeps the smallest satisfying value id.
+    Padding is inert by construction: padded acceptor columns carry zero
+    weight (and vote -1, matching no value), padded quorum rows carry
+    threshold PAD_THRESHOLD (never reached).
+    """
+    votes = votes_ref[...]                                 # (BS, n_pad) int32
+    w = w_ref[...]                                         # (G_pad, n_pad) f32
+    t = t_ref[...]                                         # (1, G_pad) f32
+    out = jnp.full((votes.shape[0], w.shape[0]), -1, jnp.int32)
+    for v in range(n_values - 1, -1, -1):   # descending: lowest id wins
+        hit = (votes == v).astype(jnp.float32)             # (BS, n_pad)
+        wsum = jax.lax.dot_general(hit, w, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        out = jnp.where(wsum >= t, v, out)                 # (BS, G_pad)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def masked_tally(votes: jax.Array, weights: jax.Array, thresholds: jax.Array,
+                 n_values: int, interpret: bool = True) -> jax.Array:
+    """(S, n) votes x (G, n) quorum weights -> (S, G) satisfied-value ids.
+
+    Semantics match ``ref.masked_tally``: entry (s, g) is the smallest value
+    id whose voters' masked weight reaches ``thresholds[g]``, else -1.
+    Weights and thresholds are traced operands (the whole mask table of a
+    sweep lives in VMEM), so swapping systems never recompiles.
+    """
+    S, n = votes.shape
+    G = weights.shape[0]
+    if weights.shape != (G, n) or thresholds.shape != (G,):
+        raise ValueError(f"weights {weights.shape} / thresholds "
+                         f"{thresholds.shape} inconsistent with votes (S, {n})")
+    n_pad = max(LANE, ((n + LANE - 1) // LANE) * LANE)
+    g_pad = max(LANE, ((G + LANE - 1) // LANE) * LANE)
+    s_pad = ((S + BLOCK_S - 1) // BLOCK_S) * BLOCK_S
+    votes_p = jnp.full((s_pad, n_pad), -1, jnp.int32).at[:S, :n].set(
+        votes.astype(jnp.int32))
+    w_p = jnp.zeros((g_pad, n_pad), jnp.float32).at[:G, :n].set(
+        weights.astype(jnp.float32))
+    # padded rows: zero weight and an unreachable threshold -> never satisfied
+    t_p = jnp.full((1, g_pad), jnp.float32(PAD_THRESHOLD)).at[0, :G].set(
+        thresholds.astype(jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_masked_tally_kernel, n_values=n_values),
+        grid=(s_pad // BLOCK_S,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_S, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((g_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, g_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_S, g_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, g_pad), jnp.int32),
+        interpret=interpret,
+    )(votes_p, w_p, t_p)
+    return out[:S, :G]
 
 
 @functools.partial(jax.jit, static_argnums=(1, 3))

@@ -29,3 +29,12 @@ def tally_decide(votes: jax.Array, n_values: int, q) -> tuple:
     """Fused (counts, winner, max_count, reached) in one kernel pass; ``q``
     is traced (SMEM scalar), so threshold sweeps reuse one compile."""
     return kernel.tally_decide(votes, n_values, q, interpret=not _on_tpu())
+
+
+def masked_tally(votes: jax.Array, weights: jax.Array, thresholds: jax.Array,
+                 n_values: int) -> jax.Array:
+    """(S, n) votes x (G, n) quorum-mask rows -> (S, G) satisfied-value ids
+    (-1 when no value saturates the row); weights/thresholds are traced, so
+    sweeping quorum systems reuses one compile."""
+    return kernel.masked_tally(votes, weights, thresholds, n_values,
+                               interpret=not _on_tpu())

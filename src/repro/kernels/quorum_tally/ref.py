@@ -29,3 +29,25 @@ def tally_decide(votes: jnp.ndarray, n_values: int, q) -> tuple:
     winner = counts.argmax(axis=-1).astype(jnp.int32)
     max_count = counts.max(axis=-1)
     return counts, winner, max_count, max_count >= q
+
+
+def masked_tally(votes: jnp.ndarray, weights: jnp.ndarray,
+                 thresholds: jnp.ndarray, n_values: int) -> jnp.ndarray:
+    """Oracle for the masked-tally kernel: per-quorum satisfied value.
+
+    votes:      (S, n) int32, entries in [0, n_values); < 0 means "no vote".
+    weights:    (G, n) float32 per-quorum acceptor weights.
+    thresholds: (G,)  float32; quorum g is satisfied by value v when the
+                weights of the acceptors voting v sum to >= thresholds[g].
+
+    Returns (S, G) int32: the smallest value id satisfying quorum g (at most
+    one exists for any system whose fast quorums pairwise intersect), or -1
+    when no value does — which is always the case for padding rows
+    (zero weights, PAD_THRESHOLD).
+    """
+    hit = (votes[:, None, :] == jnp.arange(n_values,
+                                           dtype=votes.dtype)[None, :, None])
+    wsum = jnp.einsum("svn,gn->svg", hit.astype(weights.dtype), weights)
+    sat = wsum >= thresholds                               # (S, V, G)
+    first = jnp.argmax(sat, axis=1).astype(jnp.int32)      # lowest value id
+    return jnp.where(sat.any(axis=1), first, -1)

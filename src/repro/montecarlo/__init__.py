@@ -15,13 +15,22 @@ Layout (DESIGN.md §2):
                  workload, WAN, lossy acceptors) bundling a delay model with
                  race geometry.
 
+Beyond cardinality thresholds, the engine scores *general* quorum systems
+(grids, weighted voting, hand-built explicit sets) encoded as membership
+masks: ``build_mask_table`` batches any mix of systems into traced (M, G, n)
+weight / (M, G) threshold arrays, and ``race_masked`` / ``fast_path_masked``
+evaluate all G quorums of all M systems in the same single-compile pass —
+bit-identical to the threshold path on cardinality specs (DESIGN.md §2).
+
 The old per-spec API lives on as a compatibility shim in
 ``repro.core.jax_sim``.
 """
 from . import engine, latency, scenarios  # noqa: F401
-from .engine import (build_spec_table, classic_path, fast_path,  # noqa: F401
-                     race, summarize)
-from .latency import (LossyDelay, ParetoDelay,  # noqa: F401
+from .engine import (build_mask_table, build_spec_table,  # noqa: F401
+                     classic_path, fast_path, fast_path_masked, race,
+                     race_masked, summarize)
+from .latency import (CrashedDelay, LossyDelay, ParetoDelay,  # noqa: F401
                       ShiftedLognormalDelay, WanDelay)
-from .scenarios import (Scenario, conflict_free, k_way_race,  # noqa: F401
-                        lossy_acceptors, mixed_workload, wan)
+from .scenarios import (Scenario, conflict_free, grid_wan,  # noqa: F401
+                        k_way_race, lossy_acceptors, mixed_workload, wan,
+                        weighted_acceptors)

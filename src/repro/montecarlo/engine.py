@@ -35,7 +35,7 @@ from typing import Dict, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.quorum import QuorumSpec
+from repro.core.quorum import QuorumMasks, QuorumSpec
 
 from . import latency as lat_mod
 from .latency import LOST_MS, default_delay
@@ -47,7 +47,8 @@ UNDECIDED_MS = LOST_MS / 2
 
 # Incremented at trace time inside each jitted entry point; benchmarks assert
 # a full spec-table sweep costs exactly one trace (no per-spec re-jit).
-TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0}
+TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0,
+                                "race_masked": 0, "fast_path_masked": 0}
 
 
 def build_spec_table(specs: Sequence[QuorumSpec]) -> jax.Array:
@@ -56,6 +57,49 @@ def build_spec_table(specs: Sequence[QuorumSpec]) -> jax.Array:
     if len(ns) != 1:
         raise ValueError(f"spec table mixes cluster sizes {sorted(ns)}")
     return jnp.array([[s.q1, s.q2c, s.q2f] for s in specs], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Mask tables: general quorum systems as traced membership/weight matrices.
+# ---------------------------------------------------------------------------
+
+MASK_KEYS = ("p1_w", "p1_t", "p2c_w", "p2c_t", "p2f_w", "p2f_t")
+
+
+def build_mask_table(systems: Sequence) -> Dict[str, jax.Array]:
+    """Batch M quorum systems into one traced mask table (DESIGN.md §2).
+
+    ``systems`` may mix ``QuorumSpec`` / ``ExplicitQuorumSystem`` /
+    ``WeightedQuorumSystem`` (anything with ``to_masks()``) and raw
+    ``QuorumMasks``; all must share one n.  Each phase is padded to the
+    max row count with never-satisfied rows, giving a dict pytree of
+    ``*_w (M, G, n)`` weight and ``*_t (M, G)`` threshold float32 arrays.
+    Tables of the same shape are interchangeable without recompiling."""
+    masks = [s if isinstance(s, QuorumMasks) else s.to_masks()
+             for s in systems]
+    ns = {m.n for m in masks}
+    if len(ns) != 1:
+        raise ValueError(f"mask table mixes cluster sizes {sorted(ns)}")
+    g1 = max(m.groups[0] for m in masks)
+    g2c = max(m.groups[1] for m in masks)
+    g2f = max(m.groups[2] for m in masks)
+    padded = [m.pad_groups(g1, g2c, g2f) for m in masks]
+    return {k: jnp.stack([jnp.asarray(getattr(m, k), jnp.float32)
+                          for m in padded])
+            for k in MASK_KEYS}
+
+
+def _check_mask_table(table: Dict[str, jax.Array], n: int) -> None:
+    missing = [k for k in MASK_KEYS if k not in table]
+    if missing:
+        raise ValueError(f"mask table missing entries {missing}; "
+                         f"build with build_mask_table()")
+    for ph in ("p1", "p2c", "p2f"):
+        w, t = table[ph + "_w"], table[ph + "_t"]
+        if w.ndim != 3 or w.shape[-1] != n or t.shape != w.shape[:2]:
+            raise ValueError(
+                f"mask table phase {ph}: weights {w.shape} / thresholds "
+                f"{t.shape} not (M, G, n={n}) / (M, G)")
 
 
 def _check_table(spec_table: jax.Array) -> None:
@@ -125,13 +169,25 @@ def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
     classic = d_2a + d_2b
     classic = jnp.where(classic < UNDECIDED_MS, classic, BIG)
 
+    # presort with explicit permutations: the threshold decide consumes only
+    # the sorted values, but the masked decide re-weights acceptors in
+    # arrival order, so argsort indices ride along (XLA dead-code-eliminates
+    # whichever outputs a caller leaves unused).
+    val_perm = jnp.argsort(val_arr, axis=-1).astype(jnp.int32)
+    arr_perm = jnp.argsort(arrive, axis=-1).astype(jnp.int32)
+    cls_perm = jnp.argsort(classic, axis=-1).astype(jnp.int32)
+
     return {
         "counts": counts,                                # (S, K) int32
         "winner": winner,                                # (S,) int32
         "max_cnt": max_cnt,                              # (S,) int32
-        "sorted_val_arrive": jnp.sort(val_arr, axis=-1),  # (S, K, n)
-        "sorted_arrive": jnp.sort(arrive, axis=-1),       # (S, n)
-        "sorted_classic": jnp.sort(classic, axis=-1),     # (S, n)
+        "votes": votes,                                  # (S, n) int32
+        "sorted_val_arrive": jnp.take_along_axis(val_arr, val_perm, axis=-1),
+        "perm_val_arrive": val_perm,                     # (S, K, n)
+        "sorted_arrive": jnp.take_along_axis(arrive, arr_perm, axis=-1),
+        "perm_arrive": arr_perm,                         # (S, n)
+        "sorted_classic": jnp.take_along_axis(classic, cls_perm, axis=-1),
+        "perm_classic": cls_perm,                        # (S, n)
     }
 
 
@@ -149,6 +205,101 @@ def _decide(draws: Dict, q1: jax.Array, q2c: jax.Array,
 
     t_detect = _kth(draws["sorted_arrive"], q1)
     t_recover = t_detect + _kth(draws["sorted_classic"], q2c)
+
+    latency = jnp.where(fast_ok, t_fast, t_recover)
+    undecided = latency >= UNDECIDED_MS
+    return {
+        "fast_winner": jnp.where(fast_ok, winner, -1),
+        "reached_fast": fast_ok,
+        "recovery": ~fast_ok & ~undecided,
+        "undecided": undecided,
+        "latency_ms": latency,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masked decide path: arbitrary quorum systems (DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def _sat_time(sorted_x: jax.Array, perm: jax.Array, w: jax.Array,
+              t: jax.Array) -> jax.Array:
+    """Earliest instant some quorum row's masked arrival indicator saturates.
+
+    ``sorted_x (..., n)`` ascending arrival times, ``perm (..., n)`` the
+    argsort indices (sorted position -> acceptor id), ``w (G, n)`` weights,
+    ``t (G,)`` thresholds.  Row g saturates at the first sorted position
+    whose cumulative (arrival-ordered) weight reaches t[g]; its time is the
+    value there — the LOST sentinel when the saturating arrival never
+    happened, which downstream classifies as "not reached", exactly like the
+    threshold path's k-th order statistic.  Returns the min over rows.
+
+    On an all-ones row with threshold q this is bit-identical to
+    ``_kth(sorted_x, q)``: cumulative weight i+1 first reaches q at sorted
+    position q-1.
+    """
+    G = w.shape[0]
+    w_perm = jnp.take(w, perm, axis=1)                     # (G, ..., n)
+    csum = jnp.cumsum(w_perm, axis=-1)
+    ok = csum >= t.reshape((G,) + (1,) * perm.ndim)        # monotone in n
+    idx = jnp.argmax(ok, axis=-1).astype(jnp.int32)        # first saturation
+    reached = ok[..., -1]
+    x = jnp.broadcast_to(sorted_x, csum.shape)
+    tt = jnp.take_along_axis(x, idx[..., None], axis=-1)[..., 0]
+    tt = jnp.where(reached, tt, BIG)
+    return tt.min(axis=0)
+
+
+def _masked_vote_winner(votes: jax.Array, mask_table: Dict[str, jax.Array],
+                        k_proposers: int, use_kernel: bool):
+    """Per-sample-per-system fast-quorum vote check: which value (if any)
+    gathered a full masked phase-2f quorum of round-1 *votes*.
+
+    All G fast rows of all M systems go through the masked-tally kernel (or
+    its jnp oracle) in one flattened pass.  Returns ``winner (S, M) int32``
+    (-1 when no value saturates any row) and ``reached (S, M) bool``.
+    """
+    M, Gf, n = mask_table["p2f_w"].shape
+    w_flat = mask_table["p2f_w"].reshape(M * Gf, n)
+    t_flat = mask_table["p2f_t"].reshape(M * Gf)
+    if use_kernel:
+        from repro.kernels.quorum_tally import ops as qt_ops
+        per_q = qt_ops.masked_tally(votes, w_flat, t_flat, k_proposers)
+    else:
+        from repro.kernels.quorum_tally import ref as qt_ref
+        per_q = qt_ref.masked_tally(votes, w_flat, t_flat, k_proposers)
+    per_q = per_q.reshape(votes.shape[0], M, Gf)           # (S, M, G)
+    nohit = jnp.int32(k_proposers)                         # > any value id
+    best = jnp.where(per_q < 0, nohit, per_q).min(axis=-1)  # (S, M)
+    reached = best < nohit
+    winner = jnp.where(reached, best, -1).astype(jnp.int32)
+    return winner, reached
+
+
+def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
+                   winner: jax.Array,
+                   reached_votes: jax.Array) -> Dict[str, jax.Array]:
+    """Apply one system's (traced) quorum masks to the presorted draws.
+
+    Mirrors ``_decide`` exactly, with each k-th-order-statistic gather
+    replaced by a masked saturation over the system's quorum rows; on
+    cardinality-encoded masks the two paths are bit-identical.
+    """
+    widx = jnp.clip(winner, 0, draws["sorted_val_arrive"].shape[1] - 1)
+    win_sorted = jnp.take_along_axis(
+        draws["sorted_val_arrive"], widx[:, None, None], axis=1)[:, 0, :]
+    win_perm = jnp.take_along_axis(
+        draws["perm_val_arrive"], widx[:, None, None], axis=1)[:, 0, :]
+    t_fast = _sat_time(win_sorted, win_perm, masks["p2f_w"], masks["p2f_t"])
+    # a fast commit needs a full masked quorum of *votes* AND the learner
+    # actually receiving every 2b that saturates it (lost 2bs leave t_fast
+    # at the sentinel) — the same conjunction as the threshold path.
+    fast_ok = reached_votes & (t_fast < UNDECIDED_MS)
+
+    t_detect = _sat_time(draws["sorted_arrive"], draws["perm_arrive"],
+                         masks["p1_w"], masks["p1_t"])
+    t_recover = t_detect + _sat_time(draws["sorted_classic"],
+                                     draws["perm_classic"],
+                                     masks["p2c_w"], masks["p2c_t"])
 
     latency = jnp.where(fast_ok, t_fast, t_recover)
     undecided = latency >= UNDECIDED_MS
@@ -191,6 +342,62 @@ def race(key: jax.Array, spec_table: jax.Array, offsets: jax.Array,
     return jax.vmap(lambda q: _decide(draws, q[0], q[1], q[2]))(spec_table)
 
 
+@functools.partial(jax.jit, static_argnames=("n", "k_proposers", "samples",
+                                             "use_kernel"))
+def race_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
+                offsets: jax.Array, delay=None, *, n: int, k_proposers: int,
+                samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """``race`` over arbitrary quorum systems encoded as membership masks.
+
+    ``mask_table`` is a ``build_mask_table`` dict — M systems' per-phase
+    (M, G, n) weights and (M, G) thresholds, all traced: same-shape tables
+    reuse one compile, and every system sees the same ``_sample_race`` draws
+    as the threshold path (common random numbers), so on cardinality-encoded
+    masks the outputs are bit-identical to ``race``.  Returns the same
+    per-system-per-sample (M, S) dict as ``race``.
+    """
+    _check_mask_table(mask_table, n)
+    TRACE_COUNTS["race_masked"] += 1
+    if delay is None:
+        delay = default_delay()
+    draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
+                         samples=samples, use_kernel=use_kernel)
+    winner, reached = _masked_vote_winner(draws["votes"], mask_table,
+                                          k_proposers, use_kernel)
+    return jax.vmap(lambda m, w, r: _decide_masked(draws, m, w, r),
+                    in_axes=(0, 1, 1))(mask_table, winner, reached)
+
+
+def _fast_path_draws(key: jax.Array, delay, n: int,
+                     samples: int) -> jax.Array:
+    """(S, n) conflict-free client -> acceptor -> learner path times, lost
+    hops at the sentinel.  Shared by ``fast_path`` and ``fast_path_masked``
+    so the two paths draw identical delays by construction (the masked /
+    threshold bit-identity contract rests on it)."""
+    k1, k2 = jax.random.split(key)
+    d1 = delay.sample_hops(k1, (samples, n, 1), lat_mod.PROPOSAL)[..., 0]
+    d2 = delay.sample_hops(k2, (samples, n), lat_mod.TO_LEARNER)
+    path = d1 + d2
+    return jnp.where(path < UNDECIDED_MS, path, BIG)   # lost => never arrives
+
+
+@functools.partial(jax.jit, static_argnames=("n", "samples"))
+def fast_path_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
+                     delay=None, *, n: int, samples: int) -> jax.Array:
+    """(M, S) conflict-free fast-path commit latencies under general quorum
+    systems: the saturation instant of each system's phase-2f masks over the
+    client -> acceptor -> learner paths; one compile for the whole table."""
+    _check_mask_table(mask_table, n)
+    TRACE_COUNTS["fast_path_masked"] += 1
+    if delay is None:
+        delay = default_delay()
+    path = _fast_path_draws(key, delay, n, samples)
+    perm = jnp.argsort(path, axis=-1).astype(jnp.int32)
+    srt = jnp.take_along_axis(path, perm, axis=-1)
+    return jax.vmap(lambda m: _sat_time(srt, perm, m["p2f_w"],
+                                        m["p2f_t"]))(mask_table)
+
+
 @functools.partial(jax.jit, static_argnames=("n", "samples"))
 def fast_path(key: jax.Array, spec_table: jax.Array, delay=None, *,
               n: int, samples: int) -> jax.Array:
@@ -200,12 +407,7 @@ def fast_path(key: jax.Array, spec_table: jax.Array, delay=None, *,
     TRACE_COUNTS["fast_path"] += 1
     if delay is None:
         delay = default_delay()
-    k1, k2 = jax.random.split(key)
-    d1 = delay.sample_hops(k1, (samples, n, 1), lat_mod.PROPOSAL)[..., 0]
-    d2 = delay.sample_hops(k2, (samples, n), lat_mod.TO_LEARNER)
-    path = d1 + d2
-    path = jnp.where(path < UNDECIDED_MS, path, BIG)   # lost => never arrives
-    srt = jnp.sort(path, axis=-1)
+    srt = jnp.sort(_fast_path_draws(key, delay, n, samples), axis=-1)
     return jax.vmap(lambda q: _kth(srt, q[2]))(spec_table)
 
 

@@ -189,6 +189,37 @@ class LossyDelay:
         return cls(*leaves)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class CrashedDelay:
+    """Per-acceptor fault injection: every hop touching a crashed acceptor
+    is lost (delay ``LOST_MS``), so crashed nodes never vote and their 2bs
+    never arrive.  ``crashed`` is an (n,) bool leaf — which acceptors are
+    down is a traced operand, so sweeping crash sets (e.g. a grid row vs a
+    grid column) reuses one compile.  Mirrors ``FastPaxosSim(crashed=...)``.
+    """
+
+    inner: object
+    crashed: jax.Array              # (n,) bool
+
+    def sample_hops(self, key: jax.Array, shape, kind: str = PROPOSAL) -> jax.Array:
+        d = self.inner.sample_hops(key, shape, kind)
+        if kind == PROPOSAL:                               # (S, n, K)
+            mask = self.crashed[None, :, None]
+        elif kind in (TO_LEARNER, FROM_COORDINATOR, TO_COORDINATOR):
+            mask = self.crashed[None, :]                   # (S, n)
+        else:                                              # client -> leader
+            return d
+        return jnp.where(mask, jnp.asarray(LOST_MS, d.dtype), d)
+
+    def tree_flatten(self):
+        return (self.inner, self.crashed), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
 def default_delay() -> ShiftedLognormalDelay:
     """The paper-§6 EC2 fit shared with the discrete-event simulator."""
     return ShiftedLognormalDelay()

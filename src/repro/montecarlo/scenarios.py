@@ -1,27 +1,41 @@
 """Named scenario builders: a scenario bundles race geometry (how many
 proposers, at what offsets) with a delay model, and knows how to run itself
-over a quorum-spec table in one engine call.
+over a quorum-spec table — or a general quorum-system *mask* table — in one
+engine call.
 
 Builders cover the paper's §6 workloads plus the deployments the relaxation
 is aimed at:
 
-  conflict_free     Fig. 2a — one proposer, pure fast-path order statistics
-  k_way_race        Fig. 2b/2c generalized — K proposers staggered by Δ
-  mixed_workload    fraction p of commands race, the rest are clean
-  wan               geo-distributed acceptors (multi-region delay matrix)
-  lossy_acceptors   i.i.d. message loss on every hop
+  conflict_free      Fig. 2a — one proposer, pure fast-path order statistics
+  k_way_race         Fig. 2b/2c generalized — K proposers staggered by Δ
+  mixed_workload     fraction p of commands race, the rest are clean
+  wan                geo-distributed acceptors (multi-region delay matrix)
+  lossy_acceptors    i.i.d. message loss on every hop
+  grid_wan           §6 closing remark: a 3xC grid system whose rows ARE the
+                     WAN regions (returns scenario + masks)
+  weighted_acceptors Gifford-style weighted voting with optional crashes
+                     (returns scenario + masks)
+
+The last two pair a workload with the quorum system it is built around and
+support per-acceptor fault injection (``CrashedDelay``), so quorum structure
+and failure placement can be studied together — e.g. crashing a whole grid
+row versus the same number of scattered acceptors.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.quorum import (ExplicitQuorumSystem, QuorumMasks,
+                               WeightedQuorumSystem)
+
 from . import engine
-from .latency import (LossyDelay, ShiftedLognormalDelay, WanDelay,
-                      default_delay)
+from .latency import (CrashedDelay, LossyDelay, ShiftedLognormalDelay,
+                      WanDelay, default_delay)
 
 
 @dataclass(frozen=True)
@@ -46,11 +60,21 @@ class Scenario:
         Returns (M, S)-shaped ``latency_ms`` plus race outcome flags (for the
         racing fraction) — one engine compile per (shape, scenario type).
         """
+        return self._run(key, spec_table, samples, use_kernel, masked=False)
+
+    def run_masked(self, key: jax.Array, mask_table: Dict[str, jax.Array],
+                   samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
+        """``run`` over a ``build_mask_table`` table of general quorum
+        systems (grids, weighted, explicit); same outputs and single-compile
+        behaviour, same sampled delays as the threshold path."""
+        return self._run(key, mask_table, samples, use_kernel, masked=True)
+
+    def _run(self, key, table, samples, use_kernel, masked):
+        m = table["p1_w"].shape[0] if masked else table.shape[0]
         if self.k_proposers == 1 or self.conflict_frac == 0.0:
-            lat = engine.fast_path(key, spec_table, self.delay,
-                                   n=self.n, samples=samples)
-            m = spec_table.shape[0]
-            undecided = lat >= engine.UNDECIDED_MS   # q2f-th path never arrived
+            fast = engine.fast_path_masked if masked else engine.fast_path
+            lat = fast(key, table, self.delay, n=self.n, samples=samples)
+            undecided = lat >= engine.UNDECIDED_MS   # fast path never arrived
             return {"latency_ms": lat, "reached_fast": ~undecided,
                     "recovery": jnp.zeros((m, samples), bool),
                     "undecided": undecided,
@@ -59,14 +83,15 @@ class Scenario:
 
         k_race, k_free = jax.random.split(key)
         n_conf = max(1, int(round(samples * self.conflict_frac)))
-        out = engine.race(k_race, spec_table, self.offsets_ms, self.delay,
-                          n=self.n, k_proposers=self.k_proposers,
-                          samples=n_conf, use_kernel=use_kernel)
+        race = engine.race_masked if masked else engine.race
+        out = race(k_race, table, self.offsets_ms, self.delay,
+                   n=self.n, k_proposers=self.k_proposers,
+                   samples=n_conf, use_kernel=use_kernel)
         n_free = samples - n_conf
         if n_free > 0:
             scen_free = Scenario(self.name, self.n, 1, self.offsets_ms[:1],
                                  self.delay)
-            free = scen_free.run(k_free, spec_table, n_free)
+            free = scen_free._run(k_free, table, n_free, use_kernel, masked)
             out = {k: jnp.concatenate([free[k], out[k]], axis=-1)
                    for k in out}
         return out
@@ -79,17 +104,26 @@ class Scenario:
         gathered enough votes (message loss) are reported separately via
         ``undecided_rate`` instead of polluting the distribution with the
         LOST_MS sentinel."""
-        out = self.run(key, spec_table, samples, use_kernel)
-        lat = jnp.where(out["undecided"], jnp.nan, out["latency_ms"])
-        q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99]), axis=-1)
-        return {
-            "mean_ms": jnp.nanmean(lat, axis=-1),
-            "p50_ms": q[0],
-            "p95_ms": q[1],
-            "p99_ms": q[2],
-            "recovery_rate": out["recovery"].mean(axis=-1),
-            "undecided_rate": out["undecided"].mean(axis=-1),
-        }
+        return _summarize(self.run(key, spec_table, samples, use_kernel))
+
+    def summary_masked(self, key: jax.Array, mask_table: Dict[str, jax.Array],
+                       samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
+        """``summary`` over a general quorum-system mask table."""
+        return _summarize(self.run_masked(key, mask_table, samples,
+                                          use_kernel))
+
+
+def _summarize(out: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    lat = jnp.where(out["undecided"], jnp.nan, out["latency_ms"])
+    q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99]), axis=-1)
+    return {
+        "mean_ms": jnp.nanmean(lat, axis=-1),
+        "p50_ms": q[0],
+        "p95_ms": q[1],
+        "p99_ms": q[2],
+        "recovery_rate": out["recovery"].mean(axis=-1),
+        "undecided_rate": out["undecided"].mean(axis=-1),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -142,3 +176,66 @@ def lossy_acceptors(loss_prob: float = 0.01, k: int = 2,
                        loss_prob)
     offs = delta_ms * jnp.arange(k, dtype=jnp.float32)
     return Scenario("lossy_acceptors", n, k, offs, delay)
+
+
+# ---------------------------------------------------------------------------
+# General-quorum-system workloads (the §6 closing remark): each builder
+# returns (scenario, masks) — the workload and the quorum system it is
+# built around — ready for ``engine.build_mask_table`` + ``run_masked``.
+# ---------------------------------------------------------------------------
+
+def _crash_mask(n: int, crashed: Sequence[int]) -> jnp.ndarray:
+    m = jnp.zeros((n,), bool)
+    if len(tuple(crashed)):
+        m = m.at[jnp.array(sorted(set(crashed)), jnp.int32)].set(True)
+    return m
+
+
+def grid_wan(cols: int = 3, k: int = 2, inter_region_ms: float = 30.0,
+             delta_ms: float = 0.5,
+             crashed: Sequence[int] = ()) -> Tuple[Scenario, QuorumMasks]:
+    """A 3xC grid quorum system deployed so each grid *row* is a WAN region.
+
+    Acceptor r*cols + c sits in region r; phase-2 classic quorums (columns)
+    span all three regions, fast quorums (row pairs) need two full regions —
+    quorum choice is now about *which* acceptors, the regime the paper's
+    relaxation targets.  ``crashed`` injects acceptor failures (e.g. a whole
+    row = a region outage vs the same count scattered across regions).
+    """
+    system = ExplicitQuorumSystem.grid(cols)
+    n, rows = system.n, 3
+    ow = inter_region_ms * (1.0 - jnp.eye(rows))
+    delay = WanDelay(oneway_ms=ow,
+                     acceptor_region=(jnp.arange(n, dtype=jnp.int32) // cols),
+                     proposer_region=jnp.arange(k, dtype=jnp.int32) % rows,
+                     learner_region=jnp.int32(0))
+    if len(tuple(crashed)):
+        delay = CrashedDelay(delay, _crash_mask(n, crashed))
+    offs = delta_ms * jnp.arange(k, dtype=jnp.float32)
+    return Scenario("grid_wan", n, k, offs, delay), system.to_masks()
+
+
+def weighted_acceptors(weights: Sequence[int] = (2, 2, 2, 1, 1, 1, 1, 1, 1, 1, 1),
+                       thresholds: Optional[Tuple[int, int, int]] = None,
+                       k: int = 2, delta_ms: float = 0.5,
+                       crashed: Sequence[int] = ()) -> Tuple[Scenario, QuorumMasks]:
+    """Gifford-style weighted voting: heavyweight acceptors shrink quorum
+    *cardinality* on the fast path while the FFP weight inequalities keep
+    safety.  Default thresholds mirror the paper-headline shape in weight
+    space — t1 = ceil(3W/4), then the minimal valid phase-2 thresholds
+    (t1 + t2c > W, t1 + 2*t2f > 2W) — so all three phases tolerate
+    crashes; ``crashed`` injects failures (a heavy node costs more than a
+    light one).
+    """
+    n, total = len(weights), sum(weights)
+    if thresholds is None:
+        t1 = math.ceil(3 * total / 4)
+        t2c = total - t1 + 1                    # Eq.13 analogue, weights
+        t2f = (2 * total - t1) // 2 + 1         # Eq.14 analogue, weights
+        thresholds = (t1, t2c, t2f)
+    system = WeightedQuorumSystem(tuple(weights), *thresholds).validate()
+    delay = default_delay()
+    if len(tuple(crashed)):
+        delay = CrashedDelay(delay, _crash_mask(n, crashed))
+    offs = delta_ms * jnp.arange(k, dtype=jnp.float32)
+    return Scenario("weighted_acceptors", n, k, offs, delay), system.to_masks()

@@ -61,6 +61,62 @@ def test_quorum_tally_decide_ignores_missing_votes():
 
 
 # ---------------------------------------------------------------------------
+# masked tally (general quorum systems)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("G", [1, 4, 12])
+@pytest.mark.parametrize("S,n,V", [(257, 9, 2), (1100, 11, 3), (100, 6, 4)])
+def test_masked_tally_kernel_vs_ref(S, n, V, G):
+    """Kernel vs jnp oracle over random weights/thresholds, including no-vote
+    -1 entries and (for G >= 4) an all-padding quorum row that must never be
+    satisfied."""
+    kv, kw, kt = jax.random.split(jax.random.PRNGKey(S * 7 + G), 3)
+    votes = jax.random.randint(kv, (S, n), -1, V)        # -1 = no vote
+    w = jax.random.randint(kw, (G, n), 0, 4).astype(jnp.float32)
+    t = jax.random.randint(kt, (G,), 1, n + 2).astype(jnp.float32)
+    if G >= 4:                                           # all-padding row
+        w = w.at[-1].set(0.0)
+        t = t.at[-1].set(float(2 ** 30))
+    got = qt_ops.masked_tally(votes, w, t, V)
+    want = qt_ref.masked_tally(votes, w, t, V)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if G >= 4:
+        assert bool((got[:, -1] == -1).all())            # padding inert
+
+
+def test_masked_tally_explicit_grid_rows():
+    """Deterministic check on the §6 grid: a fast row-pair quorum is
+    satisfied only when every member votes the same value."""
+    from repro.core.quorum import ExplicitQuorumSystem
+    masks = ExplicitQuorumSystem.grid(3).to_masks()      # n=9, fast = 2 rows
+    w, t = jnp.asarray(masks.p2f_w), jnp.asarray(masks.p2f_t)
+    rows01 = [0, 1, 2, 3, 4, 5]
+    votes = np.full((3, 9), -1, np.int32)
+    votes[0, rows01] = 1                                 # rows 0+1 vote v1
+    votes[1, rows01] = 1
+    votes[1, 3] = 0                                      # one defector
+    votes[2, :] = 0                                      # unanimous v0
+    got = np.asarray(qt_ops.masked_tally(jnp.asarray(votes), w, t, 2))
+    want = np.asarray(qt_ref.masked_tally(jnp.asarray(votes), w, t, 2))
+    np.testing.assert_array_equal(got, want)
+    assert got[0].max() == 1 and (got[0] >= 0).sum() == 1   # exactly {0,1}
+    assert (got[1] == -1).all()                             # defector breaks
+    assert (got[2] == 0).all()                              # every pair
+
+
+def test_masked_tally_lowest_value_wins_ties():
+    """When a (non-FFP) row is satisfiable by two values at once, the kernel
+    must report the smallest value id, matching the oracle."""
+    votes = jnp.array([[0, 0, 1, 1]], jnp.int32)
+    w = jnp.ones((1, 4), jnp.float32)
+    t = jnp.array([2.0], jnp.float32)
+    got = qt_ops.masked_tally(votes, w, t, 2)
+    want = qt_ref.masked_tally(votes, w, t, 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(got[0, 0]) == 0
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 

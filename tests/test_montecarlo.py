@@ -7,9 +7,10 @@ import pytest
 
 from repro.core import jax_sim
 from repro.core.quorum import QuorumSpec, all_valid_specs
-from repro.montecarlo import (LossyDelay, ParetoDelay, Scenario,
-                              ShiftedLognormalDelay, WanDelay,
-                              build_spec_table, engine, scenarios)
+from repro.montecarlo import (CrashedDelay, LossyDelay, ParetoDelay,
+                              Scenario, ShiftedLognormalDelay, WanDelay,
+                              build_mask_table, build_spec_table, engine,
+                              scenarios)
 
 KEY = jax.random.PRNGKey(7)
 FFP = QuorumSpec.paper_headline(11)
@@ -194,3 +195,53 @@ def test_summarize_shapes():
     s = engine.summarize(lat)
     for v in s.values():
         assert v.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# general quorum systems through the scenario layer
+# ---------------------------------------------------------------------------
+
+def test_crashed_delay_loses_every_hop_of_crashed_acceptors():
+    crashed = jnp.zeros((6,), bool).at[2].set(True)
+    d = CrashedDelay(ShiftedLognormalDelay(), crashed)
+    hops = d.sample_hops(KEY, (500, 6), kind="to_learner")
+    assert bool((hops[:, 2] >= 1e8).all())
+    assert bool((hops[:, 0] < 1e8).all())
+    prop = d.sample_hops(KEY, (500, 6, 2), kind="proposal")
+    assert bool((prop[:, 2, :] >= 1e8).all())
+    leaves = jax.tree_util.tree_leaves(d)
+    assert leaves                      # registered pytree (traced crash set)
+
+
+def test_grid_wan_scenario_masked_outcomes_partition():
+    scen, masks = scenarios.grid_wan(cols=3, k=2, delta_ms=0.3)
+    out = scen.run_masked(KEY, build_mask_table([masks]), 4_000)
+    total = (out["reached_fast"].astype(jnp.int32)
+             + out["recovery"].astype(jnp.int32)
+             + out["undecided"].astype(jnp.int32))
+    assert bool((total == 1).all())
+    assert out["latency_ms"].shape == (1, 4_000)
+    # two full rows = two full regions: a fast commit pays the WAN hop
+    lat = jnp.where(out["undecided"], jnp.nan, out["latency_ms"])
+    assert float(jnp.nanmedian(lat)) > 30.0
+
+
+def test_weighted_scenario_beats_uniform_on_fast_path():
+    """Concentrating weight shrinks the fast-path *cardinality*: with three
+    weight-2 acceptors a fast quorum needs fewer machines than the uniform
+    q2f = ceil(3n/4), so its order statistic (p50) can only be lower or
+    equal; sanity-check the masked scenario wiring end-to-end."""
+    scen, masks = scenarios.weighted_acceptors(delta_ms=0.3)
+    table = build_mask_table([masks, QuorumSpec.fast_paxos(11)])
+    s = scen.summary_masked(KEY, table, 8_000)
+    assert float(s["p50_ms"][0]) <= float(s["p50_ms"][1]) + 1e-6
+    assert float(s["undecided_rate"][0]) == 0.0
+
+
+def test_weighted_heavy_crash_hurts_more_than_light():
+    heavy, masks = scenarios.weighted_acceptors(crashed=(0, 1))   # two 2s
+    light, _ = scenarios.weighted_acceptors(crashed=(9, 10))      # two 1s
+    table = build_mask_table([masks])
+    s_heavy = heavy.summary_masked(KEY, table, 6_000)
+    s_light = light.summary_masked(KEY, table, 6_000)
+    assert float(s_heavy["p50_ms"][0]) >= float(s_light["p50_ms"][0]) - 1e-6

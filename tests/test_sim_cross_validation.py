@@ -4,7 +4,8 @@ The batched engine (``repro.montecarlo``) is an *analytic* model — order
 statistics over sampled delays — while ``repro.core.simulator`` runs the
 actual protocol state machines over a simulated network.  They share one
 delay distribution (the §6 EC2 shifted-lognormal fit), so on the paper's
-n=11 configurations they must agree, within Monte-Carlo tolerance, on
+n=11 configurations — and on a 3x2 *grid* quorum system exercising the
+general masked path — they must agree, within Monte-Carlo tolerance, on
 
   * conflict-free fast-path p50 latency, and
   * P(coordinated recovery) in K-proposer races, K ∈ {2, 3}.
@@ -16,20 +17,21 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.quorum import QuorumSpec
+from repro.core.quorum import ExplicitQuorumSystem, QuorumSpec
 from repro.core.simulator import (FastPaxosSim, conflict_free_workload,
                                   latency_stats)
-from repro.montecarlo import build_spec_table, engine
+from repro.montecarlo import build_mask_table, build_spec_table, engine
 
 FFP = QuorumSpec.paper_headline(11)
 FP = QuorumSpec.fast_paxos(11)
+GRID = ExplicitQuorumSystem.grid(2)          # 3x2 grid, n=6
 KEY = jax.random.PRNGKey(3)
 DELTA_MS = 0.2
 MC_SAMPLES = 60_000
 DES_PAIRS = 800
 
 
-def _des_recovery_prob(spec: QuorumSpec, k_proposers: int, delta_ms: float,
+def _des_recovery_prob(spec, k_proposers: int, delta_ms: float,
                        pairs: int, seed: int = 0) -> float:
     """K proposals race per instance in the event simulator; instances are
     spaced far apart so races are independent."""
@@ -67,6 +69,33 @@ def test_recovery_probability_matches_des(spec, k_proposers):
     # binomial noise at 800 DES races is ~0.017 std at p=0.4; 0.05 gives
     # ~3 sigma headroom while still catching modelling drift
     assert abs(p_mc - p_des) < 0.05, (spec, k_proposers, p_mc, p_des)
+
+
+def test_grid_fast_path_p50_matches_des():
+    """General-quorum cross-validation: the masked engine and the DES (both
+    running the 3x2 grid system — fast quorums are *specific* row pairs, not
+    counts) must agree on conflict-free fast-path p50 within 5%."""
+    table = build_mask_table([GRID])
+    mc_p50 = float(jnp.median(
+        engine.fast_path_masked(KEY, table, n=GRID.n, samples=MC_SAMPLES)[0]))
+    sim = FastPaxosSim(GRID, seed=11)
+    conflict_free_workload(sim, 3000, rate_per_s=1400)
+    des_p50 = latency_stats(sim.run())["p50_ms"]
+    assert abs(mc_p50 - des_p50) / des_p50 < 0.05, (mc_p50, des_p50)
+
+
+@pytest.mark.parametrize("k_proposers", [2, 3])
+def test_grid_recovery_probability_matches_des(k_proposers):
+    """P(coordinated recovery) on the grid for K-proposer races: the DES runs
+    the generalized set-level protocol (contains_q1/contains_q2), the engine
+    the masked saturation path — agreement within 0.05 absolute."""
+    table = build_mask_table([GRID])
+    offsets = DELTA_MS * jnp.arange(k_proposers, dtype=jnp.float32)
+    out = engine.race_masked(KEY, table, offsets, n=GRID.n,
+                             k_proposers=k_proposers, samples=MC_SAMPLES)
+    p_mc = float(out["recovery"][0].mean())
+    p_des = _des_recovery_prob(GRID, k_proposers, DELTA_MS, DES_PAIRS)
+    assert abs(p_mc - p_des) < 0.05, (k_proposers, p_mc, p_des)
 
 
 def test_more_proposers_mean_more_recoveries():
