@@ -7,19 +7,18 @@ Flexible Paxos (q1=9, q2f=7, q2c=3).  Claim: FFP's smaller fast quorum (7 vs
 We reproduce it two ways (DESIGN.md §2):
   1. the discrete-event simulator running the actual protocol state machines
      over sampled EC2-like delays (common random numbers across algorithms);
-  2. the batched Monte-Carlo engine (``repro.montecarlo``): both specs go
-     into one spec table and are scored by a single compiled order-statistics
-     program over identical sampled delays (10^5 instances).
+  2. one declarative ``repro.api.Experiment``: both specs go into one
+     mask-table lowering and are scored by a single compiled
+     order-statistics program over identical sampled delays (10^5
+     instances).
 Both must agree on the *ratio*, which is the paper's claim.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.api import Experiment, Workload
 from repro.core.quorum import QuorumSpec
 from repro.core.simulator import (FastPaxosSim, conflict_free_workload,
                                   latency_stats)
-from repro.montecarlo import build_spec_table, scenarios
 
 N_REQUESTS = 3000
 RATE = 1400.0
@@ -45,10 +44,11 @@ def run(quick: bool = False, seed: int = 0):
         for k in ("mean_ms", "p50_ms", "p95_ms", "p99_ms"):
             rows.append((f"fig2a.sim.{name}.{k}", stats[k]))
 
-    # -- batched Monte-Carlo cross-check: both specs, one engine call
-    table = build_spec_table(list(specs.values()))
-    scen = scenarios.conflict_free(n=11)
-    summ = scen.summary(jax.random.PRNGKey(seed), table, samples)
+    # -- batched Monte-Carlo cross-check: both specs, one Experiment
+    exp = Experiment(systems=list(specs.values()),
+                     workload=Workload.conflict_free(),
+                     samples=samples, seed=seed)
+    summ = exp.run("montecarlo").summary
     mc = {}
     for i, name in enumerate(specs):
         mc[name] = {k: float(v[i]) for k, v in summ.items()}

@@ -5,17 +5,15 @@ enters coordinated recovery ~1/3 as often as Fast Paxos (q2f 7 vs 9 — fewer
 races leave *neither* value able to reach the smaller fast quorum).
 
 Reproduced with the discrete-event simulator (protocol state machines, racy
-submissions to shared instances) and the batched mixed-workload scenario
-from ``repro.montecarlo`` (both specs scored in one engine call).
+submissions to shared instances) and a mixed-workload
+``repro.api.Experiment`` (both specs scored in one engine call).
 """
 from __future__ import annotations
 
-import jax
-
+from repro.api import Experiment, Workload
 from repro.core.quorum import QuorumSpec
 from repro.core.simulator import (FastPaxosSim, conflict_workload,
                                   latency_stats)
-from repro.montecarlo import build_spec_table, scenarios
 
 N_REQUESTS = 4000
 RATE = 2700.0
@@ -52,9 +50,11 @@ def run(quick: bool = False, seed: int = 0):
                      de["fast_paxos"]["recoveries"] / de["ffp"]["recoveries"]))
 
     # batched MC model at the observed effective conflict fraction
-    table = build_spec_table(list(specs.values()))
-    scen = scenarios.mixed_workload(conflict_frac=0.01, delta_ms=0.2, n=11)
-    summ = scen.summary(jax.random.PRNGKey(seed), table, samples)
+    exp = Experiment(systems=list(specs.values()),
+                     workload=Workload.mixed(conflict_frac=0.01,
+                                             delta_ms=0.2),
+                     samples=samples, seed=seed)
+    summ = exp.run("montecarlo").summary
     mc = {}
     for i, name in enumerate(specs):
         mc[name] = {k: float(v[i]) for k, v in summ.items()}

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.quorum import QuorumSpec
 from repro.core.simulator import FastPaxosSim
-from repro.montecarlo import build_spec_table, engine
+from repro.montecarlo import build_mask_table, engine
 
 DELTAS_MS = (0.0, 0.1, 0.2, 0.4, 0.8, 1.6, 3.2)
 SAMPLES = 100_000
@@ -42,7 +42,7 @@ def run(quick: bool = False, seed: int = 0):
         "ffp": QuorumSpec.paper_headline(11),
     }
     rows = []
-    table = build_spec_table(list(specs.values()))
+    table = build_mask_table(list(specs.values()))   # all-cardinality: "q"
     t0 = engine.TRACE_COUNTS["race"]
     curves = {name: [] for name in specs}
     for d in DELTAS_MS:

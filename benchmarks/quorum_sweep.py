@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quorum import QuorumSpec, ffp_card_ok
-from repro.montecarlo import build_spec_table, engine
+from repro.montecarlo import build_mask_table, engine
 
 N = 11
 SAMPLES = 50_000
@@ -96,7 +96,9 @@ def run(quick: bool = False, seed: int = 0):
     ]
     key = jax.random.PRNGKey(seed)
     k_fast, k_race = jax.random.split(key)
-    table = build_spec_table(frontier)
+    # all-cardinality batch: the mask lowering carries the "q" entry, so the
+    # engine keeps the k-th-order-statistic gathers for the whole frontier
+    table = build_mask_table(frontier)
 
     # -- the entire frontier in two engine calls (one compile each) --------
     t0 = dict(engine.TRACE_COUNTS)

@@ -1,6 +1,7 @@
 """Beyond-paper: the §6 closing remark made runnable — score *alternative
 quorum systems* (grid, weighted voting) against the paper's cardinality
-configurations on one cluster, in one compile.
+configurations on one cluster, in one compile, through the declarative
+``repro.api.Experiment`` layer.
 
 The paper closes by noting that relaxed intersection (Eqs. 11-14) lets Fast
 Paxos adopt quorum systems "not based solely on quorum cardinality" to trade
@@ -14,11 +15,12 @@ space for n = 11:
                      cluster: fast = two full rows, classic = one column
   weighted           Gifford-style weighted voting, three heavy acceptors
 
-All five are encoded as membership masks (``to_masks``), batched into ONE
-traced mask table, and scored by ONE ``fast_path_masked`` compile plus ONE
-``race_masked`` compile (asserted via ``engine.TRACE_COUNTS``).  On the
-cardinality rows the masked results are asserted bit-identical to the
-threshold-path engine — the differential anchor that licenses the general
+All five go into ONE ``Experiment``; its mask-table lowering (the single
+quorum lowering, DESIGN.md §2) scores them with ONE ``fast_path`` compile
+plus ONE ``race`` compile (asserted via ``engine.TRACE_COUNTS``).  The
+cardinality rows are then re-run as their own all-cardinality experiment —
+which lowers to the k-th-order-statistic specialization — and asserted
+bit-identical: the differential anchor that licenses the general masked
 path.  Axes reported per system: fast-path p50/p99, P(recovery | race), and
 brute-force crash tolerance per phase; plus a fault-injection coda (a grid
 row outage vs the same crash count scattered) showing why *placement* starts
@@ -32,10 +34,10 @@ import argparse
 from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
 
+from repro.api import Experiment, Workload
 from repro.core.quorum import ExplicitQuorumSystem, QuorumSpec
-from repro.montecarlo import build_mask_table, build_spec_table, engine
+from repro.montecarlo import build_mask_table, engine
 from repro.montecarlo.scenarios import grid_wan, weighted_acceptors
 
 N = 11
@@ -61,46 +63,54 @@ def run(quick: bool = False, seed: int = 0):
     named = systems()
     cards = [QuorumSpec.paper_headline(N), QuorumSpec.fast_paxos(N),
              QuorumSpec.majority_fast(N)]
-    table = build_mask_table([m for _, m in named])
-    key = jax.random.PRNGKey(seed)
-    k_fast, k_race = jax.random.split(key)
-    offs = jnp.array([0.0, DELTA_MS], jnp.float32)
     rows: List[Tuple[str, float]] = [("qsys.n_systems", len(named))]
 
-    # -- the whole mixed-family table in two engine calls (one compile each)
+    # -- one declared experiment, two workloads, two engine calls (one
+    # compile each): the whole mixed-family table per call
+    exp = Experiment(systems=[m for _, m in named],
+                     workload=Workload.conflict_free(),
+                     samples=samples, seed=seed)
     t0 = dict(engine.TRACE_COUNTS)
-    lat = engine.fast_path_masked(k_fast, table, n=N, samples=samples)
-    race = engine.race_masked(k_race, table, offs, n=N, k_proposers=2,
-                              samples=samples)
-    traces = (engine.TRACE_COUNTS["fast_path_masked"] - t0["fast_path_masked"],
-              engine.TRACE_COUNTS["race_masked"] - t0["race_masked"])
+    fast = exp.run("montecarlo")
+    race = Experiment(systems=exp.systems,
+                      workload=Workload.race(k=2, delta_ms=DELTA_MS),
+                      samples=samples, seed=seed).run("montecarlo")
+    traces = (engine.TRACE_COUNTS["fast_path"] - t0["fast_path"],
+              engine.TRACE_COUNTS["race"] - t0["race"])
     assert traces[0] <= 1 and traces[1] <= 1, (
         f"per-system re-jit crept back in: {traces} traces for "
         f"{len(named)} quorum systems")
     rows.append(("qsys.engine_compiles", sum(traces)))
 
-    # -- differential anchor: the cardinality rows must be bit-identical to
-    # the threshold-path engine under the same keys (common random numbers).
-    spec_table = build_spec_table(cards)
-    lat_thr = engine.fast_path(k_fast, spec_table, n=N, samples=samples)
-    race_thr = engine.race(k_race, spec_table, offs, n=N, k_proposers=2,
-                           samples=samples)
-    assert bool((lat[: len(cards)] == lat_thr).all()), \
-        "masked fast path diverged from threshold path on cardinality specs"
-    for k in race_thr:
-        assert bool((race[k][: len(cards)] == race_thr[k]).all()), (
-            f"masked race output {k!r} diverged from threshold path")
+    # -- differential anchor: the cardinality rows re-declared as their own
+    # all-cardinality experiment lower to the "q" (k-th-order-statistic)
+    # specialization, and must be bit-identical under the same seed (common
+    # random numbers) — the parity that licenses the general masked path.
+    fast_q = Experiment(systems=cards, workload=Workload.conflict_free(),
+                        samples=samples, seed=seed).run("montecarlo")
+    race_q = Experiment(systems=cards,
+                        workload=Workload.race(k=2, delta_ms=DELTA_MS),
+                        samples=samples, seed=seed).run("montecarlo")
+    assert "q" in engine.build_mask_table(cards), \
+        "all-cardinality batch must carry the kth-gather specialization"
+    assert bool((fast.raw["latency_ms"][: len(cards)]
+                 == fast_q.raw["latency_ms"]).all()), \
+        "masked fast path diverged from cardinality specialization"
+    for k in race_q.raw:
+        assert bool((race.raw[k][: len(cards)] == race_q.raw[k]).all()), (
+            f"masked race output {k!r} diverged from cardinality "
+            f"specialization")
     rows.append(("qsys.masked_matches_threshold_bitwise", len(cards)))
 
     # -- per-system frontier rows
-    p50 = jnp.median(lat, axis=-1)
-    p99 = jnp.quantile(lat, 0.99, axis=-1)
-    p_rec = race["recovery"].mean(axis=-1)
-    for i, (name, masks) in enumerate(named):
-        ft = masks.fault_tolerance()
-        rows.append((f"qsys.[{name}].fast_p50_ms", float(p50[i])))
-        rows.append((f"qsys.[{name}].fast_p99_ms", float(p99[i])))
-        rows.append((f"qsys.[{name}].p_recovery", float(p_rec[i])))
+    for i, (name, _) in enumerate(named):
+        ft = fast.fault_tolerance[i]
+        rows.append((f"qsys.[{name}].fast_p50_ms",
+                     float(fast.summary["p50_ms"][i])))
+        rows.append((f"qsys.[{name}].fast_p99_ms",
+                     float(fast.summary["p99_ms"][i])))
+        rows.append((f"qsys.[{name}].p_recovery",
+                     float(race.summary["recovery_rate"][i])))
         rows.append((f"qsys.[{name}].ft_fast", ft["phase2_fast"]))
         rows.append((f"qsys.[{name}].ft_classic", ft["phase2_classic"]))
         rows.append((f"qsys.[{name}].ft_phase1", ft["phase1"]))
@@ -116,7 +126,7 @@ def run(quick: bool = False, seed: int = 0):
                          ("scattered", (0, 4, 8))):
         scen, masks = grid_wan(cols=3, k=2, delta_ms=DELTA_MS,
                                crashed=crashed)
-        out = scen.run_masked(kk, build_mask_table([masks]), inj_samples)
+        out = scen.run(kk, build_mask_table([masks]), inj_samples)
         undecided[tag] = float(out["undecided"].mean())
         rows.append((f"qsys.grid_wan.{tag}.undecided_rate", undecided[tag]))
         rows.append((f"qsys.grid_wan.{tag}.p_recovery",

@@ -86,15 +86,18 @@ def kernel_benches(quick: bool):
 
 def montecarlo_benches(quick: bool):
     """End-to-end engine wall time: the whole n=11 minimal frontier (one
-    spec table) per call — the number the traced-threshold batching is
-    meant to move."""
+    mask-table lowering, "q"-specialized since the frontier is all
+    cardinality) per call — the number the traced batching is meant to
+    move.  Plus the declarative layer's overhead: one ``Experiment.run``
+    against the same frontier, which should cost the same engine call."""
     import jax.numpy as jnp
 
     from benchmarks.quorum_sweep import enumerate_valid, minimal_frontier
-    from repro.montecarlo import build_spec_table, engine
+    from repro.api import Experiment, Workload
+    from repro.montecarlo import build_mask_table, engine
 
     frontier = minimal_frontier(enumerate_valid(11))
-    table = build_spec_table(frontier)
+    table = build_mask_table(frontier)
     samples = 10_000 if quick else 100_000
     key = jax.random.PRNGKey(0)
     offs = jnp.array([0.0, 0.2], jnp.float32)
@@ -107,6 +110,13 @@ def montecarlo_benches(quick: bool):
                                samples=samples)["latency_ms"]
     rows.append((f"mc.engine.race_us[{len(frontier)}specs.{samples}]",
                  _time_us(fn, key, iters=10)))
+
+    exp = Experiment(systems=frontier, workload=Workload.race(k=2,
+                                                              delta_ms=0.2),
+                     samples=samples, compute_fault_tolerance=False)
+    fn = lambda s: exp.run("montecarlo").raw["latency_ms"]
+    rows.append((f"mc.api.experiment_us[{len(frontier)}specs.{samples}]",
+                 _time_us(fn, 0, iters=10)))
     return rows
 
 

@@ -12,8 +12,6 @@ cluster control plane through its failure modes.
 
 Run:  PYTHONPATH=src python examples/consensus_cluster.py
 """
-import jax
-
 from repro.cluster.coordinator import ConsensusLog, ControlPlane
 from repro.cluster.membership import MembershipManager, quorum_policy
 from repro.core.quorum import QuorumSpec
@@ -56,12 +54,15 @@ for hosts in (range(13), range(9)):
     assert q.is_valid()
 
 # ------------------------------------------------- 5. FP vs FFP side by side
-from repro.core.jax_sim import conflict_race
+from repro.api import Experiment, Workload
 
-key = jax.random.PRNGKey(0)
-for name, s in (("fast_paxos", QuorumSpec.fast_paxos(11)),
-                ("ffp", QuorumSpec.paper_headline(11))):
-    out = conflict_race(key, s.n, s.q1, s.q2f, s.q2c, 50_000, 0.2)
-    print(f"[5] {name:10s} P(recovery|race)={float(out['recovery'].mean()):.3f}"
-          f"  mean latency={float(out['latency_ms'].mean()):.3f} ms")
+res = Experiment(systems=[QuorumSpec.fast_paxos(11),
+                          QuorumSpec.paper_headline(11)],
+                 workload=Workload.race(k=2, delta_ms=0.2),
+                 samples=50_000).run("montecarlo")
+for name, i in (("fast_paxos", 0), ("ffp", 1)):
+    p_rec = float(res.summary["recovery_rate"][i]
+                  + res.summary["undecided_rate"][i])
+    print(f"[5] {name:10s} P(recovery|race)={p_rec:.3f}"
+          f"  mean latency={float(res.summary['mean_ms'][i]):.3f} ms")
 print("consensus_cluster OK")

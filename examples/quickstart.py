@@ -21,12 +21,13 @@ print(f"[1] FFP  {ffp} valid={ffp.is_valid()} ft={ffp.fault_tolerance()}")
 print(f"    FP   {fp} (the conservative baseline the paper relaxes)")
 assert ffp.check_sets()                    # Eqs. 11-12 by enumeration
 
-from repro.core.jax_sim import fast_path_latency, latency_summary
+from repro.api import Experiment, Workload
 
-for name, spec in (("fast_paxos", fp), ("ffp", ffp)):
-    lat = latency_summary(
-        fast_path_latency(jax.random.PRNGKey(0), spec.n, spec.q2f, 20_000))
-    print(f"    {name:10s} fast-path p50 = {lat['p50_ms']:.3f} ms")
+res = Experiment(systems=[fp, ffp], workload=Workload.conflict_free(),
+                 samples=20_000).run("montecarlo")
+for name, label in (("fast_paxos", res.labels[0]), ("ffp", res.labels[1])):
+    print(f"    {name:10s} fast-path p50 = "
+          f"{res.system(label)['p50_ms']:.3f} ms")
 
 # --------------------------------------------------------------------- 2
 from repro.cluster.coordinator import ControlPlane

@@ -1,0 +1,19 @@
+"""Declarative experiment layer over the three evaluation backends.
+
+One ``Experiment`` — a batch of quorum systems, a workload, a fault set —
+runs unmodified against:
+
+  ``montecarlo``  the batched mask-table engine (``repro.montecarlo``),
+                  hardware-speed latency/outcome distributions;
+  ``des``         the discrete-event simulator running the verified
+                  protocol state machines (``repro.core.simulator``);
+  ``modelcheck``  exhaustive TLC-lite safety checking for n <= 5
+                  (``repro.core.model_check``).
+
+Quorum systems are anything satisfying the ``QuorumSystem`` protocol
+(``QuorumSpec``, ``ExplicitQuorumSystem``, ``WeightedQuorumSystem``, raw
+``QuorumMasks`` for the Monte-Carlo backend); the Monte-Carlo lowering is
+always the membership-mask table (DESIGN.md §2/§6).
+"""
+from .experiment import (BACKENDS, Experiment, Results,  # noqa: F401
+                         Workload, sweep)

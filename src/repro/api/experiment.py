@@ -1,0 +1,433 @@
+"""``Experiment``: declare once — model-check, simulate, and sweep.
+
+The paper's contribution is a *space* of quorum systems (Eqs. 13/14)
+evaluated for safety and performance; the interesting experiments compare
+the *same* system across checkers, simulators and samplers (following the
+methodology of Flexible Paxos and Relaxed Paxos).  This module is the one
+front door for that comparison:
+
+    exp = Experiment(systems=[QuorumSpec.paper_headline(11),
+                              ExplicitQuorumSystem.grid(3).to_masks().embed(11),
+                              weighted_system],
+                     workload=Workload.race(k=2, delta_ms=0.2),
+                     samples=50_000)
+    mc  = exp.run("montecarlo")     # mask-table engine, one compile
+    des = exp.run("des")            # protocol state machines, per system
+    mc.to_dict()                    # flat {label.metric: float} for benches
+
+Layering (DESIGN.md §6):
+
+    declare        Experiment(systems, workload, faults, ...)
+    lower          QuorumMasks via build_mask_table — the single quorum
+                   lowering for the Monte-Carlo backend; to_explicit() for
+                   the set-level backends (DES, model checker)
+    dispatch       one backend call; Results normalizes the outputs
+
+``Results`` is a registered pytree: latency percentiles and decide/
+undecided rates are leaves (so it composes with ``jax.tree_util``), labels
+and host-side verdicts ride as aux data.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model_check import explore
+from repro.core.quorum import QuorumMasks
+from repro.core.simulator import FastPaxosSim, LatencyModel
+from repro.montecarlo import engine
+from repro.montecarlo.latency import (LossyDelay, ShiftedLognormalDelay,
+                                      WanDelay)
+from repro.montecarlo.scenarios import Scenario
+
+BACKENDS = ("montecarlo", "des", "modelcheck")
+
+# Instances this far apart are independent races in the DES (delays are a
+# few ms); matches the spacing the cross-validation suite uses.
+_DES_GAP_MS = 50.0
+
+# Brute-force crash-set enumeration is exponential; past this n it is
+# skipped and Results.fault_tolerance is None.
+_FT_MAX_N = 14
+
+
+# ---------------------------------------------------------------------------
+# Workload: backend-independent race geometry + delay model.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Workload:
+    """What the cluster is asked to do, independent of any quorum system.
+
+    ``k_proposers`` values race for each instance (k=1: conflict-free),
+    proposer i submitting at ``i * delta_ms``; a ``conflict_frac`` < 1
+    mixes in conflict-free commands (Fig. 2b).  ``delay`` is a
+    ``repro.montecarlo.latency`` pytree (``None`` = the §6 EC2 fit, the
+    one distribution the DES backend shares); ``inter_region_ms`` instead
+    builds a WAN placement once the cluster size is known, and
+    ``loss_prob`` wraps the model with i.i.d. message loss.
+    """
+
+    name: str = "conflict_free"
+    k_proposers: int = 1
+    delta_ms: float = 0.0
+    conflict_frac: float = 1.0
+    delay: object = None
+    inter_region_ms: Optional[float] = None
+    n_regions: int = 3
+    loss_prob: float = 0.0
+    des_requests: int = 1200        # DES backend sample count (per system)
+
+    def __post_init__(self) -> None:
+        if self.k_proposers < 1:
+            raise ValueError(
+                f"k_proposers must be >= 1 (1 = conflict-free), "
+                f"got {self.k_proposers}")
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def conflict_free(cls, delay=None, **kw) -> "Workload":
+        """Fig. 2a: a steady conflict-free stream."""
+        return cls(name="conflict_free", delay=delay, **kw)
+
+    @classmethod
+    def race(cls, k: int = 2, delta_ms: float = 0.5, delay=None,
+             **kw) -> "Workload":
+        """K proposals race for every instance, staggered by Δ (Fig. 2c)."""
+        if k < 2:
+            raise ValueError("a race needs at least 2 proposers")
+        return cls(name=f"{k}_way_race", k_proposers=k, delta_ms=delta_ms,
+                   delay=delay, **kw)
+
+    @classmethod
+    def mixed(cls, conflict_frac: float = 0.10, delta_ms: float = 0.5,
+              k: int = 2, delay=None, **kw) -> "Workload":
+        """Fig. 2b: ``conflict_frac`` of commands race, the rest are clean."""
+        return cls(name="mixed_workload", k_proposers=k, delta_ms=delta_ms,
+                   conflict_frac=conflict_frac, delay=delay, **kw)
+
+    @classmethod
+    def wan(cls, k: int = 2, inter_region_ms: float = 30.0,
+            n_regions: int = 3, delta_ms: float = 0.5, **kw) -> "Workload":
+        """Geo-distributed acceptors round-robin across regions."""
+        return cls(name="wan", k_proposers=k, delta_ms=delta_ms,
+                   inter_region_ms=inter_region_ms, n_regions=n_regions,
+                   **kw)
+
+    @classmethod
+    def lossy(cls, loss_prob: float = 0.01, k: int = 2,
+              delta_ms: float = 0.5, delay=None, **kw) -> "Workload":
+        """Every hop independently drops with ``loss_prob``."""
+        return cls(name="lossy", k_proposers=k, delta_ms=delta_ms,
+                   loss_prob=loss_prob, delay=delay, **kw)
+
+    # -- lowering ----------------------------------------------------------
+    def delay_for(self, n: int):
+        d = self.delay
+        if d is None and self.inter_region_ms is not None:
+            d = WanDelay.symmetric(self.inter_region_ms, n,
+                                   self.k_proposers, self.n_regions)
+        if d is None:
+            d = ShiftedLognormalDelay()
+        if self.loss_prob:
+            d = LossyDelay(d, self.loss_prob)
+        return d
+
+    def scenario(self, n: int, faults: Sequence[int] = ()) -> Scenario:
+        """Lower to a Monte-Carlo ``Scenario`` for a cluster of ``n``."""
+        offs = self.delta_ms * jnp.arange(self.k_proposers,
+                                          dtype=jnp.float32)
+        scen = Scenario(self.name, n, self.k_proposers, offs,
+                        self.delay_for(n), self.conflict_frac)
+        return scen.with_faults(faults)
+
+    def des_latency(self) -> LatencyModel:
+        """Lower the delay model for the discrete-event backend (which
+        speaks the shifted-lognormal EC2 fit, optionally lossy)."""
+        d = self.delay if self.delay is not None else ShiftedLognormalDelay()
+        if self.inter_region_ms is not None or not isinstance(
+                d, ShiftedLognormalDelay):
+            raise ValueError(
+                f"the des backend models the §6 single-region network "
+                f"(ShiftedLognormalDelay); workload {self.name!r} uses "
+                f"{type(d).__name__ if self.delay is not None else 'WAN'} — "
+                f"run it on the montecarlo backend")
+        return LatencyModel(base_ms=d.base_ms, mu=d.mu, sigma=d.sigma,
+                            loss_prob=self.loss_prob)
+
+
+# ---------------------------------------------------------------------------
+# Results: one normalized shape for all three backends.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Results:
+    """Structured outcome of one ``Experiment.run``.
+
+    ``summary``          metric name -> length-M vector (one entry per
+                         system): latency percentiles (decided instances
+                         only) and fast/recovery/undecided rates; for the
+                         modelcheck backend, ``safe``/``states``.
+    ``raw``              montecarlo only: the per-sample (M, S) decide bits
+                         and latencies straight from the engine.
+    ``fault_tolerance``  per-system crash budgets per phase (brute force
+                         over the masks; None above n=14).
+    ``safety``           modelcheck only: per-system verdict dicts
+                         (ok / states explored / violation / trace).
+    """
+
+    backend: str
+    labels: Tuple[str, ...]
+    summary: Dict[str, Any]
+    raw: Optional[Dict[str, jax.Array]] = None
+    fault_tolerance: Optional[Tuple[Dict[str, int], ...]] = None
+    safety: Optional[Tuple[Dict[str, Any], ...]] = None
+
+    def system(self, which) -> Dict[str, float]:
+        """Per-system scalar view, by label or index."""
+        i = which if isinstance(which, int) else self.labels.index(which)
+        out = {k: _scalar(v[i]) for k, v in self.summary.items()}
+        if self.fault_tolerance is not None:
+            out.update({f"ft_{k}": v for k, v in
+                        self.fault_tolerance[i].items()})
+        if self.safety is not None:
+            out.update({f"safety_{k}": v for k, v in
+                        self.safety[i].items() if k != "trace"})
+        return out
+
+    def to_dict(self) -> Dict[str, float]:
+        """Flatten to ``{label.metric: scalar}`` (benchmark CSV shape)."""
+        flat: Dict[str, float] = {}
+        for i, label in enumerate(self.labels):
+            for k, v in self.summary.items():
+                flat[f"{label}.{k}"] = _scalar(v[i])
+            if self.fault_tolerance is not None:
+                ft = self.fault_tolerance[i]
+                flat[f"{label}.ft_fast"] = ft["phase2_fast"]
+                flat[f"{label}.ft_classic"] = ft["phase2_classic"]
+                flat[f"{label}.ft_phase1"] = ft["phase1"]
+            if self.safety is not None:
+                flat[f"{label}.safe"] = float(self.safety[i]["ok"])
+        return flat
+
+
+def _scalar(v):
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return v
+
+
+def _results_flatten(r: Results):
+    return ((r.summary, r.raw),
+            (r.backend, r.labels, r.fault_tolerance, r.safety))
+
+
+def _results_unflatten(aux, children):
+    return Results(aux[0], aux[1], children[0], children[1], aux[2], aux[3])
+
+
+jax.tree_util.register_pytree_node(Results, _results_flatten,
+                                   _results_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Experiment.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Experiment:
+    """A declarative evaluation: systems x workload x faults -> Results.
+
+    ``systems`` is any mix of ``QuorumSpec`` / ``ExplicitQuorumSystem`` /
+    ``WeightedQuorumSystem`` / raw ``QuorumMasks``, all on one cluster
+    size.  ``faults`` crashes the named acceptors (every hop touching them
+    is lost) on the montecarlo and des backends; the modelcheck backend
+    ignores it — losing messages only removes behaviours, so safety
+    verdicts already cover every crash pattern.
+
+    The same object runs against all three backends; only ``backend``
+    (or the ``run`` argument) selects the execution engine.
+    """
+
+    systems: Tuple
+    workload: Workload = field(default_factory=Workload)
+    faults: Tuple[int, ...] = ()
+    backend: str = "montecarlo"
+    samples: int = 20_000
+    seed: int = 0
+    use_kernel: bool = False
+    max_states: int = 200_000      # modelcheck BFS cap
+    compute_fault_tolerance: bool = True   # brute-force crash budgets
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "systems", tuple(self.systems))
+        object.__setattr__(self, "faults", tuple(self.faults))
+        if not self.systems:
+            raise ValueError("Experiment needs at least one quorum system")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"pick one of {BACKENDS}")
+
+    # -- lowering ----------------------------------------------------------
+    def masks(self) -> Tuple[QuorumMasks, ...]:
+        # memoized: n/labels/lower/fault-tolerance all consume the masks,
+        # and the systems tuple is frozen with the dataclass
+        cached = self.__dict__.get("_masks")
+        if cached is None:
+            cached = tuple(s if isinstance(s, QuorumMasks) else s.to_masks()
+                           for s in self.systems)
+            object.__setattr__(self, "_masks", cached)
+        return cached
+
+    @property
+    def n(self) -> int:
+        ns = {m.n for m in self.masks()}
+        if len(ns) != 1:
+            raise ValueError(f"systems mix cluster sizes {sorted(ns)}; "
+                             f"use QuorumMasks.embed() to align them")
+        return ns.pop()
+
+    @property
+    def labels(self) -> Tuple[str, ...]:
+        labels, seen = [], {}
+        for i, m in enumerate(self.masks()):
+            lab = m.label or f"system{i}"
+            if lab in seen:                      # keep to_dict keys unique
+                seen[lab] += 1
+                lab = f"{lab}#{seen[lab]}"
+            else:
+                seen[lab] = 0
+            labels.append(lab)
+        return tuple(labels)
+
+    def lower(self, *, specialize: bool = True) -> Dict[str, jax.Array]:
+        """The single quorum lowering: the batched membership-mask table
+        every Monte-Carlo path consumes (all-cardinality batches carry the
+        ``"q"`` k-th-order-statistic specialization).  Memoized per
+        ``specialize`` flag so repeated runs re-upload nothing."""
+        cache = self.__dict__.setdefault("_lowered", {})
+        if specialize not in cache:
+            cache[specialize] = engine.build_mask_table(
+                self.masks(), specialize=specialize)
+        return cache[specialize]
+
+    # -- execution ---------------------------------------------------------
+    def run(self, backend: Optional[str] = None) -> Results:
+        """Evaluate on ``backend`` (default: the declared one)."""
+        backend = backend or self.backend
+        if backend == "montecarlo":
+            return self._run_montecarlo()
+        if backend == "des":
+            return self._run_des()
+        if backend == "modelcheck":
+            return self._run_modelcheck()
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"pick one of {BACKENDS}")
+
+    def _fault_tolerance(self) -> Optional[Tuple[Dict[str, int], ...]]:
+        if not self.compute_fault_tolerance or self.n > _FT_MAX_N:
+            return None
+        cached = self.__dict__.get("_ft")
+        if cached is None:
+            cached = tuple(m.fault_tolerance() for m in self.masks())
+            object.__setattr__(self, "_ft", cached)
+        return cached
+
+    def _run_montecarlo(self) -> Results:
+        scen = self.workload.scenario(self.n, self.faults)
+        out = scen.run(jax.random.PRNGKey(self.seed), self.lower(),
+                       self.samples, self.use_kernel)
+        return Results(backend="montecarlo", labels=self.labels,
+                       summary=engine.summarize(out), raw=out,
+                       fault_tolerance=self._fault_tolerance())
+
+    # -- discrete-event backend --------------------------------------------
+    def _set_level(self, system, backend: str):
+        """Lower one system for the set-level backends (DES, checker)."""
+        if isinstance(system, QuorumMasks):
+            raise ValueError(
+                f"raw QuorumMasks ({system.label or 'unlabelled'}) only "
+                f"lower to the montecarlo engine; pass the originating "
+                f"QuorumSpec/ExplicitQuorumSystem/WeightedQuorumSystem "
+                f"for the {backend} backend")
+        return system
+
+    def _run_des(self) -> Results:
+        lat = self.workload.des_latency()
+        per_sys = [self._des_one(self._set_level(s, "des"), lat)
+                   for s in self.systems]
+        summary = {k: [d[k] for d in per_sys] for k in per_sys[0]}
+        return Results(backend="des", labels=self.labels, summary=summary,
+                       fault_tolerance=self._fault_tolerance())
+
+    def _des_one(self, system, lat: LatencyModel) -> Dict[str, float]:
+        wl = self.workload
+        sim = FastPaxosSim(system, latency=lat, seed=self.seed,
+                           crashed=self.faults)
+        rng = random.Random(self.seed + 1)
+        k = wl.k_proposers
+        t = 0.0
+        for i in range(wl.des_requests):
+            kk = k if (k > 1 and rng.random() < wl.conflict_frac) else 1
+            for p in range(kk):
+                sim.submit(t + p * wl.delta_ms, instance=i,
+                           value=f"v{i}_{p}", proposer=p)
+            t += _DES_GAP_MS           # isolate instances (independent races)
+        sim.run()
+
+        by_inst: Dict[int, list] = {}
+        for r in sim.results.values():
+            by_inst.setdefault(r.instance, []).append(r)
+        lats, fast, rec = [], 0, 0
+        for rs in by_inst.values():
+            win = next((r for r in rs
+                        if r.outcome in ("fast", "recovered")), None)
+            if win is None:
+                continue
+            lats.append(win.latency_ms)
+            fast += win.outcome == "fast"
+            rec += win.outcome == "recovered"
+        m = len(by_inst)
+        lats.sort()
+        q = lambda p: lats[min(len(lats) - 1, int(p * len(lats)))] \
+            if lats else float("nan")
+        return {
+            "mean_ms": sum(lats) / len(lats) if lats else float("nan"),
+            "p50_ms": q(0.50), "p95_ms": q(0.95), "p99_ms": q(0.99),
+            "max_ms": lats[-1] if lats else float("nan"),
+            "fast_rate": fast / m, "recovery_rate": rec / m,
+            "undecided_rate": (m - fast - rec) / m,
+        }
+
+    # -- model-check backend -----------------------------------------------
+    def _run_modelcheck(self) -> Results:
+        if self.n > 5:
+            raise ValueError(
+                f"the modelcheck backend explores the full state space and "
+                f"is capped at n<=5 acceptors (got n={self.n}); check a "
+                f"small congruent system and sweep the big one on the "
+                f"montecarlo backend")
+        verdicts = []
+        for s in self.systems:
+            r = explore(self._set_level(s, "modelcheck"),
+                        max_states=self.max_states)
+            verdicts.append({"ok": r.ok, "states": r.states,
+                             "violation": r.violation,
+                             "truncated": r.truncated, "trace": r.trace})
+        summary = {"safe": [float(v["ok"]) for v in verdicts],
+                   "states": [float(v["states"]) for v in verdicts]}
+        return Results(backend="modelcheck", labels=self.labels,
+                       summary=summary,
+                       fault_tolerance=self._fault_tolerance(),
+                       safety=tuple(verdicts))
+
+
+def sweep(experiment: Experiment, backends: Sequence[str] = BACKENDS
+          ) -> Dict[str, Results]:
+    """Run one experiment across several backends: {backend: Results}."""
+    return {b: experiment.run(b) for b in backends}

@@ -17,12 +17,14 @@ suite (``tests/test_sim_cross_validation.py``) keep working:
   mixed_workload_latency   Fig. 2b blend of clean and racing commands
   latency_summary          quantile summary of a latency sample
 
-New code should target ``repro.montecarlo`` directly: the shim pays one
-engine call per spec, while the engine scores an entire spec table in a
-single call.
+New code should target ``repro.montecarlo`` (or the declarative
+``repro.api.Experiment``) directly: the shim pays one engine call per spec,
+while the engine scores an entire quorum-system table in a single call.
+Importing this module emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict
 
 import jax
@@ -32,6 +34,12 @@ from repro.montecarlo import engine, scenarios
 from repro.montecarlo.latency import ShiftedLognormalDelay
 
 from .quorum import QuorumSpec
+
+warnings.warn(
+    "repro.core.jax_sim is a deprecated one-spec-at-a-time shim; build a "
+    "table with repro.montecarlo.build_mask_table (or use "
+    "repro.api.Experiment) to score whole quorum-system batches per call",
+    DeprecationWarning, stacklevel=2)
 
 # The old LatencyParams dataclass is the lognormal delay model: same fields
 # (base_ms, mu, sigma), same as_tuple(); now also a pytree the engine traces.
@@ -48,7 +56,7 @@ def kth_smallest(x: jax.Array, k: int, axis: int = -1) -> jax.Array:
 def fast_path_latency(key: jax.Array, n: int, q2f: int, samples: int,
                       lat: LatencyParams = _DEFAULT) -> jax.Array:
     """Commit latency of ``samples`` conflict-free fast-round instances."""
-    table = jnp.array([[n, n, q2f]], jnp.int32)
+    table = engine.cardinality_table(jnp.array([[n, n, q2f]], jnp.int32), n)
     return engine.fast_path(key, table, lat, n=n, samples=samples)[0]
 
 
@@ -56,7 +64,7 @@ def classic_path_latency(key: jax.Array, n: int, q2c: int, samples: int,
                          lat: LatencyParams = _DEFAULT) -> jax.Array:
     """Leader-relayed classic commit (Multi-Paxos steady state): client ->
     leader -> acceptors -> leader."""
-    table = jnp.array([[n, q2c, n]], jnp.int32)
+    table = engine.cardinality_table(jnp.array([[n, q2c, n]], jnp.int32), n)
     return engine.classic_path(key, table, lat, n=n, samples=samples)[0]
 
 
@@ -73,7 +81,8 @@ def conflict_race(key: jax.Array, n: int, q1: int, q2f: int, q2c: int,
       recovery                  : no value reached q2f -> coordinated recovery
       latency_ms                : commit time of the decided value
     """
-    table = jnp.array([[q1, q2c, q2f]], jnp.int32)
+    table = engine.cardinality_table(jnp.array([[q1, q2c, q2f]], jnp.int32),
+                                     n)
     offsets = jnp.stack([jnp.float32(0.0), jnp.asarray(delta_ms, jnp.float32)])
     out = engine.race(key, table, offsets, lat, n=n, k_proposers=2,
                       samples=samples, use_kernel=use_kernel)
@@ -108,7 +117,7 @@ def mixed_workload_latency(key: jax.Array, spec: QuorumSpec,
                            use_kernel: bool = False) -> Dict[str, float]:
     scen = scenarios.mixed_workload(conflict_frac, delta_ms, k=2, n=spec.n,
                                     delay=lat)
-    table = jnp.array([[spec.q1, spec.q2c, spec.q2f]], jnp.int32)
+    table = engine.build_mask_table([spec])
     s = scen.summary(key, table, samples, use_kernel)
     out = {k: float(v[0]) for k, v in s.items() if k != "undecided_rate"}
     return out

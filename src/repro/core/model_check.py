@@ -77,13 +77,14 @@ def explore(spec: "QuorumSpec | ExplicitQuorumSystem",
             uncoordinated: bool = False) -> CheckResult:
     """BFS the reachable state space; check invariants in every state.
 
-    ``spec`` may be a cardinality ``QuorumSpec`` or any
-    ``ExplicitQuorumSystem`` (grid, weighted-derived, hand-built): quorum
-    checks route through the set-level ``RoundSystem`` predicates, so the
-    checker validates arbitrary mask-encodable systems — the differential
-    backstop for the Monte-Carlo engine's general quorum support."""
+    ``spec`` may be any ``QuorumSystem`` — a cardinality ``QuorumSpec``, an
+    ``ExplicitQuorumSystem`` (grid, hand-built), or a system lowered through
+    ``to_explicit()`` (e.g. weighted voting): quorum checks route through
+    the set-level ``RoundSystem`` predicates, so the checker validates
+    arbitrary mask-encodable systems — the differential backstop for the
+    Monte-Carlo engine's general quorum support."""
     rs = RoundSystem(spec, n_coordinators=1, fast_rounds=fast_rounds)
-    n = spec.n
+    n = rs.spec.n
     rounds = list(range(1, max_round + 1))
 
     init: State = (

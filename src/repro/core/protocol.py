@@ -85,8 +85,10 @@ class RoundSystem:
     deployment style of §6: the system sits in a fast round; collisions are
     resolved by the coordinator moving to the next (classic) round.
 
-    ``spec`` may be a cardinality ``QuorumSpec`` *or* an arbitrary
-    ``ExplicitQuorumSystem`` (grids, weighted-derived sets, ...): everything
+    ``spec`` may be any ``QuorumSystem`` — a cardinality ``QuorumSpec``, an
+    ``ExplicitQuorumSystem`` (grids, hand-built sets, ...), or anything else
+    exposing ``to_explicit()`` (e.g. ``WeightedQuorumSystem``), which is
+    lowered to its enumerated explicit form on construction.  Everything
     downstream — ``pick_values``, the learner, the model checker, the
     discrete-event simulator — speaks only the set-level predicates
     ``contains_q1``/``contains_q2``/``q1_subsets``, which degrade to the
@@ -96,6 +98,18 @@ class RoundSystem:
     spec: object                  # QuorumSpec | ExplicitQuorumSystem
     n_coordinators: int = 1
     fast_rounds: str = "odd"      # "odd" | "all" | "none"
+
+    def __post_init__(self) -> None:
+        # Lower anything that is neither cardinality nor already explicit
+        # (weighted voting, future families) through the QuorumSystem
+        # protocol; QuorumSpec keeps its O(1) counting predicates.
+        spec = self.spec
+        if not isinstance(spec, QuorumSpec) and not hasattr(spec, "p1"):
+            if not hasattr(spec, "to_explicit"):
+                raise TypeError(
+                    f"RoundSystem needs a QuorumSpec, an explicit system, or "
+                    f"a QuorumSystem with to_explicit(); got {type(spec)!r}")
+            object.__setattr__(self, "spec", spec.to_explicit())
 
     def is_fast(self, rnd: int) -> bool:
         if rnd <= 0:

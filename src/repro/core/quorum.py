@@ -20,7 +20,8 @@ from __future__ import annotations
 import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Iterable, Iterator, Sequence, Tuple
+from typing import (Dict, FrozenSet, Iterable, Iterator, Protocol,
+                    Sequence, Tuple, runtime_checkable)
 
 import numpy as np
 
@@ -30,6 +31,33 @@ Quorum = FrozenSet[Acceptor]
 # Threshold assigned to padding quorum rows in mask encodings: with zero
 # weights no indicator can ever reach it, so padded rows never satisfy.
 PAD_THRESHOLD = float(2 ** 30)
+
+
+@runtime_checkable
+class QuorumSystem(Protocol):
+    """What every evaluation backend asks of a quorum system.
+
+    ``QuorumSpec``, ``ExplicitQuorumSystem`` and ``WeightedQuorumSystem``
+    all satisfy it, so one object can be model-checked, DES-simulated and
+    Monte-Carlo-swept without reshaping its inputs:
+
+      ``to_masks()``     lowers to the engine's mask encoding — the single
+                         lowering every Monte-Carlo path consumes;
+      ``to_explicit()``  enumerates the quorums for the set-level protocol
+                         predicates (model checker, discrete-event sim);
+      ``is_valid()``     the FFP intersection requirements in the system's
+                         native form (Eqs. 11-14).
+    """
+
+    n: int
+
+    def is_valid(self) -> bool: ...
+
+    def validate(self) -> "QuorumSystem": ...
+
+    def to_masks(self) -> "QuorumMasks": ...
+
+    def to_explicit(self) -> "ExplicitQuorumSystem": ...
 
 
 # ---------------------------------------------------------------------------
@@ -170,6 +198,22 @@ class QuorumMasks:
                            self.p2c_t, wide(self.p2f_w), self.p2f_t,
                            self.label)
 
+    def cardinality_q(self) -> "Tuple[int, int, int] | None":
+        """(q1, q2c, q2f) when every phase is a single all-ones row with an
+        integral threshold — the encoding ``QuorumSpec.to_masks`` emits.
+        ``None`` otherwise.  ``build_mask_table`` uses this to select the
+        k-th-order-statistic specialization for all-cardinality tables."""
+        qs = []
+        for ph in ("p1", "p2c", "p2f"):
+            w, t = getattr(self, ph + "_w"), getattr(self, ph + "_t")
+            if w.shape[0] != 1 or not (w == 1.0).all():
+                return None
+            q = float(t[0])
+            if q != int(q) or not (1 <= q <= self.n):
+                return None
+            qs.append(int(q))
+        return (qs[0], qs[1], qs[2])
+
     # -- reference semantics (used by differential tests) -------------------
     def satisfied(self, members: Iterable[Acceptor], phase: str) -> bool:
         """Does the acceptor set satisfy some quorum row of ``phase``?"""
@@ -302,8 +346,15 @@ class QuorumSpec:
         """One all-ones row per phase with the cardinality threshold — the
         engine's mask path on this encoding is bit-identical to its
         threshold path."""
-        return _card_masks(self.n, self.q1, self.q2c, self.q2f,
-                           f"card[{self.q1},{self.q2c},{self.q2f}]")
+        return _card_masks(self.n, self.q1, self.q2c, self.q2f, self.label)
+
+    def to_explicit(self) -> "ExplicitQuorumSystem":
+        """Enumerate the size-q quorums (for the set-level backends)."""
+        return ExplicitQuorumSystem.from_spec(self)
+
+    @property
+    def label(self) -> str:
+        return f"card[{self.q1},{self.q2c},{self.q2f}]"
 
     # -- convenience -------------------------------------------------------
     def fault_tolerance(self) -> dict:
@@ -360,7 +411,22 @@ class ExplicitQuorumSystem:
         """One membership-indicator row per quorum, threshold |Q| (a row
         saturates only once every member is present)."""
         return _explicit_masks(self.n, self.p1, self.p2c, self.p2f,
-                               f"explicit[n={self.n}]")
+                               self.label)
+
+    def to_explicit(self) -> "ExplicitQuorumSystem":
+        return self
+
+    def embed(self, n: int) -> "ExplicitQuorumSystem":
+        """Re-express over a larger cluster: the extra acceptors join no
+        quorum (mirrors ``QuorumMasks.embed``, but keeps the set-level form
+        so the system still runs on the DES / model-check backends)."""
+        if n < self.n:
+            raise ValueError(f"cannot embed n={self.n} into n={n}")
+        return ExplicitQuorumSystem(n, self.p1, self.p2c, self.p2f)
+
+    @property
+    def label(self) -> str:
+        return f"explicit[n={self.n}]"
 
     @classmethod
     def grid(cls, cols: int, rows: int = 3) -> "ExplicitQuorumSystem":
@@ -457,8 +523,11 @@ class WeightedQuorumSystem:
         return QuorumMasks(self.n, w, np.array([self.t1], np.float32),
                            w.copy(), np.array([self.t2c], np.float32),
                            w.copy(), np.array([self.t2f], np.float32),
-                           f"weighted[t1={self.t1},t2c={self.t2c},"
-                           f"t2f={self.t2f}]")
+                           self.label)
+
+    @property
+    def label(self) -> str:
+        return f"weighted[t1={self.t1},t2c={self.t2c},t2f={self.t2f}]"
 
 
 def all_valid_specs(n: int) -> Iterator[QuorumSpec]:

@@ -126,10 +126,11 @@ class InstanceResult:
 
 class FastPaxosSim:
     """One simulated cluster running either Fast Paxos or Fast Flexible Paxos
-    (the difference is purely the quorum system).  ``spec`` may be a
-    cardinality ``QuorumSpec`` or an ``ExplicitQuorumSystem`` (grid,
-    weighted-derived, ...): all quorum checks route through the set-level
-    ``RoundSystem`` predicates."""
+    (the difference is purely the quorum system).  ``spec`` may be any
+    ``QuorumSystem`` — a cardinality ``QuorumSpec``, an
+    ``ExplicitQuorumSystem`` (grid, hand-built, ...), or a system lowered
+    through ``to_explicit()`` (e.g. ``WeightedQuorumSystem``): all quorum
+    checks route through the set-level ``RoundSystem`` predicates."""
 
     def __init__(self, spec: "QuorumSpec | ExplicitQuorumSystem",
                  latency: LatencyModel | None = None,
@@ -139,7 +140,7 @@ class FastPaxosSim:
         self.lat = latency or LatencyModel()
         self.rng = random.Random(seed)
         self.loop = EventLoop()
-        self.n = spec.n
+        self.n = self.rs.spec.n
         self.crashed: Set[int] = set(crashed)
         # Per-instance acceptor vote registries (steady-state fast round 1:
         # phase-1 already ran; acceptors accept the first proposal per slot).

@@ -15,20 +15,23 @@ Layout (DESIGN.md §2):
                  workload, WAN, lossy acceptors) bundling a delay model with
                  race geometry.
 
-Beyond cardinality thresholds, the engine scores *general* quorum systems
-(grids, weighted voting, hand-built explicit sets) encoded as membership
-masks: ``build_mask_table`` batches any mix of systems into traced (M, G, n)
-weight / (M, G) threshold arrays, and ``race_masked`` / ``fast_path_masked``
-evaluate all G quorums of all M systems in the same single-compile pass —
-bit-identical to the threshold path on cardinality specs (DESIGN.md §2).
+Every quorum system — cardinality thresholds, grids, weighted voting,
+hand-built explicit sets — lowers to ONE encoding: the membership-mask
+table (``build_mask_table``, traced (M, G, n) weights / (M, G) thresholds).
+``race`` / ``fast_path`` / ``classic_path`` evaluate all G quorums of all M
+systems in a single-compile pass; all-cardinality tables carry a ``"q"``
+specialization that lowers to k-th-order-statistic gathers, bit-identical
+to the general masked path (DESIGN.md §2).
 
 The old per-spec API lives on as a compatibility shim in
-``repro.core.jax_sim``.
+``repro.core.jax_sim``; the declarative front door over this engine (plus
+the model checker and the discrete-event simulator) is
+``repro.api.Experiment``.
 """
 from . import engine, latency, scenarios  # noqa: F401
 from .engine import (build_mask_table, build_spec_table,  # noqa: F401
-                     classic_path, fast_path, fast_path_masked, race,
-                     race_masked, summarize)
+                     cardinality_table, classic_path, fast_path,
+                     fast_path_masked, race, race_masked, summarize)
 from .latency import (CrashedDelay, LossyDelay, ParetoDelay,  # noqa: F401
                       ShiftedLognormalDelay, WanDelay)
 from .scenarios import (Scenario, conflict_free, grid_wan,  # noqa: F401

@@ -1,35 +1,53 @@
-"""K-proposer conflict-race engine with traced quorum thresholds.
+"""K-proposer conflict-race engine over mask-encoded quorum systems.
 
-The paper's §5 point is that Eqs. 13/14 admit a *space* of (q1, q2c, q2f)
-configurations; evaluating that space is this module's job.  The old
-``repro.core.jax_sim`` jitted each spec separately (quorum sizes were
-``static_argnums``), so a sweep over the n=11 frontier recompiled dozens of
-times.  Here the thresholds are **traced** int32 operands and a whole
-(M, 3) spec table is evaluated under one ``vmap`` with a single compile.
+The paper's §5 point is that Eqs. 13/14 admit a *space* of quorum systems;
+evaluating that space is this module's job.  Every entry point — ``race``,
+``fast_path``, ``classic_path`` — scores a whole batch of M systems in one
+call with a single XLA compile, and every batch is expressed in **one
+lowering**: the membership-mask table built by ``build_mask_table``
+(DESIGN.md §2).  Cardinality specs, grids, weighted voting and hand-built
+explicit systems all become per-phase (M, G, n) float32 weight matrices
+plus (M, G) thresholds — all traced, so same-shape tables reuse a compile.
 
-The trick (DESIGN.md §2): a race's random structure — who arrives where,
-when, and therefore who votes for what — does not depend on the thresholds
-at all.  ``_sample_race`` draws and *pre-sorts* everything once:
+When *every* system in a table is cardinality-encodable (single all-ones
+row per phase, integral threshold), ``build_mask_table`` additionally
+stores the thresholds as a ``"q"`` (M, 3) int32 entry and the entry points
+select an internal specialization: each masked saturation collapses to a
+k-th-order-statistic gather against presorted arrivals.  The two paths are
+bit-identical on cardinality systems (guarded by the parity tests in
+``tests/test_quorum_systems.py``), so the specialization is purely a
+lowering choice, invisible in the results.
 
-  sorted per-value 2b arrivals   (S, K, n)   fast-path order statistics
-  sorted all-votes 2b arrivals   (S, n)      recovery detection (q1)
-  sorted classic round trips     (S, n)      recovery commit (q2c)
+The trick that makes one compile possible (DESIGN.md §2): a race's random
+structure — who arrives where, when, and therefore who votes for what —
+does not depend on the quorum system at all.  ``_sample_race`` draws and
+*pre-sorts* everything once:
+
+  sorted per-value 2b arrivals   (S, K, n)   fast-path saturation
+  sorted all-votes 2b arrivals   (S, n)      recovery detection (phase 1)
+  sorted classic round trips     (S, n)      recovery commit (phase 2c)
   per-value vote counts          (S, K)      via the quorum_tally kernel
 
-``_decide`` then reduces a spec to three gathers and a compare against the
-presorted arrays, which is what ``vmap`` maps over the spec table.  Work is
-O(sample + sort) once, plus O(M * S) gathers — instead of M full re-runs —
-and every spec sees identical sampled delays (common random numbers), so
-cross-spec comparisons are variance-free.
+``_decide`` (cardinality specialization) and ``_decide_masked`` (general)
+then reduce one system to gathers and compares over the presorted arrays,
+which is what ``vmap`` maps over the table.  Work is O(sample + sort) once,
+plus O(M * S) gathers — instead of M full re-runs — and every system sees
+identical sampled delays (common random numbers), so cross-system
+comparisons are variance-free.
 
 All simulated clocks are milliseconds from proposer 0's submission (the
 paper's instance latency).  Messages with delay >= ``latency.LOST_MS`` never
 arrive: acceptors that see no proposal cast no vote, and instances that
-cannot gather q1 votes report ``undecided``.
+cannot gather phase-1 votes report ``undecided``.
+
+Passing a bare (M, 3) [q1, q2c, q2f] threshold array — the pre-mask-table
+signature — still works but emits a ``DeprecationWarning``; build the table
+with ``build_mask_table`` (or go through ``repro.api.Experiment``).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Dict, Sequence
 
 import jax
@@ -46,13 +64,22 @@ BIG = jnp.float32(LOST_MS)
 UNDECIDED_MS = LOST_MS / 2
 
 # Incremented at trace time inside each jitted entry point; benchmarks assert
-# a full spec-table sweep costs exactly one trace (no per-spec re-jit).
-TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0,
-                                "race_masked": 0, "fast_path_masked": 0}
+# a full table sweep costs exactly one trace (no per-system re-jit).
+TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0}
+
+
+def _warn_deprecated(old: str, hint: str, stacklevel: int = 3) -> None:
+    warnings.warn(f"{old} is deprecated; {hint}", DeprecationWarning,
+                  stacklevel=stacklevel)
 
 
 def build_spec_table(specs: Sequence[QuorumSpec]) -> jax.Array:
-    """(M, 3) int32 [q1, q2c, q2f] rows; all specs must share one n."""
+    """(M, 3) int32 [q1, q2c, q2f] rows; all specs must share one n.
+
+    Raw spec tables are the legacy engine input; new code should hand the
+    same specs to ``build_mask_table`` instead (which recognizes the
+    all-cardinality case and keeps the fast k-th-order-statistic lowering).
+    """
     ns = {s.n for s in specs}
     if len(ns) != 1:
         raise ValueError(f"spec table mixes cluster sizes {sorted(ns)}")
@@ -60,13 +87,19 @@ def build_spec_table(specs: Sequence[QuorumSpec]) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Mask tables: general quorum systems as traced membership/weight matrices.
+# Mask tables: the single quorum lowering (DESIGN.md §2).
 # ---------------------------------------------------------------------------
 
 MASK_KEYS = ("p1_w", "p1_t", "p2c_w", "p2c_t", "p2f_w", "p2f_t")
 
 
-def build_mask_table(systems: Sequence) -> Dict[str, jax.Array]:
+def _sys_label(system, masks: QuorumMasks) -> str:
+    label = getattr(masks, "label", "") or getattr(system, "label", "")
+    return label or type(system).__name__
+
+
+def build_mask_table(systems: Sequence, *,
+                     specialize: bool = True) -> Dict[str, jax.Array]:
     """Batch M quorum systems into one traced mask table (DESIGN.md §2).
 
     ``systems`` may mix ``QuorumSpec`` / ``ExplicitQuorumSystem`` /
@@ -74,19 +107,66 @@ def build_mask_table(systems: Sequence) -> Dict[str, jax.Array]:
     ``QuorumMasks``; all must share one n.  Each phase is padded to the
     max row count with never-satisfied rows, giving a dict pytree of
     ``*_w (M, G, n)`` weight and ``*_t (M, G)`` threshold float32 arrays.
-    Tables of the same shape are interchangeable without recompiling."""
+    Tables of the same shape are interchangeable without recompiling.
+
+    When every system is cardinality-encodable (one all-ones row per phase,
+    integral threshold) the table also carries ``"q"`` — the (M, 3) int32
+    thresholds — and the engine entry points lower to the k-th-order-
+    statistic specialization, bit-identical to the general masked path.
+    ``specialize=False`` suppresses that (the parity tests use it to pit
+    the two lowerings against each other)."""
+    if not len(systems):
+        raise ValueError("mask table needs at least one quorum system")
     masks = [s if isinstance(s, QuorumMasks) else s.to_masks()
              for s in systems]
-    ns = {m.n for m in masks}
-    if len(ns) != 1:
-        raise ValueError(f"mask table mixes cluster sizes {sorted(ns)}")
+    n = masks[0].n
+    for i, m in enumerate(masks):
+        if m.n != n:
+            raise ValueError(
+                f"mask table mixes cluster sizes: system {i} "
+                f"({_sys_label(systems[i], m)}) has n={m.n} but system 0 "
+                f"({_sys_label(systems[0], masks[0])}) has n={n}; "
+                f"use QuorumMasks.embed() or rebuild the systems on one n")
     g1 = max(m.groups[0] for m in masks)
     g2c = max(m.groups[1] for m in masks)
     g2f = max(m.groups[2] for m in masks)
     padded = [m.pad_groups(g1, g2c, g2f) for m in masks]
-    return {k: jnp.stack([jnp.asarray(getattr(m, k), jnp.float32)
-                          for m in padded])
-            for k in MASK_KEYS}
+    table = {k: jnp.stack([jnp.asarray(getattr(m, k), jnp.float32)
+                           for m in padded])
+             for k in MASK_KEYS}
+    if specialize:
+        qs = [m.cardinality_q() for m in masks]
+        if all(q is not None for q in qs):
+            table["q"] = jnp.array(qs, jnp.int32)
+    return table
+
+
+def cardinality_table(spec_table, n: int) -> Dict[str, jax.Array]:
+    """Lift a raw (M, 3) [q1, q2c, q2f] threshold array into a specialized
+    mask table (all-ones rows + ``"q"``).  Used by the legacy-signature
+    coercion and the ``repro.core.jax_sim`` shim; unlike
+    ``build_mask_table`` it does not need ``QuorumSpec`` objects, so
+    degenerate threshold rows (e.g. q1 = n placeholders) are accepted."""
+    q = jnp.asarray(spec_table, jnp.int32)
+    _check_spec_table(q)
+    t = q.astype(jnp.float32)
+    ones = jnp.ones((q.shape[0], 1, n), jnp.float32)
+    return {"p1_w": ones, "p1_t": t[:, 0:1],
+            "p2c_w": ones, "p2c_t": t[:, 1:2],
+            "p2f_w": ones, "p2f_t": t[:, 2:3], "q": q}
+
+
+def _coerce_table(table, n: int, fn: str) -> Dict[str, jax.Array]:
+    """Accept a mask-table dict as-is; lift a legacy (M, 3) threshold array
+    with a deprecation warning."""
+    if isinstance(table, dict):
+        return table
+    _warn_deprecated(
+        f"engine.{fn}() with a raw (M, 3) spec table",
+        "build the table with build_mask_table([...QuorumSpec...]) "
+        "(or run it through repro.api.Experiment)",
+        stacklevel=4)          # warn <- here <- _coerce_table <- fn <- caller
+    return cardinality_table(table, n)
 
 
 def _check_mask_table(table: Dict[str, jax.Array], n: int) -> None:
@@ -94,15 +174,20 @@ def _check_mask_table(table: Dict[str, jax.Array], n: int) -> None:
     if missing:
         raise ValueError(f"mask table missing entries {missing}; "
                          f"build with build_mask_table()")
+    m_rows = table["p1_w"].shape[0] if table["p1_w"].ndim == 3 else -1
     for ph in ("p1", "p2c", "p2f"):
         w, t = table[ph + "_w"], table[ph + "_t"]
         if w.ndim != 3 or w.shape[-1] != n or t.shape != w.shape[:2]:
             raise ValueError(
                 f"mask table phase {ph}: weights {w.shape} / thresholds "
                 f"{t.shape} not (M, G, n={n}) / (M, G)")
+    if "q" in table and table["q"].shape != (m_rows, 3):
+        raise ValueError(
+            f"mask table 'q' specialization has shape {table['q'].shape}, "
+            f"expected ({m_rows}, 3)")
 
 
-def _check_table(spec_table: jax.Array) -> None:
+def _check_spec_table(spec_table: jax.Array) -> None:
     # out-of-bounds gathers clamp silently in XLA, so a malformed table
     # would otherwise produce wrong numbers instead of an error
     if spec_table.ndim != 2 or spec_table.shape[-1] != 3:
@@ -123,8 +208,8 @@ def _counts_winner(votes: jax.Array, k_proposers: int, use_kernel: bool):
 
     The fused Pallas tally+decide kernel does the whole n-axis reduction in
     one VMEM pass; the threshold it is handed here is a placeholder (0) since
-    per-spec thresholds are applied by ``_decide`` — only the spec-independent
-    outputs are consumed.
+    per-system thresholds are applied by ``_decide`` — only the
+    system-independent outputs are consumed.
     """
     if use_kernel:
         from repro.kernels.quorum_tally import ops as qt_ops
@@ -139,7 +224,7 @@ def _counts_winner(votes: jax.Array, k_proposers: int, use_kernel: bool):
 
 def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
                  k_proposers: int, samples: int, use_kernel: bool) -> Dict:
-    """Draw one race per sample and presort everything spec-independent."""
+    """Draw one race per sample and presort everything system-independent."""
     K = k_proposers
     kp, kl, k2a, k2b = jax.random.split(key, 4)
 
@@ -163,16 +248,17 @@ def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
     val_arr = jnp.where(votes[:, None, :] == jnp.arange(K)[None, :, None],
                         arrive[:, None, :], BIG)                  # (S, K, n)
 
-    # coordinated recovery: one classic round trip after q1 votes are seen.
+    # coordinated recovery: one classic round trip after phase-1 votes are
+    # seen.
     d_2a = delay.sample_hops(k2a, (samples, n), lat_mod.FROM_COORDINATOR)
     d_2b = delay.sample_hops(k2b, (samples, n), lat_mod.TO_COORDINATOR)
     classic = d_2a + d_2b
     classic = jnp.where(classic < UNDECIDED_MS, classic, BIG)
 
-    # presort with explicit permutations: the threshold decide consumes only
-    # the sorted values, but the masked decide re-weights acceptors in
-    # arrival order, so argsort indices ride along (XLA dead-code-eliminates
-    # whichever outputs a caller leaves unused).
+    # presort with explicit permutations: the cardinality specialization
+    # consumes only the sorted values, but the masked decide re-weights
+    # acceptors in arrival order, so argsort indices ride along (XLA
+    # dead-code-eliminates whichever outputs a lowering leaves unused).
     val_perm = jnp.argsort(val_arr, axis=-1).astype(jnp.int32)
     arr_perm = jnp.argsort(arrive, axis=-1).astype(jnp.int32)
     cls_perm = jnp.argsort(classic, axis=-1).astype(jnp.int32)
@@ -190,6 +276,10 @@ def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
         "perm_classic": cls_perm,                        # (S, n)
     }
 
+
+# ---------------------------------------------------------------------------
+# Cardinality specialization: k-th-order-statistic gathers.
+# ---------------------------------------------------------------------------
 
 def _decide(draws: Dict, q1: jax.Array, q2c: jax.Array,
             q2f: jax.Array) -> Dict[str, jax.Array]:
@@ -218,7 +308,7 @@ def _decide(draws: Dict, q1: jax.Array, q2c: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Masked decide path: arbitrary quorum systems (DESIGN.md §2).
+# General path: arbitrary quorum systems as masked saturations (DESIGN.md §2).
 # ---------------------------------------------------------------------------
 
 def _sat_time(sorted_x: jax.Array, perm: jax.Array, w: jax.Array,
@@ -231,7 +321,7 @@ def _sat_time(sorted_x: jax.Array, perm: jax.Array, w: jax.Array,
     whose cumulative (arrival-ordered) weight reaches t[g]; its time is the
     value there — the LOST sentinel when the saturating arrival never
     happened, which downstream classifies as "not reached", exactly like the
-    threshold path's k-th order statistic.  Returns the min over rows.
+    cardinality path's k-th order statistic.  Returns the min over rows.
 
     On an all-ones row with threshold q this is bit-identical to
     ``_kth(sorted_x, q)``: cumulative weight i+1 first reaches q at sorted
@@ -292,7 +382,7 @@ def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
     t_fast = _sat_time(win_sorted, win_perm, masks["p2f_w"], masks["p2f_t"])
     # a fast commit needs a full masked quorum of *votes* AND the learner
     # actually receiving every 2b that saturates it (lost 2bs leave t_fast
-    # at the sentinel) — the same conjunction as the threshold path.
+    # at the sentinel) — the same conjunction as the cardinality path.
     fast_ok = reached_votes & (t_fast < UNDECIDED_MS)
 
     t_detect = _sat_time(draws["sorted_arrive"], draws["perm_arrive"],
@@ -312,68 +402,65 @@ def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
     }
 
 
+# ---------------------------------------------------------------------------
+# Entry points: one per path, each dispatching on the table's lowering.
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("n", "k_proposers", "samples",
                                              "use_kernel"))
-def race(key: jax.Array, spec_table: jax.Array, offsets: jax.Array,
-         delay=None, *, n: int, k_proposers: int, samples: int,
-         use_kernel: bool = False) -> Dict[str, jax.Array]:
-    """K proposals race for one instance, scored under M quorum specs at once.
-
-    key         PRNG key (delays are shared across specs — common random
-                numbers, so spec-vs-spec deltas carry no sampling noise)
-    spec_table  (M, 3) int32 [q1, q2c, q2f] rows (traced: new tables of the
-                same shape reuse the compile)
-    offsets     (K,) proposer submission times in ms (traced)
-    delay       a ``repro.montecarlo.latency`` model (traced pytree)
-
-    Returns per-spec-per-sample arrays, each (M, S):
-      fast_winner   proposer id that won on the fast path, -1 otherwise
-      reached_fast  some value gathered q2f round-1 votes
-      recovery      coordinated recovery decided the instance
-      undecided     not enough votes ever arrived (message loss)
-      latency_ms    decision latency from proposer 0's submission
-    """
-    _check_table(spec_table)
+def _race(key: jax.Array, table: Dict[str, jax.Array], offsets: jax.Array,
+          delay, *, n: int, k_proposers: int, samples: int,
+          use_kernel: bool) -> Dict[str, jax.Array]:
     TRACE_COUNTS["race"] += 1
     if delay is None:
         delay = default_delay()
     draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
                          samples=samples, use_kernel=use_kernel)
-    return jax.vmap(lambda q: _decide(draws, q[0], q[1], q[2]))(spec_table)
-
-
-@functools.partial(jax.jit, static_argnames=("n", "k_proposers", "samples",
-                                             "use_kernel"))
-def race_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
-                offsets: jax.Array, delay=None, *, n: int, k_proposers: int,
-                samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
-    """``race`` over arbitrary quorum systems encoded as membership masks.
-
-    ``mask_table`` is a ``build_mask_table`` dict — M systems' per-phase
-    (M, G, n) weights and (M, G) thresholds, all traced: same-shape tables
-    reuse one compile, and every system sees the same ``_sample_race`` draws
-    as the threshold path (common random numbers), so on cardinality-encoded
-    masks the outputs are bit-identical to ``race``.  Returns the same
-    per-system-per-sample (M, S) dict as ``race``.
-    """
-    _check_mask_table(mask_table, n)
-    TRACE_COUNTS["race_masked"] += 1
-    if delay is None:
-        delay = default_delay()
-    draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
-                         samples=samples, use_kernel=use_kernel)
-    winner, reached = _masked_vote_winner(draws["votes"], mask_table,
+    if "q" in table:            # cardinality specialization: gathers only
+        return jax.vmap(lambda q: _decide(draws, q[0], q[1], q[2]))(
+            table["q"])
+    winner, reached = _masked_vote_winner(draws["votes"], table,
                                           k_proposers, use_kernel)
+    masks = {k: table[k] for k in MASK_KEYS}
     return jax.vmap(lambda m, w, r: _decide_masked(draws, m, w, r),
-                    in_axes=(0, 1, 1))(mask_table, winner, reached)
+                    in_axes=(0, 1, 1))(masks, winner, reached)
+
+
+def race(key: jax.Array, table, offsets: jax.Array, delay=None, *, n: int,
+         k_proposers: int, samples: int,
+         use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """K proposals race for one instance, scored under M quorum systems at
+    once.
+
+    key      PRNG key (delays are shared across systems — common random
+             numbers, so system-vs-system deltas carry no sampling noise)
+    table    ``build_mask_table`` dict — per-phase (M, G, n) weights and
+             (M, G) thresholds, all traced: same-shape tables reuse one
+             compile.  All-cardinality tables carry a ``"q"`` entry and
+             lower to k-th-order-statistic gathers (bit-identical).  A raw
+             (M, 3) threshold array is still accepted but deprecated.
+    offsets  (K,) proposer submission times in ms (traced)
+    delay    a ``repro.montecarlo.latency`` model (traced pytree)
+
+    Returns per-system-per-sample arrays, each (M, S):
+      fast_winner   proposer id that won on the fast path, -1 otherwise
+      reached_fast  some value gathered a full fast phase-2 quorum of votes
+      recovery      coordinated recovery decided the instance
+      undecided     not enough votes ever arrived (message loss)
+      latency_ms    decision latency from proposer 0's submission
+    """
+    table = _coerce_table(table, n, "race")
+    _check_mask_table(table, n)
+    return _race(key, table, offsets, delay, n=n, k_proposers=k_proposers,
+                 samples=samples, use_kernel=use_kernel)
 
 
 def _fast_path_draws(key: jax.Array, delay, n: int,
                      samples: int) -> jax.Array:
     """(S, n) conflict-free client -> acceptor -> learner path times, lost
-    hops at the sentinel.  Shared by ``fast_path`` and ``fast_path_masked``
-    so the two paths draw identical delays by construction (the masked /
-    threshold bit-identity contract rests on it)."""
+    hops at the sentinel.  Shared by both ``fast_path`` lowerings so they
+    draw identical delays by construction (the bit-identity contract rests
+    on it)."""
     k1, k2 = jax.random.split(key)
     d1 = delay.sample_hops(k1, (samples, n, 1), lat_mod.PROPOSAL)[..., 0]
     d2 = delay.sample_hops(k2, (samples, n), lat_mod.TO_LEARNER)
@@ -382,41 +469,35 @@ def _fast_path_draws(key: jax.Array, delay, n: int,
 
 
 @functools.partial(jax.jit, static_argnames=("n", "samples"))
-def fast_path_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
-                     delay=None, *, n: int, samples: int) -> jax.Array:
-    """(M, S) conflict-free fast-path commit latencies under general quorum
-    systems: the saturation instant of each system's phase-2f masks over the
-    client -> acceptor -> learner paths; one compile for the whole table."""
-    _check_mask_table(mask_table, n)
-    TRACE_COUNTS["fast_path_masked"] += 1
-    if delay is None:
-        delay = default_delay()
-    path = _fast_path_draws(key, delay, n, samples)
-    perm = jnp.argsort(path, axis=-1).astype(jnp.int32)
-    srt = jnp.take_along_axis(path, perm, axis=-1)
-    return jax.vmap(lambda m: _sat_time(srt, perm, m["p2f_w"],
-                                        m["p2f_t"]))(mask_table)
-
-
-@functools.partial(jax.jit, static_argnames=("n", "samples"))
-def fast_path(key: jax.Array, spec_table: jax.Array, delay=None, *,
-              n: int, samples: int) -> jax.Array:
-    """(M, S) conflict-free fast-path commit latencies (client -> acceptors
-    -> learner, q2f-th order statistic), one compile for the whole table."""
-    _check_table(spec_table)
+def _fast_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
+               n: int, samples: int) -> jax.Array:
     TRACE_COUNTS["fast_path"] += 1
     if delay is None:
         delay = default_delay()
-    srt = jnp.sort(_fast_path_draws(key, delay, n, samples), axis=-1)
-    return jax.vmap(lambda q: _kth(srt, q[2]))(spec_table)
+    path = _fast_path_draws(key, delay, n, samples)
+    if "q" in table:
+        srt = jnp.sort(path, axis=-1)
+        return jax.vmap(lambda q: _kth(srt, q[2]))(table["q"])
+    perm = jnp.argsort(path, axis=-1).astype(jnp.int32)
+    srt = jnp.take_along_axis(path, perm, axis=-1)
+    return jax.vmap(lambda m: _sat_time(srt, perm, m["p2f_w"], m["p2f_t"]))(
+        {k: table[k] for k in MASK_KEYS})
+
+
+def fast_path(key: jax.Array, table, delay=None, *, n: int,
+              samples: int) -> jax.Array:
+    """(M, S) conflict-free fast-path commit latencies: the saturation
+    instant of each system's phase-2f quorums over the client -> acceptor
+    -> learner paths (the q2f-th order statistic on cardinality tables);
+    one compile for the whole table."""
+    table = _coerce_table(table, n, "fast_path")
+    _check_mask_table(table, n)
+    return _fast_path(key, table, delay, n=n, samples=samples)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "samples"))
-def classic_path(key: jax.Array, spec_table: jax.Array, delay=None, *,
-                 n: int, samples: int) -> jax.Array:
-    """(M, S) leader-relayed classic commit latencies (q2c-th order
-    statistic after the client -> leader hop)."""
-    _check_table(spec_table)
+def _classic_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
+                  n: int, samples: int) -> jax.Array:
     TRACE_COUNTS["classic_path"] += 1
     if delay is None:
         delay = default_delay()
@@ -426,17 +507,77 @@ def classic_path(key: jax.Array, spec_table: jax.Array, delay=None, *,
     d2 = delay.sample_hops(k2, (samples, n), lat_mod.TO_COORDINATOR)
     path = d1 + d2
     path = jnp.where(path < UNDECIDED_MS, path, BIG)   # lost => never arrives
-    srt = jnp.sort(path, axis=-1)
-    return jax.vmap(lambda q: d0 + _kth(srt, q[1]))(spec_table)
+    if "q" in table:
+        srt = jnp.sort(path, axis=-1)
+        return jax.vmap(lambda q: d0 + _kth(srt, q[1]))(table["q"])
+    perm = jnp.argsort(path, axis=-1).astype(jnp.int32)
+    srt = jnp.take_along_axis(path, perm, axis=-1)
+    return jax.vmap(lambda m: d0 + _sat_time(srt, perm, m["p2c_w"],
+                                             m["p2c_t"]))(
+        {k: table[k] for k in MASK_KEYS})
 
 
-def summarize(latency_ms: jax.Array,
-              axis: int = -1) -> Dict[str, jax.Array]:
-    """Latency quantiles over the sample axis; works on (S,) or (M, S)."""
-    q = jnp.quantile(latency_ms, jnp.array([0.5, 0.95, 0.99]), axis=axis)
+def classic_path(key: jax.Array, table, delay=None, *, n: int,
+                 samples: int) -> jax.Array:
+    """(M, S) leader-relayed classic commit latencies (phase-2c quorum
+    saturation after the client -> leader hop)."""
+    table = _coerce_table(table, n, "classic_path")
+    _check_mask_table(table, n)
+    return _classic_path(key, table, delay, n=n, samples=samples)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated twins: masks are the single lowering now, so the ``*_masked``
+# names are aliases kept for one release.
+# ---------------------------------------------------------------------------
+
+def race_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
+                offsets: jax.Array, delay=None, *, n: int, k_proposers: int,
+                samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
+    """Deprecated alias of ``race`` (masks are the single lowering now)."""
+    _warn_deprecated("engine.race_masked",
+                     "call engine.race with the same mask table")
+    return race(key, mask_table, offsets, delay, n=n,
+                k_proposers=k_proposers, samples=samples,
+                use_kernel=use_kernel)
+
+
+def fast_path_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
+                     delay=None, *, n: int, samples: int) -> jax.Array:
+    """Deprecated alias of ``fast_path`` (masks are the single lowering)."""
+    _warn_deprecated("engine.fast_path_masked",
+                     "call engine.fast_path with the same mask table")
+    return fast_path(key, mask_table, delay, n=n, samples=samples)
+
+
+# ---------------------------------------------------------------------------
+# Summaries.
+# ---------------------------------------------------------------------------
+
+def summarize(out, axis: int = -1) -> Dict[str, jax.Array]:
+    """Latency quantiles over the sample axis; works on (S,) or (M, S).
+
+    ``out`` may be a raw latency array or an outcome dict as returned by
+    ``race`` / ``Scenario.run``.  For dicts, instances that never decided
+    (message loss / crashes) are *excluded* from the latency statistics —
+    they would otherwise drag the LOST_MS sentinel into every quantile —
+    and reported separately as ``undecided_rate``, alongside
+    ``fast_rate``/``recovery_rate`` decide-bit rates."""
+    if isinstance(out, dict):
+        lat = jnp.where(out["undecided"], jnp.nan, out["latency_ms"])
+        extra = {
+            "fast_rate": out["reached_fast"].mean(axis=axis),
+            "recovery_rate": out["recovery"].mean(axis=axis),
+            "undecided_rate": out["undecided"].mean(axis=axis),
+        }
+    else:
+        lat, extra = out, {}
+    q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99]), axis=axis)
     return {
-        "mean_ms": latency_ms.mean(axis=axis),
+        "mean_ms": jnp.nanmean(lat, axis=axis),
         "p50_ms": q[0],
         "p95_ms": q[1],
         "p99_ms": q[2],
+        "max_ms": jnp.nanmax(lat, axis=axis),
+        **extra,
     }

@@ -1,6 +1,7 @@
 """Named scenario builders: a scenario bundles race geometry (how many
 proposers, at what offsets) with a delay model, and knows how to run itself
-over a quorum-spec table — or a general quorum-system *mask* table — in one
+over a quorum-system *mask* table (``engine.build_mask_table`` — the single
+lowering for cardinality, grid, weighted and explicit systems) in one
 engine call.
 
 Builders cover the paper's §6 workloads plus the deployments the relaxation
@@ -53,27 +54,34 @@ class Scenario:
     delay: object
     conflict_frac: float = 1.0
 
-    def run(self, key: jax.Array, spec_table: jax.Array, samples: int,
+    def with_faults(self, crashed: Sequence[int]) -> "Scenario":
+        """Inject per-acceptor crashes: every hop touching a crashed
+        acceptor is lost (``CrashedDelay``)."""
+        if not len(tuple(crashed)):
+            return self
+        return replace(self, delay=CrashedDelay(
+            self.delay, _crash_mask(self.n, crashed)))
+
+    def run(self, key: jax.Array, table, samples: int,
             use_kernel: bool = False) -> Dict[str, jax.Array]:
-        """Evaluate every spec in ``spec_table`` over ``samples`` instances.
+        """Evaluate every quorum system in ``table`` (a ``build_mask_table``
+        dict — cardinality, grid, weighted and explicit systems all lower to
+        it) over ``samples`` instances.
 
         Returns (M, S)-shaped ``latency_ms`` plus race outcome flags (for the
         racing fraction) — one engine compile per (shape, scenario type).
-        """
-        return self._run(key, spec_table, samples, use_kernel, masked=False)
-
-    def run_masked(self, key: jax.Array, mask_table: Dict[str, jax.Array],
-                   samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
-        """``run`` over a ``build_mask_table`` table of general quorum
-        systems (grids, weighted, explicit); same outputs and single-compile
-        behaviour, same sampled delays as the threshold path."""
-        return self._run(key, mask_table, samples, use_kernel, masked=True)
-
-    def _run(self, key, table, samples, use_kernel, masked):
-        m = table["p1_w"].shape[0] if masked else table.shape[0]
+        A raw (M, 3) spec table is still accepted (deprecated, coerced by
+        the engine)."""
+        if not isinstance(table, dict):
+            engine._warn_deprecated(
+                "Scenario.run() with a raw (M, 3) spec table",
+                "build the table with build_mask_table([...QuorumSpec...]) "
+                "(or run it through repro.api.Experiment)")
+            table = engine.cardinality_table(table, self.n)
+        m = table["p1_w"].shape[0]
         if self.k_proposers == 1 or self.conflict_frac == 0.0:
-            fast = engine.fast_path_masked if masked else engine.fast_path
-            lat = fast(key, table, self.delay, n=self.n, samples=samples)
+            lat = engine.fast_path(key, table, self.delay, n=self.n,
+                                   samples=samples)
             undecided = lat >= engine.UNDECIDED_MS   # fast path never arrived
             return {"latency_ms": lat, "reached_fast": ~undecided,
                     "recovery": jnp.zeros((m, samples), bool),
@@ -83,47 +91,27 @@ class Scenario:
 
         k_race, k_free = jax.random.split(key)
         n_conf = max(1, int(round(samples * self.conflict_frac)))
-        race = engine.race_masked if masked else engine.race
-        out = race(k_race, table, self.offsets_ms, self.delay,
-                   n=self.n, k_proposers=self.k_proposers,
-                   samples=n_conf, use_kernel=use_kernel)
+        out = engine.race(k_race, table, self.offsets_ms, self.delay,
+                          n=self.n, k_proposers=self.k_proposers,
+                          samples=n_conf, use_kernel=use_kernel)
         n_free = samples - n_conf
         if n_free > 0:
             scen_free = Scenario(self.name, self.n, 1, self.offsets_ms[:1],
                                  self.delay)
-            free = scen_free._run(k_free, table, n_free, use_kernel, masked)
+            free = scen_free.run(k_free, table, n_free, use_kernel)
             out = {k: jnp.concatenate([free[k], out[k]], axis=-1)
                    for k in out}
         return out
 
-    def summary(self, key: jax.Array, spec_table: jax.Array, samples: int,
+    def summary(self, key: jax.Array, table, samples: int,
                 use_kernel: bool = False) -> Dict[str, jax.Array]:
-        """Per-spec latency quantiles + outcome rates, each entry (M,).
+        """Per-system latency quantiles + outcome rates, each entry (M,).
 
         Quantiles cover *decided* instances only; instances that never
         gathered enough votes (message loss) are reported separately via
         ``undecided_rate`` instead of polluting the distribution with the
-        LOST_MS sentinel."""
-        return _summarize(self.run(key, spec_table, samples, use_kernel))
-
-    def summary_masked(self, key: jax.Array, mask_table: Dict[str, jax.Array],
-                       samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
-        """``summary`` over a general quorum-system mask table."""
-        return _summarize(self.run_masked(key, mask_table, samples,
-                                          use_kernel))
-
-
-def _summarize(out: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    lat = jnp.where(out["undecided"], jnp.nan, out["latency_ms"])
-    q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99]), axis=-1)
-    return {
-        "mean_ms": jnp.nanmean(lat, axis=-1),
-        "p50_ms": q[0],
-        "p95_ms": q[1],
-        "p99_ms": q[2],
-        "recovery_rate": out["recovery"].mean(axis=-1),
-        "undecided_rate": out["undecided"].mean(axis=-1),
-    }
+        LOST_MS sentinel (``engine.summarize``)."""
+        return engine.summarize(self.run(key, table, samples, use_kernel))
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +169,7 @@ def lossy_acceptors(loss_prob: float = 0.01, k: int = 2,
 # ---------------------------------------------------------------------------
 # General-quorum-system workloads (the §6 closing remark): each builder
 # returns (scenario, masks) — the workload and the quorum system it is
-# built around — ready for ``engine.build_mask_table`` + ``run_masked``.
+# built around — ready for ``engine.build_mask_table`` + ``Scenario.run``.
 # ---------------------------------------------------------------------------
 
 def _crash_mask(n: int, crashed: Sequence[int]) -> jnp.ndarray:

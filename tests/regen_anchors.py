@@ -1,0 +1,34 @@
+"""Regenerate the fixed-seed regression anchors used by the test suite.
+
+Run when the engine's *sampling* is changed on purpose (key splits, draw
+order, presort layout) and the anchored numbers legitimately move:
+
+    PYTHONPATH=src python tests/regen_anchors.py
+
+then paste the printed values into
+``tests/test_montecarlo.py::test_summarize_fixed_seed_regression_anchor``.
+Anything that moves these numbers *without* an intentional sampling change
+is a silent behavioural regression — that is what the anchor exists to
+catch.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def montecarlo():
+    from repro.core.quorum import QuorumSpec
+    from repro.montecarlo import build_mask_table, engine
+
+    out = engine.race(jax.random.PRNGKey(123),
+                      build_mask_table([QuorumSpec.paper_headline(11)]),
+                      jnp.array([0.0, 0.25]), n=11, k_proposers=2,
+                      samples=20_000)
+    s = engine.summarize(out)
+    print(f"p50_ms          = {float(s['p50_ms'][0]):.6g}")
+    print(f"recovery_rate   = {float(s['recovery_rate'][0]):.6g}")
+    print(f"latency_ms[0,0] = {float(out['latency_ms'][0, 0]):.7g}")
+    print(f"latency_ms[0,1] = {float(out['latency_ms'][0, 1]):.7g}")
+
+
+if __name__ == "__main__":
+    montecarlo()

@@ -1,6 +1,6 @@
 """Unit tests for the batched Monte-Carlo scenario engine
-(``repro.montecarlo``): traced-threshold batching, delay models, scenarios,
-and agreement with the legacy per-spec shim."""
+(``repro.montecarlo``): the unified mask-table lowering, delay models,
+scenarios, summaries, and agreement with the legacy per-spec shim."""
 import jax
 import jax.numpy as jnp
 import pytest
@@ -18,7 +18,7 @@ FP = QuorumSpec.fast_paxos(11)
 
 
 # ---------------------------------------------------------------------------
-# spec tables + traced-threshold batching
+# tables + traced batching
 # ---------------------------------------------------------------------------
 
 def test_spec_table_shape_and_mixed_n_rejected():
@@ -28,9 +28,35 @@ def test_spec_table_shape_and_mixed_n_rejected():
         build_spec_table([FFP, QuorumSpec(7, 6, 2, 6)])
 
 
+def test_mask_table_specializes_cardinality_batches():
+    t = build_mask_table([FFP, FP])
+    assert t["q"].shape == (2, 3) and t["q"].dtype == jnp.int32
+    assert bool((t["q"][0] == jnp.array([9, 3, 7])).all())
+    assert "q" not in build_mask_table([FFP, FP], specialize=False)
+
+
+def test_legacy_spec_table_coerced_with_deprecation():
+    """The pre-mask-table signature still works — bit-identically — but
+    warns; race_masked/fast_path_masked are deprecated aliases."""
+    table = build_mask_table([FFP, FP])
+    kw = dict(n=11, k_proposers=2, samples=2_000)
+    offs = jnp.array([0.0, 0.3])
+    new = engine.race(KEY, table, offs, **kw)
+    with pytest.warns(DeprecationWarning, match="build_mask_table"):
+        old = engine.race(KEY, build_spec_table([FFP, FP]), offs, **kw)
+    for k in new:
+        assert bool((new[k] == old[k]).all()), k
+    with pytest.warns(DeprecationWarning, match="engine.race"):
+        alias = engine.race_masked(KEY, table, offs, **kw)
+    for k in new:
+        assert bool((new[k] == alias[k]).all()), k
+    with pytest.warns(DeprecationWarning, match="engine.fast_path"):
+        engine.fast_path_masked(KEY, table, n=11, samples=256)
+
+
 def test_batched_fast_path_matches_per_spec_shim():
     specs = [FP, FFP, QuorumSpec(11, 11, 1, 6)]
-    table = build_spec_table(specs)
+    table = build_mask_table(specs)
     batched = engine.fast_path(KEY, table, n=11, samples=40_000)
     for i, s in enumerate(specs):
         solo = jax_sim.fast_path_latency(KEY, s.n, s.q2f, 40_000)
@@ -40,7 +66,7 @@ def test_batched_fast_path_matches_per_spec_shim():
 
 def test_batched_race_matches_per_spec_shim():
     specs = [FP, FFP]
-    table = build_spec_table(specs)
+    table = build_mask_table(specs)
     out = engine.race(KEY, table, jnp.array([0.0, 0.3]), n=11,
                       k_proposers=2, samples=30_000)
     for i, s in enumerate(specs):
@@ -56,20 +82,20 @@ def test_full_valid_space_single_trace():
     one race trace, and a different same-shape table must cost zero."""
     specs = list(all_valid_specs(7))
     assert len(specs) > 50
-    table = build_spec_table(specs)
+    table = build_mask_table(specs)
     before = engine.TRACE_COUNTS["race"]
     out = engine.race(KEY, table, jnp.array([0.0, 0.2]), n=7,
                       k_proposers=2, samples=2_000)
     assert out["latency_ms"].shape == (len(specs), 2_000)
     assert engine.TRACE_COUNTS["race"] - before == 1
-    table2 = build_spec_table(list(reversed(specs)))
+    table2 = build_mask_table(list(reversed(specs)))
     engine.race(KEY, table2, jnp.array([0.0, 0.7]), n=7,
                 k_proposers=2, samples=2_000)
     assert engine.TRACE_COUNTS["race"] - before == 1
 
 
 def test_race_outcomes_partition_k3():
-    table = build_spec_table([FFP])
+    table = build_mask_table([FFP])
     out = engine.race(KEY, table, jnp.array([0.0, 0.2, 0.4]), n=11,
                       k_proposers=3, samples=10_000)
     total = (out["reached_fast"].astype(jnp.int32)
@@ -85,7 +111,7 @@ def test_race_outcomes_partition_under_loss():
     acceptor votes whose 2bs never reach the learner is NOT a fast commit —
     it falls back to recovery (or undecided), never both flags at once."""
     from repro.montecarlo.latency import default_delay
-    table = build_spec_table([FFP])
+    table = build_mask_table([FFP])
     out = engine.race(KEY, table, jnp.array([0.0, 0.3]),
                       LossyDelay(default_delay(), 0.4),
                       n=11, k_proposers=2, samples=20_000)
@@ -100,7 +126,7 @@ def test_race_outcomes_partition_under_loss():
 
 
 def test_kernel_and_ref_paths_identical():
-    table = build_spec_table([FFP, FP])
+    table = build_mask_table([FFP, FP])
     kw = dict(n=11, k_proposers=2, samples=8_000)
     offs = jnp.array([0.0, 0.3])
     o_ref = engine.race(KEY, table, offs, use_kernel=False, **kw)
@@ -154,7 +180,7 @@ def test_lossy_delay_marks_losses():
 # ---------------------------------------------------------------------------
 
 def test_conflict_free_scenario_equals_fast_path():
-    table = build_spec_table([FFP])
+    table = build_mask_table([FFP])
     scen = scenarios.conflict_free(n=11)
     out = scen.run(KEY, table, 5_000)
     direct = engine.fast_path(KEY, table, n=11, samples=5_000)
@@ -163,14 +189,14 @@ def test_conflict_free_scenario_equals_fast_path():
 
 
 def test_mixed_workload_blend():
-    table = build_spec_table([FFP])
+    table = build_mask_table([FFP])
     s = scenarios.mixed_workload(0.01, 0.3, n=11).summary(KEY, table, 20_000)
     assert float(s["p99_ms"][0]) >= float(s["p50_ms"][0]) > 0
     assert 0.0 <= float(s["recovery_rate"][0]) <= 0.01
 
 
 def test_wan_scenario_latency_dominated_by_geography():
-    table = build_spec_table([FFP])
+    table = build_mask_table([FFP])
     local = scenarios.conflict_free(n=11).summary(KEY, table, 5_000)
     geo = scenarios.wan(n=11, inter_region_ms=30.0)
     geo = Scenario(geo.name, geo.n, 1, geo.offsets_ms[:1], geo.delay)
@@ -179,7 +205,7 @@ def test_wan_scenario_latency_dominated_by_geography():
 
 
 def test_lossy_scenario_increases_recovery():
-    table = build_spec_table([FFP])
+    table = build_mask_table([FFP])
     clean = scenarios.k_way_race(2, 0.3, n=11).run(KEY, table, 30_000)
     lossy = scenarios.lossy_acceptors(0.15, delta_ms=0.3, n=11).run(
         KEY, table, 30_000)
@@ -190,11 +216,61 @@ def test_lossy_scenario_increases_recovery():
     assert bool(lossy["reached_fast"].any())
 
 
+# ---------------------------------------------------------------------------
+# summaries (engine.summarize is the one summary path for all layers)
+# ---------------------------------------------------------------------------
+
 def test_summarize_shapes():
     lat = jax.random.uniform(KEY, (3, 1000)) + 1.0
     s = engine.summarize(lat)
     for v in s.values():
         assert v.shape == (3,)
+
+
+def test_summarize_percentiles_monotone():
+    out = engine.race(KEY, build_mask_table([FFP, FP]),
+                      jnp.array([0.0, 0.3]), n=11, k_proposers=2,
+                      samples=20_000)
+    s = engine.summarize(out)
+    for i in range(2):
+        p50, p95 = float(s["p50_ms"][i]), float(s["p95_ms"][i])
+        p99, mx = float(s["p99_ms"][i]), float(s["max_ms"][i])
+        assert 0 < p50 <= p95 <= p99 <= mx, (i, p50, p95, p99, mx)
+
+
+def test_summarize_excludes_undecided_from_latency_stats():
+    """Undecided instances (LOST_MS sentinel latencies) must not drag the
+    sentinel into the quantiles — they are reported as a rate instead."""
+    lat = jnp.array([[1.0, 2.0, 3.0, engine.BIG]])
+    out = {"latency_ms": lat,
+           "undecided": lat >= engine.UNDECIDED_MS,
+           "reached_fast": jnp.array([[True, True, False, False]]),
+           "recovery": jnp.array([[False, False, True, False]])}
+    s = engine.summarize(out)
+    assert float(s["max_ms"][0]) == 3.0
+    assert float(s["p99_ms"][0]) < 3.01
+    assert float(s["mean_ms"][0]) == pytest.approx(2.0)
+    assert float(s["undecided_rate"][0]) == pytest.approx(0.25)
+    assert float(s["fast_rate"][0]) == pytest.approx(0.5)
+    assert float(s["recovery_rate"][0]) == pytest.approx(0.25)
+
+
+def test_summarize_fixed_seed_regression_anchor():
+    """Fixed-seed anchor: engine refactors that silently change the sampled
+    race structure (key splits, draw order, presort layout) move these
+    numbers far outside tolerance; refactors that only re-lower the decide
+    step keep them bit-stable.  Regenerate with
+    tests/regen_anchors.py::montecarlo if sampling changes *on purpose*."""
+    out = engine.race(jax.random.PRNGKey(123), build_mask_table([FFP]),
+                      jnp.array([0.0, 0.25]), n=11, k_proposers=2,
+                      samples=20_000)
+    s = engine.summarize(out)
+    assert float(s["p50_ms"][0]) == pytest.approx(1.22011, rel=1e-3)
+    assert float(s["recovery_rate"][0]) == pytest.approx(0.01645, rel=1e-3)
+    assert float(out["latency_ms"][0, 0]) == pytest.approx(1.258696,
+                                                           rel=1e-5)
+    assert float(out["latency_ms"][0, 1]) == pytest.approx(1.37547,
+                                                           rel=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -213,9 +289,17 @@ def test_crashed_delay_loses_every_hop_of_crashed_acceptors():
     assert leaves                      # registered pytree (traced crash set)
 
 
+def test_scenario_with_faults_matches_manual_crash_wrap():
+    scen = scenarios.k_way_race(2, 0.3, n=11)
+    wrapped = scen.with_faults((0, 5))
+    assert isinstance(wrapped.delay, CrashedDelay)
+    assert bool(wrapped.delay.crashed[0]) and bool(wrapped.delay.crashed[5])
+    assert scen.with_faults(()) is scen
+
+
 def test_grid_wan_scenario_masked_outcomes_partition():
     scen, masks = scenarios.grid_wan(cols=3, k=2, delta_ms=0.3)
-    out = scen.run_masked(KEY, build_mask_table([masks]), 4_000)
+    out = scen.run(KEY, build_mask_table([masks]), 4_000)
     total = (out["reached_fast"].astype(jnp.int32)
              + out["recovery"].astype(jnp.int32)
              + out["undecided"].astype(jnp.int32))
@@ -233,7 +317,7 @@ def test_weighted_scenario_beats_uniform_on_fast_path():
     equal; sanity-check the masked scenario wiring end-to-end."""
     scen, masks = scenarios.weighted_acceptors(delta_ms=0.3)
     table = build_mask_table([masks, QuorumSpec.fast_paxos(11)])
-    s = scen.summary_masked(KEY, table, 8_000)
+    s = scen.summary(KEY, table, 8_000)
     assert float(s["p50_ms"][0]) <= float(s["p50_ms"][1]) + 1e-6
     assert float(s["undecided_rate"][0]) == 0.0
 
@@ -242,6 +326,6 @@ def test_weighted_heavy_crash_hurts_more_than_light():
     heavy, masks = scenarios.weighted_acceptors(crashed=(0, 1))   # two 2s
     light, _ = scenarios.weighted_acceptors(crashed=(9, 10))      # two 1s
     table = build_mask_table([masks])
-    s_heavy = heavy.summary_masked(KEY, table, 6_000)
-    s_light = light.summary_masked(KEY, table, 6_000)
+    s_heavy = heavy.summary(KEY, table, 6_000)
+    s_light = light.summary(KEY, table, 6_000)
     assert float(s_heavy["p50_ms"][0]) >= float(s_light["p50_ms"][0]) - 1e-6

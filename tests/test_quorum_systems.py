@@ -17,7 +17,7 @@ from repro.core.model_check import explore
 from repro.core.quorum import (ExplicitQuorumSystem, QuorumSpec,
                                WeightedQuorumSystem, all_valid_specs)
 from repro.kernels.quorum_tally import ref as qt_ref
-from repro.montecarlo import build_mask_table, build_spec_table, engine
+from repro.montecarlo import build_mask_table, engine
 
 KEY = jax.random.PRNGKey(11)
 
@@ -120,17 +120,19 @@ def test_mask_satisfaction_matches_set_semantics(system):
 @given(q1=st.integers(1, 5), q2c=st.integers(1, 5), q2f=st.integers(1, 5),
        seed=st.integers(0, 10_000))
 def test_masked_decide_equals_threshold_decide(q1, q2c, q2f, seed):
-    """For any valid n=5 cardinality spec, the mask path must be
-    bit-identical to the threshold path on the same sampled race (shapes are
-    fixed, so the whole property run costs one compile per path)."""
+    """For any valid n=5 cardinality spec, the general masked lowering must
+    be bit-identical to the k-th-order-statistic specialization ("q" table)
+    on the same sampled race (shapes are fixed, so the whole property run
+    costs one compile per lowering)."""
     spec = QuorumSpec(5, q1, q2c, q2f)
     if not spec.is_valid():
         return
     key = jax.random.PRNGKey(seed)
     offs = jnp.array([0.0, 0.25])
     kw = dict(n=5, k_proposers=2, samples=512)
-    thr = engine.race(key, build_spec_table([spec]), offs, **kw)
-    msk = engine.race_masked(key, build_mask_table([spec]), offs, **kw)
+    thr = engine.race(key, build_mask_table([spec]), offs, **kw)
+    msk = engine.race(key, build_mask_table([spec], specialize=False),
+                      offs, **kw)
     for k in thr:
         assert bool((thr[k] == msk[k]).all()), (k, spec)
 
@@ -178,31 +180,47 @@ def test_mask_table_padding_and_embedding():
 
 
 def test_mask_table_rejects_mixed_n_and_garbage():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="system 1"):
         build_mask_table([QuorumSpec.paper_headline(11), QuorumSpec(7, 6, 2, 6)])
     with pytest.raises(ValueError):
-        engine.race_masked(KEY, {"p1_w": jnp.ones((1, 1, 5))},
-                           jnp.array([0.0, 0.1]), n=5, k_proposers=2,
-                           samples=8)
+        engine.race(KEY, {"p1_w": jnp.ones((1, 1, 5))},
+                    jnp.array([0.0, 0.1]), n=5, k_proposers=2,
+                    samples=8)
 
 
-def test_fast_path_masked_bit_identical_on_cardinality():
+def test_mask_table_mixed_n_error_names_offender():
+    """Satellite: the n-mismatch error must say *which* system is wrong,
+    not surface as an opaque XLA broadcast error."""
+    grid = ExplicitQuorumSystem.grid(3)          # n = 9
+    with pytest.raises(ValueError) as exc:
+        build_mask_table([QuorumSpec.paper_headline(11), grid])
+    msg = str(exc.value)
+    assert "system 1" in msg and "n=9" in msg and "n=11" in msg
+    assert "embed" in msg                        # actionable hint
+
+
+def test_fast_and_classic_path_lowerings_bit_identical():
     specs = [QuorumSpec.paper_headline(11), QuorumSpec.fast_paxos(11)]
-    thr = engine.fast_path(KEY, build_spec_table(specs), n=11, samples=8_000)
-    msk = engine.fast_path_masked(KEY, build_mask_table(specs), n=11,
-                                  samples=8_000)
-    assert bool((thr == msk).all())
+    spec_t = build_mask_table(specs)                       # "q" gathers
+    gen_t = build_mask_table(specs, specialize=False)      # masked saturation
+    assert bool((engine.fast_path(KEY, spec_t, n=11, samples=8_000)
+                 == engine.fast_path(KEY, gen_t, n=11, samples=8_000)).all())
+    assert bool((engine.classic_path(KEY, spec_t, n=11, samples=8_000)
+                 == engine.classic_path(KEY, gen_t, n=11,
+                                        samples=8_000)).all())
 
 
 def test_all_valid_n4_specs_roundtrip_masked():
-    """Whole n=4 valid space: masked == threshold, one compile, one table."""
+    """Whole n=4 valid space: general lowering == "q" specialization, one
+    compile per lowering, one table."""
     specs = list(all_valid_specs(4))
     assert specs
     offs = jnp.array([0.0, 0.3])
     kw = dict(n=4, k_proposers=2, samples=1_000)
-    thr = engine.race(KEY, build_spec_table(specs), offs, **kw)
-    before = engine.TRACE_COUNTS["race_masked"]
-    msk = engine.race_masked(KEY, build_mask_table(specs), offs, **kw)
-    assert engine.TRACE_COUNTS["race_masked"] - before == 1
+    thr = engine.race(KEY, build_mask_table(specs), offs, **kw)
+    before = engine.TRACE_COUNTS["race"]
+    msk = engine.race(KEY, build_mask_table(specs, specialize=False),
+                      offs, **kw)
+    assert engine.TRACE_COUNTS["race"] - before == 1
     for k in thr:
         assert bool((thr[k] == msk[k]).all()), k

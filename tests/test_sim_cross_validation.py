@@ -20,7 +20,7 @@ import pytest
 from repro.core.quorum import ExplicitQuorumSystem, QuorumSpec
 from repro.core.simulator import (FastPaxosSim, conflict_free_workload,
                                   latency_stats)
-from repro.montecarlo import build_mask_table, build_spec_table, engine
+from repro.montecarlo import build_mask_table, engine
 
 FFP = QuorumSpec.paper_headline(11)
 FP = QuorumSpec.fast_paxos(11)
@@ -48,7 +48,7 @@ def _des_recovery_prob(spec, k_proposers: int, delta_ms: float,
 
 @pytest.mark.parametrize("spec", [FFP, FP], ids=["ffp", "fp"])
 def test_fast_path_p50_matches_des(spec):
-    table = build_spec_table([spec])
+    table = build_mask_table([spec])
     mc_p50 = float(jnp.median(
         engine.fast_path(KEY, table, n=spec.n, samples=MC_SAMPLES)[0]))
     sim = FastPaxosSim(spec, seed=11)
@@ -60,7 +60,7 @@ def test_fast_path_p50_matches_des(spec):
 @pytest.mark.parametrize("spec", [FFP, FP], ids=["ffp", "fp"])
 @pytest.mark.parametrize("k_proposers", [2, 3])
 def test_recovery_probability_matches_des(spec, k_proposers):
-    table = build_spec_table([spec])
+    table = build_mask_table([spec])
     offsets = DELTA_MS * jnp.arange(k_proposers, dtype=jnp.float32)
     out = engine.race(KEY, table, offsets, n=spec.n,
                       k_proposers=k_proposers, samples=MC_SAMPLES)
@@ -77,7 +77,7 @@ def test_grid_fast_path_p50_matches_des():
     counts) must agree on conflict-free fast-path p50 within 5%."""
     table = build_mask_table([GRID])
     mc_p50 = float(jnp.median(
-        engine.fast_path_masked(KEY, table, n=GRID.n, samples=MC_SAMPLES)[0]))
+        engine.fast_path(KEY, table, n=GRID.n, samples=MC_SAMPLES)[0]))
     sim = FastPaxosSim(GRID, seed=11)
     conflict_free_workload(sim, 3000, rate_per_s=1400)
     des_p50 = latency_stats(sim.run())["p50_ms"]
@@ -91,7 +91,7 @@ def test_grid_recovery_probability_matches_des(k_proposers):
     the masked saturation path — agreement within 0.05 absolute."""
     table = build_mask_table([GRID])
     offsets = DELTA_MS * jnp.arange(k_proposers, dtype=jnp.float32)
-    out = engine.race_masked(KEY, table, offsets, n=GRID.n,
+    out = engine.race(KEY, table, offsets, n=GRID.n,
                              k_proposers=k_proposers, samples=MC_SAMPLES)
     p_mc = float(out["recovery"][0].mean())
     p_des = _des_recovery_prob(GRID, k_proposers, DELTA_MS, DES_PAIRS)
@@ -100,7 +100,7 @@ def test_grid_recovery_probability_matches_des(k_proposers):
 
 def test_more_proposers_mean_more_recoveries():
     """Sanity on the K generalization: contention can only hurt."""
-    table = build_spec_table([FFP])
+    table = build_mask_table([FFP])
     rates = []
     for k in (2, 3, 4):
         offsets = DELTA_MS * jnp.arange(k, dtype=jnp.float32)
