@@ -1,0 +1,130 @@
+"""Diff a benchmark record against the committed baseline.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \\
+      BENCH_quick.json BENCH_baseline.json
+
+CI runs ``benchmarks.run --quick --json BENCH_quick.json`` and feeds the
+result here with ``BENCH_baseline.json`` (committed at the repo root,
+regenerated with the same command whenever a change moves the numbers on
+purpose).  Tolerances are deliberately generous — baseline and CI runners
+are different machines — so the gate catches *order-of-magnitude*
+regressions and structural breaks mechanically, while ±30% drifts are
+reported as warnings for a human to eyeball in the job log:
+
+  wall/latency timings (``*_us``, ``*_s``)   FAIL when > 10x the baseline;
+                                             WARN when > 1.3x
+  throughputs (``*trials_per_s*``)           FAIL when < baseline/10;
+                                             WARN when < baseline/1.3
+  compile counts (``trace_counts``,          FAIL on any increase — a
+  ``*compiles*``)                            per-system re-jit never comes
+                                             back silently
+  everything else (figure stats, rates)      FAIL when outside ±30%
+                                             (absolute floor 0.05 so
+                                             near-zero rates don't trip)
+  metric present in baseline but missing     FAIL — a benchmark section
+  from the current run                       silently disappeared
+
+Exit status 0 = clean (warnings allowed), 1 = regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+TIMING_SUFFIXES = ("_us", "_s")
+ABS_FLOOR = 0.05
+RATIO_FAIL = 10.0
+RATIO_WARN = 1.3
+REL_TOL = 0.30
+
+
+def _is_timing(name: str) -> bool:
+    base = name.split("[")[0]
+    return base.endswith(TIMING_SUFFIXES) and "trials_per_s" not in name
+
+
+def _is_throughput(name: str) -> bool:
+    return "trials_per_s" in name
+
+
+def _is_count(name: str) -> bool:
+    return "compile" in name or name.startswith("trace_counts.")
+
+
+def compare(current: Dict, baseline: Dict) -> Tuple[List[str], List[str]]:
+    """Returns (failures, warnings) as human-readable lines."""
+    fails: List[str] = []
+    warns: List[str] = []
+
+    cur = dict(current.get("metrics", {}))
+    base = dict(baseline.get("metrics", {}))
+    for scope in ("current", "baseline"):
+        rec = current if scope == "current" else baseline
+        tgt = cur if scope == "current" else base
+        for k, v in rec.get("trace_counts", {}).items():
+            tgt[f"trace_counts.{k}"] = v
+
+    for name, b in sorted(base.items()):
+        if name not in cur:
+            fails.append(f"MISSING  {name} (baseline {b:.6g}) — section "
+                         f"dropped or renamed without a baseline refresh")
+            continue
+        c = cur[name]
+        if _is_count(name):
+            if c > b:
+                fails.append(f"COMPILES {name}: {c:.0f} > baseline {b:.0f} "
+                             f"— a re-jit crept in")
+            continue
+        if _is_timing(name):
+            if b > 0 and c > RATIO_FAIL * b:
+                fails.append(f"SLOWER   {name}: {c:.6g} vs {b:.6g} "
+                             f"(> {RATIO_FAIL:.0f}x)")
+            elif b > 0 and c > RATIO_WARN * b:
+                warns.append(f"slower   {name}: {c:.6g} vs {b:.6g} "
+                             f"({c / b:.2f}x)")
+            continue
+        if _is_throughput(name):
+            if b > 0 and c < b / RATIO_FAIL:
+                fails.append(f"SLOWER   {name}: {c:.6g} vs {b:.6g} "
+                             f"(< 1/{RATIO_FAIL:.0f}x)")
+            elif b > 0 and c < b / RATIO_WARN:
+                warns.append(f"slower   {name}: {c:.6g} vs {b:.6g} "
+                             f"({c / b:.2f}x)")
+            continue
+        tol = REL_TOL * max(abs(b), ABS_FLOOR)
+        if abs(c - b) > tol:
+            fails.append(f"DRIFT    {name}: {c:.6g} vs baseline {b:.6g} "
+                         f"(|Δ| {abs(c - b):.6g} > {tol:.6g})")
+
+    for name in sorted(set(cur) - set(base)):
+        warns.append(f"new      {name} = {cur[name]:.6g} (not in baseline; "
+                     f"refresh BENCH_baseline.json to start tracking)")
+    return fails, warns
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly generated record "
+                                    "(benchmarks.run --json)")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    args = ap.parse_args()
+    with open(args.current) as fh:
+        current = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+
+    fails, warns = compare(current, baseline)
+    for line in warns:
+        print(f"[warn] {line}")
+    for line in fails:
+        print(f"[FAIL] {line}")
+    n_base = len(baseline.get("metrics", {}))
+    print(f"check_regression: {n_base} baseline metrics, "
+          f"{len(warns)} warnings, {len(fails)} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

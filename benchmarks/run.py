@@ -2,6 +2,7 @@
 own microbenches and the roofline table summary.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-kernels]
+                                          [--json BENCH_quick.json]
 
 Sections:
   fig2a / fig2b / fig2c   paper §6 reproduction (FP vs FFP, n=11)
@@ -10,11 +11,17 @@ Sections:
                           weighted in one masked compile (§6 closing remark)
   mc.*                    montecarlo engine end-to-end: whole spec table per
                           call, traced thresholds (DESIGN.md §2)
+  stream.*                streaming engine: trials/sec at fixed memory,
+                          10^7-trial acceptance row (DESIGN.md §7)
   kernel.*                per-kernel timing: jnp reference under jit (wall),
                           Pallas interpret-mode parity asserted in tests/
   roofline.*              aggregate of experiments/dryrun/*.json
 
 Output: ``name,value`` CSV on stdout (timings in us where applicable).
+``--json`` additionally writes the machine-readable benchmark record CI
+diffs against ``BENCH_baseline.json`` (``benchmarks.check_regression``):
+every metric row, per-section wall time and engine trace counts (compile
+counts), plus environment metadata.
 """
 from __future__ import annotations
 
@@ -120,6 +127,59 @@ def montecarlo_benches(quick: bool):
     return rows
 
 
+def streaming_benches(quick: bool):
+    """Streaming engine throughput at fixed memory: trials/sec for the
+    chunked fast-path and race drivers, and the 10^7-trial acceptance row
+    through the Experiment front door (10^6 under --quick so the CI smoke
+    job stays snappy).  Each timing is the second run — the first warms the
+    one compile the scan reuses."""
+    from repro.api import Experiment, Workload
+    from repro.core.quorum import QuorumSpec
+    from repro.montecarlo import build_mask_table, streaming
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    table = build_mask_table([QuorumSpec.paper_headline(11),
+                              QuorumSpec.fast_paxos(11)])
+    t_fast = 1_000_000 if quick else 10_000_000
+    t_race = 200_000 if quick else 2_000_000
+    chunk = 131_072
+
+    def timed(fn):
+        jax.block_until_ready(jax.tree_util.tree_leaves(fn())[0])
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        return out, time.perf_counter() - t0
+
+    state, dt = timed(lambda: streaming.fast_path_stream(
+        key, table, n=11, trials=t_fast, chunk=chunk))
+    rows.append((f"stream.fast_path.trials_per_s[{t_fast}]", t_fast / dt))
+    rows.append(("stream.fast_path.p999_ms", float(state.quantile(0.999)[0])))
+
+    offs = jnp.array([0.0, 0.2], jnp.float32)
+    state, dt = timed(lambda: streaming.race_stream(
+        key, table, offs, n=11, k_proposers=2, trials=t_race, chunk=chunk))
+    rows.append((f"stream.race.trials_per_s[{t_race}]", t_race / dt))
+    rows.append(("stream.race.p99_ms", float(state.quantile(0.99)[0])))
+
+    # the acceptance row: the declarative front door streams the same
+    # trial count in one-chunk memory (fixed-size state asserted)
+    exp = Experiment(systems=[QuorumSpec.paper_headline(11)],
+                     workload=Workload.conflict_free(), trials=t_fast,
+                     chunk=chunk, compute_fault_tolerance=False)
+    t0 = time.perf_counter()
+    r = exp.run("montecarlo")
+    jax.block_until_ready(r.stream.hist)
+    assert int(r.stream.n_trials[0]) == t_fast
+    rows.append((f"stream.experiment.wall_s[{t_fast}]",
+                 time.perf_counter() - t0))
+    rows.append(("stream.experiment.p50_ms", float(r.summary["p50_ms"][0])))
+    rows.append(("stream.experiment.p999_ms",
+                 float(r.summary["p999_ms"][0])))
+    return rows
+
+
 def roofline_summary(dryrun_dir: str = "experiments/dryrun"):
     rows = []
     files = sorted(glob.glob(os.path.join(dryrun_dir, "*.single.json")))
@@ -143,45 +203,91 @@ def roofline_summary(dryrun_dir: str = "experiments/dryrun"):
     return rows
 
 
+def _sections(args):
+    """(name, runner, prints_itself) triples in execution order."""
+    def fig2a(q):
+        from benchmarks import fig2a_latency
+        return fig2a_latency.main(quick=q)
+
+    def fig2b(q):
+        from benchmarks import fig2b_conflict_latency
+        return fig2b_conflict_latency.main(quick=q)
+
+    def fig2c(q):
+        from benchmarks import fig2c_conflict_prob
+        return fig2c_conflict_prob.main(quick=q)
+
+    def sweep(q):
+        from benchmarks import quorum_sweep
+        return quorum_sweep.main(quick=q)
+
+    def qsys(q):
+        from benchmarks import quorum_systems
+        return quorum_systems.main(quick=q)
+
+    out = [("fig2a", fig2a, True), ("fig2b", fig2b, True),
+           ("fig2c", fig2c, True), ("sweep", sweep, True),
+           ("qsys", qsys, True), ("mc", montecarlo_benches, False),
+           ("stream", streaming_benches, False)]
+    if not args.skip_kernels:
+        out.append(("kernels", kernel_benches, False))
+    out.append(("roofline", lambda q: roofline_summary(), False))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
-                         "qsys,mc,kernels,roofline")
+                         "qsys,mc,stream,kernels,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable benchmark record "
+                         "(metrics + per-section wall time + compile "
+                         "counts) for benchmarks.check_regression")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    def want(name: str) -> bool:
-        return only is None or name in only
+    from repro.montecarlo import engine
 
+    metrics, sections = {}, {}
     t0 = time.time()
-    if want("fig2a"):
-        from benchmarks import fig2a_latency
-        fig2a_latency.main(quick=args.quick)
-    if want("fig2b"):
-        from benchmarks import fig2b_conflict_latency
-        fig2b_conflict_latency.main(quick=args.quick)
-    if want("fig2c"):
-        from benchmarks import fig2c_conflict_prob
-        fig2c_conflict_prob.main(quick=args.quick)
-    if want("sweep"):
-        from benchmarks import quorum_sweep
-        quorum_sweep.main(quick=args.quick)
-    if want("qsys"):
-        from benchmarks import quorum_systems
-        quorum_systems.main(quick=args.quick)
-    if want("mc"):
-        for name, val in montecarlo_benches(args.quick):
-            print(f"{name},{val:.6g}")
-    if not args.skip_kernels and want("kernels"):
-        for name, val in kernel_benches(args.quick):
-            print(f"{name},{val:.6g}")
-    if want("roofline"):
-        for name, val in roofline_summary():
-            print(f"{name},{val:.6g}")
-    print(f"bench.total_wall_s,{time.time() - t0:.1f}")
+    for name, fn, prints_itself in _sections(args):
+        if only is not None and name not in only:
+            continue
+        tc0 = dict(engine.TRACE_COUNTS)
+        s0 = time.perf_counter()
+        rows = fn(args.quick) or []
+        wall = time.perf_counter() - s0
+        if not prints_itself:
+            for rname, val in rows:
+                print(f"{rname},{val:.6g}")
+        metrics.update({rname: float(val) for rname, val in rows})
+        sections[name] = {
+            "wall_s": wall,
+            "engine_compiles": {k: v - tc0[k]
+                                for k, v in engine.TRACE_COUNTS.items()
+                                if v - tc0[k]},
+        }
+    total = time.time() - t0
+    print(f"bench.total_wall_s,{total:.1f}")
+
+    if args.json:
+        record = {
+            "meta": {
+                "quick": bool(args.quick),
+                "jax": jax.__version__,
+                "platform": jax.default_backend(),
+                "device_count": len(jax.devices()),
+            },
+            "sections": sections,
+            "trace_counts": dict(engine.TRACE_COUNTS),
+            "metrics": {**metrics, "bench.total_wall_s": total},
+        }
+        with open(args.json, "w") as fh:
+            json.dump(record, fh, indent=1, sort_keys=True)
+        print(f"bench.json_written,{args.json}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,13 @@ Quorum systems are anything satisfying the ``QuorumSystem`` protocol
 (``QuorumSpec``, ``ExplicitQuorumSystem``, ``WeightedQuorumSystem``, raw
 ``QuorumMasks`` for the Monte-Carlo backend); the Monte-Carlo lowering is
 always the membership-mask table (DESIGN.md §2/§6).
+
+``Experiment(..., trials=10_000_000)`` streams the Monte-Carlo backend:
+chunked trial reduction into a fixed-size quantile sketch
+(``StreamSummary``), sharded over local devices — memory stays one chunk
+no matter the trial count (DESIGN.md §7).
 """
+from repro.montecarlo.streaming import StreamSummary  # noqa: F401
+
 from .experiment import (BACKENDS, Experiment, Results,  # noqa: F401
                          Workload, sweep)

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from repro.core.model_check import explore
 from repro.core.quorum import QuorumMasks
 from repro.core.simulator import FastPaxosSim, LatencyModel
-from repro.montecarlo import engine
+from repro.montecarlo import engine, streaming
 from repro.montecarlo.latency import (LossyDelay, ShiftedLognormalDelay,
                                       WanDelay)
 from repro.montecarlo.scenarios import Scenario
@@ -172,8 +172,13 @@ class Results:
                          system): latency percentiles (decided instances
                          only) and fast/recovery/undecided rates; for the
                          modelcheck backend, ``safe``/``states``.
-    ``raw``              montecarlo only: the per-sample (M, S) decide bits
-                         and latencies straight from the engine.
+    ``raw``              materializing montecarlo only: the per-sample
+                         (M, S) decide bits and latencies straight from
+                         the engine (None when streamed — per-trial arrays
+                         are never materialized at streaming trial counts).
+    ``stream``           streamed montecarlo only: the mergeable
+                         ``StreamSummary`` (counts + quantile sketch), for
+                         further merging or custom quantile queries.
     ``fault_tolerance``  per-system crash budgets per phase (brute force
                          over the masks; None above n=14).
     ``safety``           modelcheck only: per-system verdict dicts
@@ -186,6 +191,7 @@ class Results:
     raw: Optional[Dict[str, jax.Array]] = None
     fault_tolerance: Optional[Tuple[Dict[str, int], ...]] = None
     safety: Optional[Tuple[Dict[str, Any], ...]] = None
+    stream: Optional[streaming.StreamSummary] = None
 
     def system(self, which) -> Dict[str, float]:
         """Per-system scalar view, by label or index."""
@@ -223,12 +229,13 @@ def _scalar(v):
 
 
 def _results_flatten(r: Results):
-    return ((r.summary, r.raw),
+    return ((r.summary, r.raw, r.stream),
             (r.backend, r.labels, r.fault_tolerance, r.safety))
 
 
 def _results_unflatten(aux, children):
-    return Results(aux[0], aux[1], children[0], children[1], aux[2], aux[3])
+    return Results(aux[0], aux[1], children[0], children[1], aux[2], aux[3],
+                   children[2])
 
 
 jax.tree_util.register_pytree_node(Results, _results_flatten,
@@ -252,6 +259,17 @@ class Experiment:
 
     The same object runs against all three backends; only ``backend``
     (or the ``run`` argument) selects the execution engine.
+
+    ``trials`` switches the montecarlo backend to the streaming engine
+    (``repro.montecarlo.streaming``): trials are drawn, decided and
+    reduced chunk-by-chunk into a fixed-size quantile sketch, sharded over
+    local devices — 10^7+ trials in one-chunk memory, with ``Results``
+    exposing the same normalized summary keys (plus ``p999_ms``, which
+    only streaming trial counts make meaningful) and ``Results.raw`` None.
+    ``precision`` is the sketch's guaranteed relative quantile error;
+    ``chunk`` the per-step trial block; ``shard`` toggles the trial-axis
+    ``shard_map``.  When ``trials`` is None the materializing path runs
+    unchanged on ``samples``.
     """
 
     systems: Tuple
@@ -263,6 +281,10 @@ class Experiment:
     use_kernel: bool = False
     max_states: int = 200_000      # modelcheck BFS cap
     compute_fault_tolerance: bool = True   # brute-force crash budgets
+    trials: Optional[int] = None   # streaming trial count (montecarlo)
+    precision: float = streaming.DEFAULT_PRECISION
+    chunk: int = streaming.DEFAULT_CHUNK
+    shard: bool = True
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "systems", tuple(self.systems))
@@ -272,6 +294,8 @@ class Experiment:
         if self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}; "
                              f"pick one of {BACKENDS}")
+        if self.trials is not None and self.trials < 1:
+            raise ValueError(f"trials must be >= 1, got {self.trials}")
 
     # -- lowering ----------------------------------------------------------
     def masks(self) -> Tuple[QuorumMasks, ...]:
@@ -340,8 +364,16 @@ class Experiment:
 
     def _run_montecarlo(self) -> Results:
         scen = self.workload.scenario(self.n, self.faults)
-        out = scen.run(jax.random.PRNGKey(self.seed), self.lower(),
-                       self.samples, self.use_kernel)
+        key = jax.random.PRNGKey(self.seed)
+        if self.trials is not None:
+            state = scen.stream(key, self.lower(), self.trials,
+                                chunk=self.chunk, precision=self.precision,
+                                use_kernel=self.use_kernel,
+                                shard=self.shard)
+            return Results(backend="montecarlo", labels=self.labels,
+                           summary=state.summary(), stream=state,
+                           fault_tolerance=self._fault_tolerance())
+        out = scen.run(key, self.lower(), self.samples, self.use_kernel)
         return Results(backend="montecarlo", labels=self.labels,
                        summary=engine.summarize(out), raw=out,
                        fault_tolerance=self._fault_tolerance())
@@ -399,6 +431,7 @@ class Experiment:
         return {
             "mean_ms": sum(lats) / len(lats) if lats else float("nan"),
             "p50_ms": q(0.50), "p95_ms": q(0.95), "p99_ms": q(0.99),
+            "p999_ms": q(0.999),
             "max_ms": lats[-1] if lats else float("nan"),
             "fast_rate": fast / m, "recovery_rate": rec / m,
             "undecided_rate": (m - fast - rec) / m,

@@ -175,6 +175,175 @@ def masked_tally(votes: jax.Array, weights: jax.Array, thresholds: jax.Array,
     return out[:S, :G]
 
 
+# ---------------------------------------------------------------------------
+# Streaming fusion: masked tally + decide + block-local histogram.
+# ---------------------------------------------------------------------------
+
+# Smaller trial blocks than the standalone tallies: the (BLOCK, bins_pad)
+# one-hot histogram tile rides in VMEM next to the votes block.
+BLOCK_STREAM = 512
+
+
+def _stream_kernel(votes_ref, w_ref, t_ref, sat_ref, rec_ref, valid_ref,
+                   hist_ref, stats_ref, *, n_values: int, precision: float,
+                   bins: int, undecided_ms: float):
+    """One (system m, trial block s) grid step, everything VMEM-resident:
+
+    * masked tally of the votes block against system m's fast-quorum rows
+      (per-value MXU contraction, exactly ``_masked_tally_kernel``),
+    * decide: smallest satisfying value id -> winner; gather its fast
+      saturation instant; fall back to the recovery time otherwise,
+    * classify fast / recovery / undecided (gated on the validity mask),
+    * block-local DDSketch update: log-bucket index per decided trial, then
+      a one-hot lane compare summed over the block,
+    * running (M,)-shaped reductions: counts, latency sum, latency max.
+
+    Outputs are revisited across the s grid dimension (index map pins them
+    to block m), so the kernel initializes at s == 0 and accumulates after
+    — the whole chunk reduces without leaving VMEM.
+    """
+    from repro.montecarlo.streaming import bucket_index
+    s = pl.program_id(1)
+    votes = votes_ref[...]                               # (BS, n_pad) int32
+    w = w_ref[0]                                         # (G_pad, n_pad) f32
+    t = t_ref[0]                                         # (1, G_pad) f32
+    sat = sat_ref[0]                                     # (BS, K_pad) f32
+    rec = rec_ref[...][0]                                # (BS,) f32
+    valid = valid_ref[...][0] != 0                       # (BS,) bool
+
+    # masked tally: smallest value id saturating any fast row (else V).
+    best = jnp.full((votes.shape[0], w.shape[0]), n_values, jnp.int32)
+    for v in range(n_values - 1, -1, -1):   # descending: lowest id wins
+        hit = (votes == v).astype(jnp.float32)
+        wsum = jax.lax.dot_general(hit, w, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        best = jnp.where(wsum >= t, v, best)             # (BS, G_pad)
+    best = best.min(axis=-1)                             # (BS,)
+    reached = best < n_values
+    widx = jnp.clip(best, 0, n_values - 1)
+
+    # decide: winner's fast saturation instant, else coordinated recovery.
+    t_fast = jnp.zeros_like(rec)
+    for k in range(n_values):                # static one-hot gather over K
+        t_fast = jnp.where(widx == k, sat[:, k], t_fast)
+    fast_ok = reached & (t_fast < undecided_ms)
+    lat = jnp.where(fast_ok, t_fast, rec)
+    und = lat >= undecided_ms
+    fast = fast_ok & valid
+    recb = ~fast_ok & ~und & valid
+    undb = und & valid
+    decided = fast | recb
+
+    # block-local histogram: one-hot bucket compare, summed over the block.
+    idx = bucket_index(lat, precision)                   # (BS,)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (votes.shape[0],
+                                                 hist_ref.shape[-1]), 1)
+    onehot = ((lanes == idx[:, None]) & decided[:, None]).astype(jnp.int32)
+    hist_blk = onehot.sum(axis=0)[None, :]               # (1, bins_pad)
+
+    f32 = jnp.float32
+    lane = jax.lax.broadcasted_iota(jnp.int32, stats_ref.shape, 1)
+    stat_blk = jnp.where(
+        lane == 0, fast.sum().astype(f32),
+        jnp.where(lane == 1, recb.sum().astype(f32),
+                  jnp.where(lane == 2, undb.sum().astype(f32),
+                            jnp.where(lane == 3,
+                                      jnp.where(decided, lat, 0.0).sum(),
+                                      jnp.where(lane == 4,
+                                                jnp.where(decided, lat,
+                                                          -jnp.inf).max(),
+                                                0.0)))))
+
+    @pl.when(s == 0)
+    def _init():
+        hist_ref[...] = hist_blk
+        stats_ref[...] = stat_blk
+
+    @pl.when(s != 0)
+    def _accumulate():
+        hist_ref[...] += hist_blk
+        prev = stats_ref[...]
+        stats_ref[...] = jnp.where(lane == 4, jnp.maximum(prev, stat_blk),
+                                   prev + stat_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("n_values", "precision", "bins",
+                                             "undecided_ms", "interpret"))
+def stream_tally_decide_hist(votes: jax.Array, w2f: jax.Array,
+                             t2f: jax.Array, val_sat: jax.Array,
+                             t_rec: jax.Array, valid: jax.Array, *,
+                             n_values: int, precision: float, bins: int,
+                             undecided_ms: float, interpret: bool = True):
+    """Fused streaming chunk reduction; semantics of
+    ``ref.stream_tally_decide_hist`` (same shapes, same bucketing).  Counts
+    and histograms are bit-identical to the oracle; the f32 latency sum
+    accumulates block-by-block so it matches to float tolerance only.
+    Trial counts per call must stay below 2^24 (exact f32 integers) — the
+    streaming driver calls once per chunk, far below that."""
+    S, n = votes.shape
+    M, G, _ = w2f.shape
+    K = val_sat.shape[-1]
+    if val_sat.shape != (M, S, K) or t_rec.shape != (M, S) \
+            or t2f.shape != (M, G) or valid.shape != (S,):
+        raise ValueError(
+            f"inconsistent stream shapes: votes {votes.shape}, w2f "
+            f"{w2f.shape}, t2f {t2f.shape}, val_sat {val_sat.shape}, "
+            f"t_rec {t_rec.shape}, valid {valid.shape}")
+    if S >= 2 ** 24:
+        raise ValueError(f"chunk of {S} trials overflows exact f32 counts; "
+                         f"stream smaller chunks")
+    bs = BLOCK_STREAM
+    n_pad = max(LANE, ((n + LANE - 1) // LANE) * LANE)
+    g_pad = max(LANE, ((G + LANE - 1) // LANE) * LANE)
+    k_pad = max(LANE, ((K + LANE - 1) // LANE) * LANE)
+    b_pad = max(LANE, ((bins + LANE - 1) // LANE) * LANE)
+    s_pad = ((S + bs - 1) // bs) * bs
+    big = jnp.float32(2.0 * undecided_ms)
+    votes_p = jnp.full((s_pad, n_pad), -1, jnp.int32).at[:S, :n].set(
+        votes.astype(jnp.int32))
+    w_p = jnp.zeros((M, g_pad, n_pad), jnp.float32).at[:, :G, :n].set(
+        w2f.astype(jnp.float32))
+    t_p = jnp.full((M, 1, g_pad), jnp.float32(PAD_THRESHOLD)).at[
+        :, 0, :G].set(t2f.astype(jnp.float32))
+    sat_p = jnp.full((M, s_pad, k_pad), big).at[:, :S, :K].set(
+        val_sat.astype(jnp.float32))
+    rec_p = jnp.full((M, s_pad), big).at[:, :S].set(
+        t_rec.astype(jnp.float32))
+    valid_p = jnp.zeros((1, s_pad), jnp.int32).at[0, :S].set(
+        valid.astype(jnp.int32))
+
+    hist, stats = pl.pallas_call(
+        functools.partial(_stream_kernel, n_values=n_values,
+                          precision=precision, bins=bins,
+                          undecided_ms=undecided_ms),
+        grid=(M, s_pad // bs),
+        in_specs=[
+            pl.BlockSpec((bs, n_pad), lambda m, s: (s, 0)),
+            pl.BlockSpec((1, g_pad, n_pad), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, 1, g_pad), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, bs, k_pad), lambda m, s: (m, s, 0)),
+            pl.BlockSpec((1, bs), lambda m, s: (m, s)),
+            pl.BlockSpec((1, bs), lambda m, s: (0, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b_pad), lambda m, s: (m, 0)),
+            pl.BlockSpec((1, LANE), lambda m, s: (m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, b_pad), jnp.int32),
+            jax.ShapeDtypeStruct((M, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(votes_p, w_p, t_p, sat_p, rec_p, valid_p)
+    return hist[:, :bins], {
+        "n_fast": stats[:, 0].astype(jnp.int32),
+        "n_recovery": stats[:, 1].astype(jnp.int32),
+        "n_undecided": stats[:, 2].astype(jnp.int32),
+        "sum_ms": stats[:, 3],
+        "max_ms": stats[:, 4],
+    }
+
+
 @functools.partial(jax.jit, static_argnums=(1, 3))
 def tally_decide(votes: jax.Array, n_values: int, q: jax.Array,
                  interpret: bool = True):

@@ -38,3 +38,19 @@ def masked_tally(votes: jax.Array, weights: jax.Array, thresholds: jax.Array,
     sweeping quorum systems reuses one compile."""
     return kernel.masked_tally(votes, weights, thresholds, n_values,
                                interpret=not _on_tpu())
+
+
+def stream_tally_decide_hist(votes: jax.Array, w2f: jax.Array,
+                             t2f: jax.Array, val_sat: jax.Array,
+                             t_rec: jax.Array, valid: jax.Array, *,
+                             n_values: int, precision: float, bins: int,
+                             undecided_ms: float):
+    """Block-resident streaming reduction of one trial chunk: masked tally
+    + decide + DDSketch histogram + count/sum/max in a single VMEM pass
+    (see ``ref.stream_tally_decide_hist`` for shapes/semantics).  Used by
+    ``repro.montecarlo.streaming`` on the masked-race path when
+    ``use_kernel``."""
+    return kernel.stream_tally_decide_hist(
+        votes, w2f, t2f, val_sat, t_rec, valid, n_values=n_values,
+        precision=precision, bins=bins, undecided_ms=undecided_ms,
+        interpret=not _on_tpu())

@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the quorum vote tally."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -51,3 +52,55 @@ def masked_tally(votes: jnp.ndarray, weights: jnp.ndarray,
     sat = wsum >= thresholds                               # (S, V, G)
     first = jnp.argmax(sat, axis=1).astype(jnp.int32)      # lowest value id
     return jnp.where(sat.any(axis=1), first, -1)
+
+
+def stream_tally_decide_hist(votes: jnp.ndarray, w2f: jnp.ndarray,
+                             t2f: jnp.ndarray, val_sat: jnp.ndarray,
+                             t_rec: jnp.ndarray, valid: jnp.ndarray, *,
+                             n_values: int, precision: float, bins: int,
+                             undecided_ms: float):
+    """Oracle for the fused streaming kernel: masked tally + decide +
+    block-local DDSketch histogram, reduced over one chunk of trials.
+
+    votes       (S, n) int32 round-1 votes (< 0 = no vote)
+    w2f / t2f   (M, G, n) / (M, G) fast-phase quorum masks per system
+    val_sat     (M, S, K) f32 per-value fast-quorum 2b saturation instants
+    t_rec       (M, S) f32 coordinated-recovery commit times
+    valid       (S,) bool trial-validity mask (False = padding trial)
+
+    Returns ``(hist, stats)``: hist (M, bins) int32 bucket counts over
+    *decided* valid trials, stats a dict of per-system (M,) reductions —
+    ``n_fast`` / ``n_recovery`` / ``n_undecided`` int32 counts, ``sum_ms``
+    f32 decided-latency sum, ``max_ms`` f32 decided-latency max (-inf when
+    nothing decided).  Bucketing matches
+    ``repro.montecarlo.streaming.bucket_index`` bit-for-bit.
+    """
+    from repro.montecarlo.streaming import bucket_index
+    M, G, n = w2f.shape
+    per_q = masked_tally(votes, w2f.reshape(M * G, n), t2f.reshape(M * G),
+                         n_values).reshape(-1, M, G)       # (S, M, G)
+    nohit = jnp.int32(n_values)
+    best = jnp.where(per_q < 0, nohit, per_q).min(axis=-1).T   # (M, S)
+    reached = best < nohit
+    widx = jnp.clip(best, 0, n_values - 1)
+    t_fast = jnp.take_along_axis(val_sat, widx[..., None],
+                                 axis=-1)[..., 0]          # (M, S)
+    fast_ok = reached & (t_fast < undecided_ms)
+    lat = jnp.where(fast_ok, t_fast, t_rec)
+    und = lat >= undecided_ms
+    v = valid[None, :]
+    fast = fast_ok & v
+    rec = ~fast_ok & ~und & v
+    undv = und & v
+    decided = fast | rec
+    idx = bucket_index(lat, precision)
+    hist = jax.vmap(lambda i, u: jnp.zeros((bins,), jnp.int32).at[i].add(u))(
+        idx, decided.astype(jnp.int32))
+    stats = {
+        "n_fast": fast.sum(axis=-1).astype(jnp.int32),
+        "n_recovery": rec.sum(axis=-1).astype(jnp.int32),
+        "n_undecided": undv.sum(axis=-1).astype(jnp.int32),
+        "sum_ms": jnp.where(decided, lat, 0.0).sum(axis=-1),
+        "max_ms": jnp.where(decided, lat, -jnp.inf).max(axis=-1),
+    }
+    return hist, stats

@@ -31,22 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:                                    # jax >= 0.6: top-level, check_vma kwarg
-    from jax import shard_map as _shard_map_impl
-    _SHARD_MAP_CHECK_KWARG = "check_vma"
-except ImportError:                     # jax 0.4.x: experimental, check_rep kwarg
-    from jax.experimental.shard_map import shard_map as _shard_map_impl
-    _SHARD_MAP_CHECK_KWARG = "check_rep"
-
-
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
-    """Version-portable shard_map (the replication-check kwarg was renamed)."""
-    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs,
-                           **{_SHARD_MAP_CHECK_KWARG: check_vma})
-
 from repro.configs.base import ArchConfig
-from repro.parallel.sharding import active_mesh, constrain, spec_for
+from repro.parallel.sharding import (active_mesh, constrain, shard_map,
+                                     spec_for)
 
 from .layers import apply_mlp, dense_init, init_mlp
 # NOTE: no fsdp_use() here — the expert FFN runs inside shard_map

@@ -23,17 +23,23 @@ systems in a single-compile pass; all-cardinality tables carry a ``"q"``
 specialization that lowers to k-th-order-statistic gathers, bit-identical
 to the general masked path (DESIGN.md §2).
 
-The old per-spec API lives on as a compatibility shim in
-``repro.core.jax_sim``; the declarative front door over this engine (plus
-the model checker and the discrete-event simulator) is
-``repro.api.Experiment``.
+Past one chunk of device memory, the same evaluation streams:
+``streaming.race_stream`` / ``fast_path_stream`` / ``classic_path_stream``
+reduce chunked trials into a fixed-size mergeable ``StreamSummary``
+(DDSketch-style quantile histogram + online counts), sharding the trial
+axis over devices — 10^7+ trials on a laptop, tail percentiles included
+(DESIGN.md §7).
+
+The declarative front door over this engine (plus the model checker and
+the discrete-event simulator) is ``repro.api.Experiment``.
 """
-from . import engine, latency, scenarios  # noqa: F401
-from .engine import (build_mask_table, build_spec_table,  # noqa: F401
-                     cardinality_table, classic_path, fast_path,
-                     fast_path_masked, race, race_masked, summarize)
+from . import engine, latency, scenarios, streaming  # noqa: F401
+from .engine import (build_mask_table, classic_path,  # noqa: F401
+                     fast_path, race, summarize)
 from .latency import (CrashedDelay, LossyDelay, ParetoDelay,  # noqa: F401
                       ShiftedLognormalDelay, WanDelay)
 from .scenarios import (Scenario, conflict_free, grid_wan,  # noqa: F401
                         k_way_race, lossy_acceptors, mixed_workload, wan,
                         weighted_acceptors)
+from .streaming import (StreamSummary, classic_path_stream,  # noqa: F401
+                        fast_path_stream, race_stream)

@@ -40,14 +40,15 @@ paper's instance latency).  Messages with delay >= ``latency.LOST_MS`` never
 arrive: acceptors that see no proposal cast no vote, and instances that
 cannot gather phase-1 votes report ``undecided``.
 
-Passing a bare (M, 3) [q1, q2c, q2f] threshold array — the pre-mask-table
-signature — still works but emits a ``DeprecationWarning``; build the table
-with ``build_mask_table`` (or go through ``repro.api.Experiment``).
+Every entry point materializes its per-trial arrays; for trial counts past
+device memory use the chunked streaming drivers in
+``repro.montecarlo.streaming`` (``race_stream`` / ``fast_path_stream`` /
+``classic_path_stream``), which reduce each chunk into a fixed-size
+``StreamSummary`` and shard the trial axis over devices.
 """
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Dict, Sequence
 
 import jax
@@ -64,26 +65,12 @@ BIG = jnp.float32(LOST_MS)
 UNDECIDED_MS = LOST_MS / 2
 
 # Incremented at trace time inside each jitted entry point; benchmarks assert
-# a full table sweep costs exactly one trace (no per-system re-jit).
-TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0}
-
-
-def _warn_deprecated(old: str, hint: str, stacklevel: int = 3) -> None:
-    warnings.warn(f"{old} is deprecated; {hint}", DeprecationWarning,
-                  stacklevel=stacklevel)
-
-
-def build_spec_table(specs: Sequence[QuorumSpec]) -> jax.Array:
-    """(M, 3) int32 [q1, q2c, q2f] rows; all specs must share one n.
-
-    Raw spec tables are the legacy engine input; new code should hand the
-    same specs to ``build_mask_table`` instead (which recognizes the
-    all-cardinality case and keeps the fast k-th-order-statistic lowering).
-    """
-    ns = {s.n for s in specs}
-    if len(ns) != 1:
-        raise ValueError(f"spec table mixes cluster sizes {sorted(ns)}")
-    return jnp.array([[s.q1, s.q2c, s.q2f] for s in specs], jnp.int32)
+# a full table sweep costs exactly one trace (no per-system re-jit).  The
+# ``*_stream`` keys belong to the chunked drivers in ``streaming.py`` (one
+# trace per (table shape, chunking) — the scan reuses it for any trials).
+TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0,
+                                "race_stream": 0, "fast_path_stream": 0,
+                                "classic_path_stream": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -141,35 +128,13 @@ def build_mask_table(systems: Sequence, *,
     return table
 
 
-def cardinality_table(spec_table, n: int) -> Dict[str, jax.Array]:
-    """Lift a raw (M, 3) [q1, q2c, q2f] threshold array into a specialized
-    mask table (all-ones rows + ``"q"``).  Used by the legacy-signature
-    coercion and the ``repro.core.jax_sim`` shim; unlike
-    ``build_mask_table`` it does not need ``QuorumSpec`` objects, so
-    degenerate threshold rows (e.g. q1 = n placeholders) are accepted."""
-    q = jnp.asarray(spec_table, jnp.int32)
-    _check_spec_table(q)
-    t = q.astype(jnp.float32)
-    ones = jnp.ones((q.shape[0], 1, n), jnp.float32)
-    return {"p1_w": ones, "p1_t": t[:, 0:1],
-            "p2c_w": ones, "p2c_t": t[:, 1:2],
-            "p2f_w": ones, "p2f_t": t[:, 2:3], "q": q}
-
-
-def _coerce_table(table, n: int, fn: str) -> Dict[str, jax.Array]:
-    """Accept a mask-table dict as-is; lift a legacy (M, 3) threshold array
-    with a deprecation warning."""
-    if isinstance(table, dict):
-        return table
-    _warn_deprecated(
-        f"engine.{fn}() with a raw (M, 3) spec table",
-        "build the table with build_mask_table([...QuorumSpec...]) "
-        "(or run it through repro.api.Experiment)",
-        stacklevel=4)          # warn <- here <- _coerce_table <- fn <- caller
-    return cardinality_table(table, n)
-
-
-def _check_mask_table(table: Dict[str, jax.Array], n: int) -> None:
+def _check_mask_table(table, n: int) -> None:
+    if not isinstance(table, dict):
+        raise TypeError(
+            f"expected a build_mask_table() dict, got {type(table).__name__}; "
+            f"raw (M, 3) spec tables were removed — build the table with "
+            f"build_mask_table([...QuorumSpec...]) or go through "
+            f"repro.api.Experiment")
     missing = [k for k in MASK_KEYS if k not in table]
     if missing:
         raise ValueError(f"mask table missing entries {missing}; "
@@ -185,15 +150,6 @@ def _check_mask_table(table: Dict[str, jax.Array], n: int) -> None:
         raise ValueError(
             f"mask table 'q' specialization has shape {table['q'].shape}, "
             f"expected ({m_rows}, 3)")
-
-
-def _check_spec_table(spec_table: jax.Array) -> None:
-    # out-of-bounds gathers clamp silently in XLA, so a malformed table
-    # would otherwise produce wrong numbers instead of an error
-    if spec_table.ndim != 2 or spec_table.shape[-1] != 3:
-        raise ValueError(
-            f"spec_table must be (M, 3) [q1, q2c, q2f] rows, "
-            f"got shape {spec_table.shape}")
 
 
 def _kth(sorted_x: jax.Array, k: jax.Array) -> jax.Array:
@@ -404,14 +360,15 @@ def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
 
 # ---------------------------------------------------------------------------
 # Entry points: one per path, each dispatching on the table's lowering.
+# The un-jitted ``*_outcomes`` forms are the shared bodies: the jitted
+# whole-batch entry points call them once, and the streaming drivers
+# (``streaming.py``) call them once per chunk inside a ``lax.scan``.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n", "k_proposers", "samples",
-                                             "use_kernel"))
-def _race(key: jax.Array, table: Dict[str, jax.Array], offsets: jax.Array,
-          delay, *, n: int, k_proposers: int, samples: int,
-          use_kernel: bool) -> Dict[str, jax.Array]:
-    TRACE_COUNTS["race"] += 1
+def _race_outcomes(key: jax.Array, table: Dict[str, jax.Array],
+                   offsets: jax.Array, delay, *, n: int, k_proposers: int,
+                   samples: int, use_kernel: bool) -> Dict[str, jax.Array]:
+    """One full race evaluation: sample + presort once, decide per system."""
     if delay is None:
         delay = default_delay()
     draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
@@ -424,6 +381,17 @@ def _race(key: jax.Array, table: Dict[str, jax.Array], offsets: jax.Array,
     masks = {k: table[k] for k in MASK_KEYS}
     return jax.vmap(lambda m, w, r: _decide_masked(draws, m, w, r),
                     in_axes=(0, 1, 1))(masks, winner, reached)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k_proposers", "samples",
+                                             "use_kernel"))
+def _race(key: jax.Array, table: Dict[str, jax.Array], offsets: jax.Array,
+          delay, *, n: int, k_proposers: int, samples: int,
+          use_kernel: bool) -> Dict[str, jax.Array]:
+    TRACE_COUNTS["race"] += 1
+    return _race_outcomes(key, table, offsets, delay, n=n,
+                          k_proposers=k_proposers, samples=samples,
+                          use_kernel=use_kernel)
 
 
 def race(key: jax.Array, table, offsets: jax.Array, delay=None, *, n: int,
@@ -449,7 +417,6 @@ def race(key: jax.Array, table, offsets: jax.Array, delay=None, *, n: int,
       undecided     not enough votes ever arrived (message loss)
       latency_ms    decision latency from proposer 0's submission
     """
-    table = _coerce_table(table, n, "race")
     _check_mask_table(table, n)
     return _race(key, table, offsets, delay, n=n, k_proposers=k_proposers,
                  samples=samples, use_kernel=use_kernel)
@@ -468,10 +435,8 @@ def _fast_path_draws(key: jax.Array, delay, n: int,
     return jnp.where(path < UNDECIDED_MS, path, BIG)   # lost => never arrives
 
 
-@functools.partial(jax.jit, static_argnames=("n", "samples"))
-def _fast_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
-               n: int, samples: int) -> jax.Array:
-    TRACE_COUNTS["fast_path"] += 1
+def _fast_path_outcomes(key: jax.Array, table: Dict[str, jax.Array], delay,
+                        *, n: int, samples: int) -> jax.Array:
     if delay is None:
         delay = default_delay()
     path = _fast_path_draws(key, delay, n, samples)
@@ -484,21 +449,25 @@ def _fast_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
         {k: table[k] for k in MASK_KEYS})
 
 
+@functools.partial(jax.jit, static_argnames=("n", "samples"))
+def _fast_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
+               n: int, samples: int) -> jax.Array:
+    TRACE_COUNTS["fast_path"] += 1
+    return _fast_path_outcomes(key, table, delay, n=n, samples=samples)
+
+
 def fast_path(key: jax.Array, table, delay=None, *, n: int,
               samples: int) -> jax.Array:
     """(M, S) conflict-free fast-path commit latencies: the saturation
     instant of each system's phase-2f quorums over the client -> acceptor
     -> learner paths (the q2f-th order statistic on cardinality tables);
     one compile for the whole table."""
-    table = _coerce_table(table, n, "fast_path")
     _check_mask_table(table, n)
     return _fast_path(key, table, delay, n=n, samples=samples)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "samples"))
-def _classic_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
-                  n: int, samples: int) -> jax.Array:
-    TRACE_COUNTS["classic_path"] += 1
+def _classic_path_outcomes(key: jax.Array, table: Dict[str, jax.Array],
+                           delay, *, n: int, samples: int) -> jax.Array:
     if delay is None:
         delay = default_delay()
     k0, k1, k2 = jax.random.split(key, 3)
@@ -517,37 +486,19 @@ def _classic_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
         {k: table[k] for k in MASK_KEYS})
 
 
+@functools.partial(jax.jit, static_argnames=("n", "samples"))
+def _classic_path(key: jax.Array, table: Dict[str, jax.Array], delay, *,
+                  n: int, samples: int) -> jax.Array:
+    TRACE_COUNTS["classic_path"] += 1
+    return _classic_path_outcomes(key, table, delay, n=n, samples=samples)
+
+
 def classic_path(key: jax.Array, table, delay=None, *, n: int,
                  samples: int) -> jax.Array:
     """(M, S) leader-relayed classic commit latencies (phase-2c quorum
     saturation after the client -> leader hop)."""
-    table = _coerce_table(table, n, "classic_path")
     _check_mask_table(table, n)
     return _classic_path(key, table, delay, n=n, samples=samples)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated twins: masks are the single lowering now, so the ``*_masked``
-# names are aliases kept for one release.
-# ---------------------------------------------------------------------------
-
-def race_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
-                offsets: jax.Array, delay=None, *, n: int, k_proposers: int,
-                samples: int, use_kernel: bool = False) -> Dict[str, jax.Array]:
-    """Deprecated alias of ``race`` (masks are the single lowering now)."""
-    _warn_deprecated("engine.race_masked",
-                     "call engine.race with the same mask table")
-    return race(key, mask_table, offsets, delay, n=n,
-                k_proposers=k_proposers, samples=samples,
-                use_kernel=use_kernel)
-
-
-def fast_path_masked(key: jax.Array, mask_table: Dict[str, jax.Array],
-                     delay=None, *, n: int, samples: int) -> jax.Array:
-    """Deprecated alias of ``fast_path`` (masks are the single lowering)."""
-    _warn_deprecated("engine.fast_path_masked",
-                     "call engine.fast_path with the same mask table")
-    return fast_path(key, mask_table, delay, n=n, samples=samples)
 
 
 # ---------------------------------------------------------------------------
@@ -572,12 +523,13 @@ def summarize(out, axis: int = -1) -> Dict[str, jax.Array]:
         }
     else:
         lat, extra = out, {}
-    q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99]), axis=axis)
+    q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99, 0.999]), axis=axis)
     return {
         "mean_ms": jnp.nanmean(lat, axis=axis),
         "p50_ms": q[0],
         "p95_ms": q[1],
         "p99_ms": q[2],
+        "p999_ms": q[3],
         "max_ms": jnp.nanmax(lat, axis=axis),
         **extra,
     }

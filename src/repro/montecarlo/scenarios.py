@@ -69,15 +69,7 @@ class Scenario:
         it) over ``samples`` instances.
 
         Returns (M, S)-shaped ``latency_ms`` plus race outcome flags (for the
-        racing fraction) — one engine compile per (shape, scenario type).
-        A raw (M, 3) spec table is still accepted (deprecated, coerced by
-        the engine)."""
-        if not isinstance(table, dict):
-            engine._warn_deprecated(
-                "Scenario.run() with a raw (M, 3) spec table",
-                "build the table with build_mask_table([...QuorumSpec...]) "
-                "(or run it through repro.api.Experiment)")
-            table = engine.cardinality_table(table, self.n)
+        racing fraction) — one engine compile per (shape, scenario type)."""
         m = table["p1_w"].shape[0]
         if self.k_proposers == 1 or self.conflict_frac == 0.0:
             lat = engine.fast_path(key, table, self.delay, n=self.n,
@@ -112,6 +104,38 @@ class Scenario:
         ``undecided_rate`` instead of polluting the distribution with the
         LOST_MS sentinel (``engine.summarize``)."""
         return engine.summarize(self.run(key, table, samples, use_kernel))
+
+    def stream(self, key: jax.Array, table, trials: int, *,
+               chunk: Optional[int] = None, precision: Optional[float] = None,
+               use_kernel: bool = False, shard: bool = True):
+        """Streamed evaluation: ``trials`` instances reduced chunk-by-chunk
+        into a fixed-size ``streaming.StreamSummary`` (device memory is one
+        chunk regardless of ``trials``; the trial axis shards over local
+        devices when ``shard``).  A mixed workload streams its racing and
+        conflict-free fractions separately and *merges* the two summaries —
+        sketch merge is exact, so the blend matches a single mixed stream.
+        """
+        from . import streaming
+        chunk = streaming.DEFAULT_CHUNK if chunk is None else chunk
+        precision = (streaming.DEFAULT_PRECISION if precision is None
+                     else precision)
+        kw = dict(chunk=chunk, precision=precision, shard=shard)
+        if self.k_proposers == 1 or self.conflict_frac == 0.0:
+            return streaming.fast_path_stream(key, table, self.delay,
+                                              n=self.n, trials=trials, **kw)
+        k_race, k_free = jax.random.split(key)
+        n_conf = max(1, int(round(trials * self.conflict_frac)))
+        state = streaming.race_stream(k_race, table, self.offsets_ms,
+                                      self.delay, n=self.n,
+                                      k_proposers=self.k_proposers,
+                                      trials=n_conf, use_kernel=use_kernel,
+                                      **kw)
+        if trials - n_conf > 0:
+            free = streaming.fast_path_stream(k_free, table, self.delay,
+                                              n=self.n,
+                                              trials=trials - n_conf, **kw)
+            state = state.merge(free)
+        return state
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,471 @@
+"""Streaming, sharded Monte-Carlo trials: fixed memory at any trial count.
+
+The materializing entry points in ``engine`` allocate a per-trial ``(M, S)``
+array for every output, capping trials at device memory and making tail
+percentiles (p99.9 — the number WAN operators actually provision for)
+statistically meaningless at the trial counts that fit.  This module turns
+the same per-chunk computation into a **reduction** (DESIGN.md §7):
+
+  chunk scan      ``lax.scan`` draws, decides and *reduces* one chunk of
+                  trials per step, carrying only a fixed-size summary state
+                  — peak allocation is one chunk, independent of ``trials``.
+  sketch          latency quantiles come from a DDSketch-style fixed-size
+                  log-bucket histogram with a guaranteed relative error
+                  (``precision``); bucket counts are integers, so sketch
+                  merge is exact, associative and commutative.
+  shard_map       the trial axis shards over local devices
+                  (``parallel.sharding.trial_mesh``); the cross-device
+                  reduction is the summary merge (psum counts/histograms,
+                  pmax maxima, count-weighted mean combine).
+
+``race_stream`` / ``fast_path_stream`` / ``classic_path_stream`` mirror the
+materializing entry points;  ``trials <= chunk`` on a single device falls
+back to the materializing path itself (same compile, bit-identical draws)
+and reduces its output — the old behaviour survives as the small-T special
+case.  Chunk c of a multi-chunk stream draws from ``fold_in(key, c)`` (and
+device d of a sharded stream from ``fold_in(key, 0x5eed + d)``), so a
+streamed run is reproducible for a given (trials, chunk, device count) but
+is a different — equally valid — sample than the materializing path.
+
+Everything is one jit per (table shape, chunking): ``trials`` and the table
+contents are traced, so scaling a sweep from 10^5 to 10^7 trials or
+swapping same-shape quorum systems re-enters the same compile
+(``engine.TRACE_COUNTS['*_stream']``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as psharding
+
+from . import engine
+from .engine import MASK_KEYS, UNDECIDED_MS
+from .latency import default_delay
+
+DEFAULT_CHUNK = 65536
+DEFAULT_PRECISION = 0.01
+
+# Sketch coverage: 10 us .. ~3 hours.  Latencies outside clamp to the edge
+# buckets — quantile estimates stay order-correct but the relative-error
+# guarantee only holds inside the range (simulated commit latencies are
+# ~0.5 ms .. seconds, comfortably inside).
+SKETCH_MIN_MS = 1e-2
+SKETCH_MAX_MS = 1e7
+
+
+def sketch_gamma(precision: float) -> float:
+    """DDSketch bucket growth factor for a target relative error."""
+    return (1.0 + precision) / (1.0 - precision)
+
+
+def sketch_bins(precision: float) -> int:
+    """Bucket count covering [SKETCH_MIN_MS, SKETCH_MAX_MS] at ``precision``
+    relative error (plus the clamp bucket 0 for values below the range)."""
+    if not 1e-4 <= precision <= 0.2:
+        raise ValueError(f"precision (relative quantile error) must be in "
+                         f"[1e-4, 0.2], got {precision}")
+    g = sketch_gamma(precision)
+    return int(math.ceil(math.log(SKETCH_MAX_MS / SKETCH_MIN_MS)
+                         / math.log(g))) + 1
+
+
+def bucket_index(x: jax.Array, precision: float) -> jax.Array:
+    """Log-bucket index: bucket i > 0 covers (m0*g^(i-1), m0*g^i].
+
+    The expression is shared verbatim with the fused Pallas kernel
+    (``kernels/quorum_tally``) so both paths bucket identically.
+    """
+    log_g = math.log(sketch_gamma(precision))
+    i = jnp.ceil(jnp.log(jnp.maximum(x, SKETCH_MIN_MS) / SKETCH_MIN_MS)
+                 / log_g)
+    return jnp.clip(i, 0, sketch_bins(precision) - 1).astype(jnp.int32)
+
+
+def bucket_value(i: jax.Array, precision: float) -> jax.Array:
+    """Representative value of bucket i: 2*m0*g^i/(g+1), the point whose
+    relative distance to both bucket edges is exactly ``precision``."""
+    g = sketch_gamma(precision)
+    scale = SKETCH_MIN_MS * 2.0 * g / (g + 1.0)
+    return scale * jnp.power(jnp.float32(g), i.astype(jnp.float32) - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# StreamSummary: the fixed-size online state (a registered pytree).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class StreamSummary:
+    """Mergeable per-system summary of any number of streamed trials.
+
+    All fields are per-system vectors (leading M axis); ``hist`` is the
+    DDSketch bucket-count matrix over *decided* latencies, following the
+    same convention as ``engine.summarize``: undecided instances are
+    excluded from the latency statistics and reported as a rate.
+    ``precision`` (static aux data) is the sketch's guaranteed relative
+    quantile error.
+    """
+
+    n_trials: jax.Array       # (M,) int32  valid trials streamed
+    n_fast: jax.Array         # (M,) int32  fast-path commits
+    n_recovery: jax.Array     # (M,) int32  coordinated recoveries
+    n_undecided: jax.Array    # (M,) int32  never decided (loss / crashes)
+    mean_ms: jax.Array        # (M,) f32    running mean of decided latencies
+    max_ms: jax.Array         # (M,) f32    running max (-inf before any)
+    hist: jax.Array           # (M, B) int32 sketch bucket counts (decided)
+    precision: float = DEFAULT_PRECISION
+
+    def tree_flatten(self):
+        return ((self.n_trials, self.n_fast, self.n_recovery,
+                 self.n_undecided, self.mean_ms, self.max_ms, self.hist),
+                self.precision)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, precision=aux)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def zeros(cls, m: int, precision: float = DEFAULT_PRECISION
+              ) -> "StreamSummary":
+        z = jnp.zeros((m,), jnp.int32)
+        return cls(z, z, z, z,
+                   jnp.zeros((m,), jnp.float32),
+                   jnp.full((m,), -jnp.inf, jnp.float32),
+                   jnp.zeros((m, sketch_bins(precision)), jnp.int32),
+                   precision)
+
+    @classmethod
+    def from_outcomes(cls, out: Dict[str, jax.Array],
+                      precision: float = DEFAULT_PRECISION) -> "StreamSummary":
+        """Reduce a materialized (M, S) outcome dict (``engine.race`` /
+        ``Scenario.run`` shape) into a summary — the T <= chunk case."""
+        m, s = out["latency_ms"].shape
+        return cls.zeros(m, precision).update(out, jnp.ones((s,), bool))
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def n_decided(self) -> jax.Array:
+        return self.n_fast + self.n_recovery
+
+    @property
+    def bins(self) -> int:
+        return self.hist.shape[-1]
+
+    # -- online updates ----------------------------------------------------
+    def update(self, out: Dict[str, jax.Array],
+               valid: jax.Array) -> "StreamSummary":
+        """Absorb one chunk: ``out`` is an (M, C) outcome dict, ``valid`` a
+        (C,) bool mask (False = padding trial, contributes nothing)."""
+        lat = out["latency_ms"]
+        v = valid[None, :]
+        fast = out["reached_fast"] & v
+        rec = out["recovery"] & v
+        und = out["undecided"] & v
+        decided = fast | rec
+        add_cnt = decided.sum(axis=-1)
+        add_sum = jnp.where(decided, lat, 0.0).sum(axis=-1)
+        add_max = jnp.where(decided, lat, -jnp.inf).max(axis=-1)
+        idx = bucket_index(lat, self.precision)
+        add_hist = jax.vmap(lambda h, i, u: h.at[i].add(u))(
+            jnp.zeros_like(self.hist), idx, decided.astype(self.hist.dtype))
+        return self._absorb(
+            n_trials=(fast | rec | und).sum(axis=-1).astype(jnp.int32),
+            n_fast=fast.sum(axis=-1).astype(jnp.int32),
+            n_recovery=rec.sum(axis=-1).astype(jnp.int32),
+            n_undecided=und.sum(axis=-1).astype(jnp.int32),
+            cnt=add_cnt.astype(jnp.float32), lat_sum=add_sum,
+            lat_max=add_max, hist=add_hist)
+
+    def _absorb(self, *, n_trials, n_fast, n_recovery, n_undecided, cnt,
+                lat_sum, lat_max, hist) -> "StreamSummary":
+        """Merge per-chunk aggregates (the fused kernel's output shape)."""
+        n_old = self.n_decided.astype(jnp.float32)
+        tot = n_old + cnt
+        mean = jnp.where(tot > 0,
+                         (self.mean_ms * n_old + lat_sum)
+                         / jnp.maximum(tot, 1.0), 0.0)
+        return replace(self,
+                       n_trials=self.n_trials + n_trials,
+                       n_fast=self.n_fast + n_fast,
+                       n_recovery=self.n_recovery + n_recovery,
+                       n_undecided=self.n_undecided + n_undecided,
+                       mean_ms=mean,
+                       max_ms=jnp.maximum(self.max_ms, lat_max),
+                       hist=self.hist + hist)
+
+    # -- merges ------------------------------------------------------------
+    def merge(self, other: "StreamSummary") -> "StreamSummary":
+        """Combine two summaries as if their trials had been one stream.
+        Counts and histograms are integer sums (exact — merge is associative
+        and commutative bit-for-bit); means combine count-weighted."""
+        if other.precision != self.precision:
+            raise ValueError(
+                f"cannot merge sketches of different precision "
+                f"({self.precision} vs {other.precision})")
+        return self._absorb(
+            n_trials=other.n_trials, n_fast=other.n_fast,
+            n_recovery=other.n_recovery, n_undecided=other.n_undecided,
+            cnt=other.n_decided.astype(jnp.float32),
+            lat_sum=other.mean_ms * other.n_decided.astype(jnp.float32),
+            lat_max=other.max_ms, hist=other.hist)
+
+    def axis_merge(self, axis_name: str) -> "StreamSummary":
+        """Cross-device merge inside ``shard_map``: psum the counts and the
+        sketch, pmax the max, count-weighted psum for the mean."""
+        ps = lambda x: jax.lax.psum(x, axis_name)
+        n_dec = self.n_decided.astype(jnp.float32)
+        tot = ps(n_dec)
+        mean = jnp.where(tot > 0,
+                         ps(self.mean_ms * n_dec) / jnp.maximum(tot, 1.0),
+                         0.0)
+        return replace(self,
+                       n_trials=ps(self.n_trials), n_fast=ps(self.n_fast),
+                       n_recovery=ps(self.n_recovery),
+                       n_undecided=ps(self.n_undecided),
+                       mean_ms=mean,
+                       max_ms=jax.lax.pmax(self.max_ms, axis_name),
+                       hist=ps(self.hist))
+
+    # -- queries -----------------------------------------------------------
+    def quantile(self, q) -> jax.Array:
+        """Sketch quantile estimate over decided trials: within
+        ``precision`` relative error of the exact empirical quantile for
+        latencies inside the sketch range.  ``q`` scalar -> (M,); ``q``
+        (Q,) -> (Q, M).  NaN where nothing decided."""
+        qv = jnp.atleast_1d(jnp.asarray(q, jnp.float32))
+        n = self.n_decided
+        cum = jnp.cumsum(self.hist, axis=-1)                   # (M, B)
+        rank = jnp.clip(jnp.ceil(qv[:, None] * n[None, :]),
+                        1, jnp.maximum(n, 1)[None, :])         # (Q, M)
+        idx = jnp.argmax(cum[None, :, :] >= rank[:, :, None], axis=-1)
+        val = jnp.where(n[None, :] > 0,
+                        bucket_value(idx, self.precision), jnp.nan)
+        return val[0] if jnp.ndim(q) == 0 else val
+
+    def summary(self) -> Dict[str, jax.Array]:
+        """The normalized summary dict (`engine.summarize` keys, plus the
+        p99.9 that streaming trial counts make meaningful)."""
+        n = jnp.maximum(self.n_trials, 1).astype(jnp.float32)
+        has = self.n_decided > 0
+        qs = self.quantile(jnp.array([0.5, 0.95, 0.99, 0.999]))
+        return {
+            "mean_ms": jnp.where(has, self.mean_ms, jnp.nan),
+            "p50_ms": qs[0], "p95_ms": qs[1], "p99_ms": qs[2],
+            "p999_ms": qs[3],
+            "max_ms": jnp.where(has, self.max_ms, jnp.nan),
+            "fast_rate": self.n_fast / n,
+            "recovery_rate": self.n_recovery / n,
+            "undecided_rate": self.n_undecided / n,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Chunked scan driver (+ shard_map over the trial axis).
+# ---------------------------------------------------------------------------
+
+def _lat_only_outcomes(lat: jax.Array, fast: bool) -> Dict[str, jax.Array]:
+    """Latency-array paths (fast_path / classic_path) as an outcome dict."""
+    und = lat >= UNDECIDED_MS
+    no = jnp.zeros_like(und)
+    return {"latency_ms": lat, "undecided": und,
+            "reached_fast": ~und if fast else no,
+            "recovery": no if fast else ~und}
+
+
+def _chunk_outcomes(path: str, key, table, offsets, delay, *, n, k_proposers,
+                    chunk, use_kernel) -> Dict[str, jax.Array]:
+    if path == "race":
+        return engine._race_outcomes(key, table, offsets, delay, n=n,
+                                     k_proposers=k_proposers, samples=chunk,
+                                     use_kernel=use_kernel)
+    if path == "fast_path":
+        return _lat_only_outcomes(
+            engine._fast_path_outcomes(key, table, delay, n=n,
+                                       samples=chunk), fast=True)
+    return _lat_only_outcomes(
+        engine._classic_path_outcomes(key, table, delay, n=n,
+                                      samples=chunk), fast=False)
+
+
+def _race_fused_update(state: StreamSummary, key, table, offsets, delay,
+                       valid, *, n, k_proposers, chunk) -> StreamSummary:
+    """Masked-table race chunk through the fused block-resident kernel:
+    masked tally + decide + histogram never leave VMEM (DESIGN.md §3).
+
+    The system-dependent saturation *times* still come from the presorted
+    jnp draws (they are sorts + prefix sums, which the engine already
+    shares across systems); the kernel fuses everything downstream of the
+    votes: quorum tally, winner/reached, fast-vs-recovery decision, bucket
+    histogram and the chunk's count/sum/max reductions.
+    """
+    draws = engine._sample_race(key, offsets, delay, n=n,
+                                k_proposers=k_proposers, samples=chunk,
+                                use_kernel=True)
+    masks = {k: table[k] for k in MASK_KEYS}
+
+    def times_one(m):
+        val_sat = jax.vmap(
+            lambda srt, perm: engine._sat_time(srt, perm, m["p2f_w"],
+                                               m["p2f_t"]),
+            in_axes=1, out_axes=1)(draws["sorted_val_arrive"],
+                                   draws["perm_val_arrive"])      # (C, K)
+        t_rec = engine._sat_time(draws["sorted_arrive"],
+                                 draws["perm_arrive"],
+                                 m["p1_w"], m["p1_t"]) \
+            + engine._sat_time(draws["sorted_classic"],
+                               draws["perm_classic"],
+                               m["p2c_w"], m["p2c_t"])            # (C,)
+        return val_sat, t_rec
+
+    val_sat, t_rec = jax.vmap(times_one)(masks)       # (M, C, K), (M, C)
+    from repro.kernels.quorum_tally import ops as qt_ops
+    hist, stats = qt_ops.stream_tally_decide_hist(
+        draws["votes"], table["p2f_w"], table["p2f_t"], val_sat, t_rec,
+        valid, n_values=k_proposers, precision=state.precision,
+        bins=state.bins, undecided_ms=float(UNDECIDED_MS))
+    return state._absorb(
+        n_trials=stats["n_fast"] + stats["n_recovery"] + stats["n_undecided"],
+        n_fast=stats["n_fast"], n_recovery=stats["n_recovery"],
+        n_undecided=stats["n_undecided"],
+        cnt=(stats["n_fast"] + stats["n_recovery"]).astype(jnp.float32),
+        lat_sum=stats["sum_ms"], lat_max=stats["max_ms"], hist=hist)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("path", "n", "k_proposers", "chunk",
+                                    "n_chunks", "precision", "use_kernel",
+                                    "mesh"))
+def _stream(key, table, offsets, delay, trials, *, path, n, k_proposers,
+            chunk, n_chunks, precision, use_kernel, mesh):
+    engine.TRACE_COUNTS[path + "_stream"] += 1
+    m = table["p1_w"].shape[0]
+    fused = path == "race" and use_kernel and "q" not in table
+
+    def device_stream(key, table, offsets, delay, trials):
+        def body(state, i):
+            k = jax.random.fold_in(key, i)
+            valid = jnp.arange(chunk, dtype=jnp.int32) \
+                < jnp.clip(trials - i * chunk, 0, chunk)
+            if fused:
+                state = _race_fused_update(state, k, table, offsets, delay,
+                                           valid, n=n,
+                                           k_proposers=k_proposers,
+                                           chunk=chunk)
+            else:
+                out = _chunk_outcomes(path, k, table, offsets, delay, n=n,
+                                      k_proposers=k_proposers, chunk=chunk,
+                                      use_kernel=use_kernel)
+                state = state.update(out, valid)
+            return state, None
+        state0 = StreamSummary.zeros(m, precision)
+        state, _ = jax.lax.scan(body, state0,
+                                jnp.arange(n_chunks, dtype=jnp.int32))
+        return state
+
+    if mesh is None:
+        return device_stream(key, table, offsets, delay, trials)
+
+    ndev = mesh.shape[psharding.TRIAL_AXIS]
+
+    def per_device(key, table, offsets, delay, trials):
+        d = jax.lax.axis_index(psharding.TRIAL_AXIS)
+        t_d = trials // ndev + jnp.where(d < trials % ndev, 1, 0)
+        k_d = jax.random.fold_in(key, jnp.int32(0x5eed) + d)
+        return device_stream(k_d, table, offsets, delay,
+                             t_d).axis_merge(psharding.TRIAL_AXIS)
+
+    return psharding.shard_map(
+        per_device, mesh=mesh, in_specs=(P(), P(), P(), P(), P()),
+        out_specs=P())(key, table, offsets, delay, trials)
+
+
+def _resolve_mesh(shard):
+    if shard is False or shard is None:
+        return None
+    if shard is True:
+        return psharding.trial_mesh() if len(jax.devices()) > 1 else None
+    return shard                       # an explicit Mesh
+
+
+def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
+                  trials, chunk, precision, use_kernel, shard
+                  ) -> StreamSummary:
+    engine._check_mask_table(table, n)
+    if trials < 1:
+        raise ValueError(f"trials must be >= 1, got {trials}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    sketch_bins(precision)             # validates precision
+    mesh = _resolve_mesh(shard)
+    if mesh is None and trials <= chunk:
+        # The materializing path IS the T <= chunk special case: same
+        # compile as direct engine calls, bit-identical draws, reduced.
+        if path == "race":
+            out = engine.race(key, table, offsets, delay, n=n,
+                              k_proposers=k_proposers, samples=trials,
+                              use_kernel=use_kernel)
+        elif path == "fast_path":
+            out = _lat_only_outcomes(
+                engine.fast_path(key, table, delay, n=n, samples=trials),
+                fast=True)
+        else:
+            out = _lat_only_outcomes(
+                engine.classic_path(key, table, delay, n=n, samples=trials),
+                fast=False)
+        return StreamSummary.from_outcomes(out, precision)
+    ndev = 1 if mesh is None else mesh.shape[psharding.TRIAL_AXIS]
+    per_device = -(-trials // ndev)                # ceil: busiest device
+    n_chunks = -(-per_device // chunk)
+    if delay is None:
+        delay = default_delay()
+    offsets = (jnp.zeros((1,), jnp.float32) if offsets is None
+               else jnp.asarray(offsets, jnp.float32))
+    return _stream(key, table, offsets, delay, jnp.int32(trials), path=path,
+                   n=n, k_proposers=k_proposers, chunk=chunk,
+                   n_chunks=n_chunks, precision=precision,
+                   use_kernel=use_kernel, mesh=mesh)
+
+
+def race_stream(key, table, offsets, delay=None, *, n: int, k_proposers: int,
+                trials: int, chunk: int = DEFAULT_CHUNK,
+                precision: float = DEFAULT_PRECISION,
+                use_kernel: bool = False, shard: bool = True
+                ) -> StreamSummary:
+    """``engine.race`` at any trial count in fixed memory: chunked
+    ``lax.scan`` reduction into a ``StreamSummary``, trial axis sharded
+    over local devices when ``shard`` (a bool or an explicit 1-D mesh).
+    One compile per (table shape, chunk count); ``trials`` is traced."""
+    return _stream_entry("race", key, table, delay, offsets, n=n,
+                         k_proposers=k_proposers, trials=trials, chunk=chunk,
+                         precision=precision, use_kernel=use_kernel,
+                         shard=shard)
+
+
+def fast_path_stream(key, table, delay=None, *, n: int, trials: int,
+                     chunk: int = DEFAULT_CHUNK,
+                     precision: float = DEFAULT_PRECISION,
+                     shard: bool = True) -> StreamSummary:
+    """Streamed conflict-free fast path (k=1): decided instances count as
+    fast-path commits, lost ones as undecided."""
+    return _stream_entry("fast_path", key, table, delay, None, n=n,
+                         k_proposers=1, trials=trials, chunk=chunk,
+                         precision=precision, use_kernel=False, shard=shard)
+
+
+def classic_path_stream(key, table, delay=None, *, n: int, trials: int,
+                        chunk: int = DEFAULT_CHUNK,
+                        precision: float = DEFAULT_PRECISION,
+                        shard: bool = True) -> StreamSummary:
+    """Streamed leader-relayed classic path: decided instances count as
+    recoveries (there is no fast path to reach)."""
+    return _stream_entry("classic_path", key, table, delay, None, n=n,
+                         k_proposers=1, trials=trials, chunk=chunk,
+                         precision=precision, use_kernel=False, shard=shard)

@@ -26,7 +26,39 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                    # jax >= 0.6: top-level, check_vma kwarg
+    from jax import shard_map as _shard_map_impl
+    _SHARD_MAP_CHECK_KWARG = "check_vma"
+except ImportError:                     # jax 0.4.x: experimental, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _SHARD_MAP_CHECK_KWARG = "check_rep"
+
 AxisSpec = Union[None, str, Tuple[str, ...]]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-portable shard_map (the replication-check kwarg was renamed
+    between jax 0.4 and 0.6).  Shared by the MoE expert parallelism
+    (``models/moe.py``) and the Monte-Carlo trial sharding
+    (``montecarlo/streaming.py``)."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs,
+                           **{_SHARD_MAP_CHECK_KWARG: check_vma})
+
+
+# Mesh axis name for the Monte-Carlo trial dimension.  Distinct from the
+# model stack's ('pod', 'data', 'model') so a trial mesh can never collide
+# with an active model mesh's rule table.
+TRIAL_AXIS = "trials"
+
+
+def trial_mesh(devices: Optional[Sequence] = None) -> Mesh:
+    """1-D mesh over all local devices for trial-axis sharding.  The
+    Monte-Carlo trial dimension is embarrassingly parallel, so the only
+    collective the streaming engine needs is the cross-device summary
+    merge (psum/pmax over ``TRIAL_AXIS``)."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.array(devices), (TRIAL_AXIS,))
 
 
 def _axis_size(mesh: Mesh, spec: AxisSpec) -> int:

@@ -29,6 +29,10 @@ except ImportError:
             return _Strategy(lambda rng: rng.randint(min_value, max_value))
 
         @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
         def composite(fn):
             def build(*args, **kwargs):
                 return _Strategy(

@@ -3,11 +3,7 @@ backends.  Cross-backend consistency is the point — a quorum system
 declared once must model-check clean, agree between the Monte-Carlo engine
 and the discrete-event simulator, and expose one normalized Results shape.
 """
-import importlib
-import warnings
-
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.api import BACKENDS, Experiment, Results, Workload, sweep
@@ -174,25 +170,40 @@ def test_wan_workload_refuses_des_backend():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims (satellite): old entry points warn with migration hints
+# streaming (trials=): fixed-memory trial scaling through the same front door
 # ---------------------------------------------------------------------------
 
-def test_jax_sim_import_warns():
-    import repro.core.jax_sim as shim
-    with pytest.warns(DeprecationWarning, match="Experiment"):
-        importlib.reload(shim)
+def test_streamed_experiment_matches_materialized_summary():
+    """``trials=`` must expose the same normalized keys with values that
+    agree with the materializing path at the same sample count (within the
+    sketch's relative error + Monte-Carlo noise across PRNG layouts)."""
+    kw = dict(systems=SYSTEMS, workload=Workload.race(k=2, delta_ms=0.3),
+              compute_fault_tolerance=False)
+    mat = Experiment(samples=40_000, **kw).run("montecarlo")
+    stream = Experiment(trials=40_000, chunk=8_192, **kw).run("montecarlo")
+    assert stream.raw is None and stream.stream is not None
+    assert set(mat.summary) <= set(stream.summary)
+    assert "p999_ms" in stream.summary
+    for i in range(len(SYSTEMS)):
+        p50_m = float(mat.summary["p50_ms"][i])
+        p50_s = float(stream.summary["p50_ms"][i])
+        assert abs(p50_s - p50_m) / p50_m < 0.05, (i, p50_m, p50_s)
+        rec_m = float(mat.summary["recovery_rate"][i])
+        rec_s = float(stream.summary["recovery_rate"][i])
+        assert abs(rec_s - rec_m) < 0.02, (i, rec_m, rec_s)
 
 
-def test_legacy_engine_signatures_warn_once_per_call():
-    spec_table = jnp.array([[4, 2, 4]], jnp.int32)
-    with pytest.warns(DeprecationWarning, match="build_mask_table"):
-        engine.fast_path(jax.random.PRNGKey(0), spec_table, n=5, samples=64)
-    with pytest.warns(DeprecationWarning, match="build_mask_table"):
-        engine.classic_path(jax.random.PRNGKey(0), spec_table, n=5,
-                            samples=64)
-    # the recommended path stays silent
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        engine.fast_path(jax.random.PRNGKey(0),
-                         engine.build_mask_table([QuorumSpec(5, 4, 2, 4)]),
-                         n=5, samples=64)
+def test_streamed_experiment_is_a_pytree_with_stream_state():
+    r = Experiment(systems=[QuorumSpec(5, 4, 2, 4)], trials=3_000,
+                   chunk=1_024, compute_fault_tolerance=False
+                   ).run("montecarlo")
+    assert int(r.stream.n_trials[0]) == 3_000
+    leaves, treedef = jax.tree_util.tree_flatten(r)
+    r2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(r2, Results) and r2.stream is not None
+    assert int(r2.stream.n_trials[0]) == 3_000
+
+
+def test_streamed_experiment_rejects_bad_trials():
+    with pytest.raises(ValueError, match="trials"):
+        Experiment(systems=[QuorumSpec(5, 4, 2, 4)], trials=0)

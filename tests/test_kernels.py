@@ -13,6 +13,9 @@ from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
 
 KEY = jax.random.PRNGKey(0)
 
+from repro.montecarlo.streaming import sketch_bins
+_BINS = sketch_bins(0.01)
+
 
 # ---------------------------------------------------------------------------
 # quorum_tally
@@ -114,6 +117,68 @@ def test_masked_tally_lowest_value_wins_ties():
     want = qt_ref.masked_tally(votes, w, t, 2)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     assert int(got[0, 0]) == 0
+
+
+# ---------------------------------------------------------------------------
+# fused streaming reduction (masked tally + decide + block histogram)
+# ---------------------------------------------------------------------------
+
+def _stream_inputs(seed: int, S: int, n: int, M: int, G: int, K: int):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    votes = jax.random.randint(ks[0], (S, n), -1, K)
+    w = jax.random.randint(ks[1], (M, G, n), 0, 3).astype(jnp.float32)
+    t = jax.random.randint(ks[2], (M, G), 1, n + 2).astype(jnp.float32)
+    # saturation / recovery instants: mostly small, some at the sentinel
+    und = 5e8
+    sat = jnp.exp(jax.random.normal(ks[3], (M, S, K))) + 0.2
+    sat = jnp.where(jax.random.uniform(ks[4], sat.shape) < 0.1, 1e9, sat)
+    rec = jnp.exp(jax.random.normal(ks[5], (M, S))) + 0.5
+    rec = jnp.where(jax.random.uniform(ks[4], rec.shape) < 0.05, 1e9, rec)
+    valid = (jnp.arange(S) < S - S // 7)      # trailing padding trials
+    return votes, w, t, sat, rec, valid, und
+
+
+@pytest.mark.parametrize("S,n,M,G,K", [(300, 11, 2, 3, 2), (1025, 9, 1, 6, 3),
+                                       (513, 7, 3, 1, 2)])
+def test_stream_tally_decide_hist_kernel_vs_ref(S, n, M, G, K):
+    """Fused streaming kernel vs jnp oracle: histogram and outcome counts
+    bit-identical, float reductions (sum/max) to tolerance (the kernel
+    accumulates block-by-block)."""
+    votes, w, t, sat, rec, valid, und = _stream_inputs(S * 13 + M, S, n, M,
+                                                       G, K)
+    kw = dict(n_values=K, precision=0.01, bins=_BINS, undecided_ms=und)
+    h_k, s_k = qt_ops.stream_tally_decide_hist(votes, w, t, sat, rec,
+                                               valid, **kw)
+    h_r, s_r = qt_ref.stream_tally_decide_hist(votes, w, t, sat, rec,
+                                               valid, **kw)
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+    for f in ("n_fast", "n_recovery", "n_undecided"):
+        np.testing.assert_array_equal(np.asarray(s_k[f]), np.asarray(s_r[f]),
+                                      f)
+    assert np.allclose(np.asarray(s_k["sum_ms"]), np.asarray(s_r["sum_ms"]),
+                       rtol=1e-5)
+    assert np.allclose(np.asarray(s_k["max_ms"]), np.asarray(s_r["max_ms"]))
+    # accounting: histogram mass == decided == valid - undecided
+    n_valid = int(np.asarray(valid).sum())
+    per_sys = np.asarray(s_r["n_fast"]) + np.asarray(s_r["n_recovery"]) \
+        + np.asarray(s_r["n_undecided"])
+    np.testing.assert_array_equal(per_sys, np.full((M,), n_valid))
+    np.testing.assert_array_equal(np.asarray(h_k).sum(-1),
+                                  np.asarray(s_k["n_fast"])
+                                  + np.asarray(s_k["n_recovery"]))
+
+
+def test_stream_tally_decide_hist_all_invalid_block():
+    """A fully padded chunk contributes nothing — counts zero, histogram
+    empty, max at the -inf identity."""
+    votes, w, t, sat, rec, _, und = _stream_inputs(3, 128, 5, 1, 2, 2)
+    valid = jnp.zeros((128,), bool)
+    h, s = qt_ops.stream_tally_decide_hist(
+        votes, w, t, sat, rec, valid, n_values=2, precision=0.01, bins=_BINS,
+        undecided_ms=und)
+    assert int(np.asarray(h).sum()) == 0
+    assert int(np.asarray(s["n_fast"]).sum()) == 0
+    assert np.isneginf(np.asarray(s["max_ms"])).all()
 
 
 # ---------------------------------------------------------------------------

@@ -1,16 +1,14 @@
 """Unit tests for the batched Monte-Carlo scenario engine
 (``repro.montecarlo``): the unified mask-table lowering, delay models,
-scenarios, summaries, and agreement with the legacy per-spec shim."""
+scenarios, summaries, and batched-vs-solo agreement."""
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import jax_sim
 from repro.core.quorum import QuorumSpec, all_valid_specs
 from repro.montecarlo import (CrashedDelay, LossyDelay, ParetoDelay,
                               Scenario, ShiftedLognormalDelay, WanDelay,
-                              build_mask_table, build_spec_table, engine,
-                              scenarios)
+                              build_mask_table, engine, scenarios)
 
 KEY = jax.random.PRNGKey(7)
 FFP = QuorumSpec.paper_headline(11)
@@ -21,11 +19,9 @@ FP = QuorumSpec.fast_paxos(11)
 # tables + traced batching
 # ---------------------------------------------------------------------------
 
-def test_spec_table_shape_and_mixed_n_rejected():
-    t = build_spec_table([FFP, FP])
-    assert t.shape == (2, 3) and t.dtype == jnp.int32
-    with pytest.raises(ValueError):
-        build_spec_table([FFP, QuorumSpec(7, 6, 2, 6)])
+def test_mask_table_mixed_n_rejected():
+    with pytest.raises(ValueError, match="mixes cluster sizes"):
+        build_mask_table([FFP, QuorumSpec(7, 6, 2, 6)])
 
 
 def test_mask_table_specializes_cardinality_batches():
@@ -35,46 +31,71 @@ def test_mask_table_specializes_cardinality_batches():
     assert "q" not in build_mask_table([FFP, FP], specialize=False)
 
 
-def test_legacy_spec_table_coerced_with_deprecation():
-    """The pre-mask-table signature still works — bit-identically — but
-    warns; race_masked/fast_path_masked are deprecated aliases."""
-    table = build_mask_table([FFP, FP])
-    kw = dict(n=11, k_proposers=2, samples=2_000)
-    offs = jnp.array([0.0, 0.3])
-    new = engine.race(KEY, table, offs, **kw)
-    with pytest.warns(DeprecationWarning, match="build_mask_table"):
-        old = engine.race(KEY, build_spec_table([FFP, FP]), offs, **kw)
-    for k in new:
-        assert bool((new[k] == old[k]).all()), k
-    with pytest.warns(DeprecationWarning, match="engine.race"):
-        alias = engine.race_masked(KEY, table, offs, **kw)
-    for k in new:
-        assert bool((new[k] == alias[k]).all()), k
-    with pytest.warns(DeprecationWarning, match="engine.fast_path"):
-        engine.fast_path_masked(KEY, table, n=11, samples=256)
+def test_raw_spec_tables_rejected():
+    """The pre-mask-table (M, 3) signature was removed after its
+    deprecation release: entry points demand a build_mask_table dict."""
+    raw = jnp.array([[9, 3, 7]], jnp.int32)
+    with pytest.raises(TypeError, match="build_mask_table"):
+        engine.race(KEY, raw, jnp.array([0.0, 0.3]), n=11, k_proposers=2,
+                    samples=64)
+    with pytest.raises(TypeError, match="build_mask_table"):
+        engine.fast_path(KEY, raw, n=11, samples=64)
+    assert not hasattr(engine, "race_masked")        # aliases gone too
+    assert not hasattr(engine, "fast_path_masked")
+    with pytest.raises(ImportError):
+        import repro.core.jax_sim  # noqa: F401 — shim deleted
 
 
-def test_batched_fast_path_matches_per_spec_shim():
+def test_batched_fast_path_matches_solo_tables():
+    """Common random numbers: every spec of a batch sees the same sampled
+    delays, so scoring a spec alone must reproduce its batch row exactly."""
     specs = [FP, FFP, QuorumSpec(11, 11, 1, 6)]
     table = build_mask_table(specs)
     batched = engine.fast_path(KEY, table, n=11, samples=40_000)
     for i, s in enumerate(specs):
-        solo = jax_sim.fast_path_latency(KEY, s.n, s.q2f, 40_000)
-        # identical sampled delays -> identical order statistics
-        assert float(jnp.abs(batched[i] - solo).max()) < 1e-5
+        solo = engine.fast_path(KEY, build_mask_table([s]), n=11,
+                                samples=40_000)[0]
+        assert float(jnp.abs(batched[i] - solo).max()) < 1e-6
 
 
-def test_batched_race_matches_per_spec_shim():
+def test_batched_race_matches_solo_tables():
     specs = [FP, FFP]
     table = build_mask_table(specs)
     out = engine.race(KEY, table, jnp.array([0.0, 0.3]), n=11,
                       k_proposers=2, samples=30_000)
     for i, s in enumerate(specs):
-        solo = jax_sim.conflict_race(KEY, s.n, s.q1, s.q2f, s.q2c,
-                                     30_000, 0.3)
-        assert bool((out["recovery"][i] == solo["recovery"]).all())
+        solo = engine.race(KEY, build_mask_table([s]), jnp.array([0.0, 0.3]),
+                           n=11, k_proposers=2, samples=30_000)
+        assert bool((out["recovery"][i] == solo["recovery"][0]).all())
         assert float(jnp.abs(out["latency_ms"][i]
-                             - solo["latency_ms"]).max()) < 1e-5
+                             - solo["latency_ms"][0]).max()) < 1e-6
+
+
+def test_fast_path_monotone_in_quorum_size():
+    table = build_mask_table([QuorumSpec(11, 11, 1, 7),
+                              QuorumSpec(11, 11, 1, 9)])
+    lat = engine.fast_path(KEY, table, n=11, samples=50_000)
+    assert float(lat[0].mean()) < float(lat[1].mean())
+
+
+def test_classic_path_slower_than_fast():
+    table = build_mask_table([FFP])
+    fast = engine.fast_path(KEY, table, n=11, samples=30_000)
+    classic = engine.classic_path(KEY, table, n=11, samples=30_000)
+    # classic adds the client->leader relay hop
+    assert float(classic.mean()) > float(fast.mean())
+
+
+def test_recovery_probability_decreasing_in_interval():
+    """Fig. 2c: larger inter-command intervals -> fewer recoveries."""
+    table = build_mask_table([FFP])
+    ps = []
+    for d in (0.0, 0.3, 0.8, 2.0):
+        out = engine.race(KEY, table, jnp.array([0.0, d]), n=11,
+                          k_proposers=2, samples=30_000)
+        ps.append(float(out["recovery"].mean()))
+    assert ps[0] >= ps[1] >= ps[2] >= ps[3]
+    assert ps[3] < 0.01
 
 
 def test_full_valid_space_single_trace():

@@ -1,0 +1,302 @@
+"""Streaming engine tests (``repro.montecarlo.streaming``): sketch
+correctness against exact percentiles, merge algebra, chunked-vs-
+materialized identity, trial-axis sharding, and the fixed-memory scaling
+contract (state size independent of trial count)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.quorum import ExplicitQuorumSystem, QuorumSpec
+from repro.montecarlo import build_mask_table, engine, streaming
+from repro.montecarlo.streaming import (StreamSummary, bucket_index,
+                                        bucket_value, sketch_bins,
+                                        sketch_gamma)
+
+KEY = jax.random.PRNGKey(0)
+FFP = QuorumSpec.paper_headline(11)
+FP = QuorumSpec.fast_paxos(11)
+OFFS = jnp.array([0.0, 0.25], jnp.float32)
+
+
+def _lat_summary(lat, precision=0.01):
+    """Wrap a latency vector as an all-decided StreamSummary."""
+    lat = jnp.asarray(lat, jnp.float32).reshape(1, -1)
+    out = {"latency_ms": lat,
+           "undecided": jnp.zeros_like(lat, bool),
+           "reached_fast": jnp.ones_like(lat, bool),
+           "recovery": jnp.zeros_like(lat, bool)}
+    return StreamSummary.from_outcomes(out, precision)
+
+
+# ---------------------------------------------------------------------------
+# sketch: quantiles within the guaranteed relative error
+# ---------------------------------------------------------------------------
+
+def test_bucket_roundtrip_relative_error():
+    """bucket_value(bucket_index(x)) is within ``precision`` of x across
+    the covered range — the DDSketch invariant the quantile bound rests
+    on."""
+    for precision in (0.005, 0.01, 0.05):
+        x = jnp.logspace(-1.5, 5.5, 4_000, dtype=jnp.float32)
+        est = bucket_value(bucket_index(x, precision), precision)
+        rel = jnp.abs(est - x) / x
+        # float32 log/pow rounding eats a hair of the analytic bound
+        assert float(rel.max()) < precision * 1.02, (precision,
+                                                     float(rel.max()))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), size=st.integers(200, 20_000),
+       scale=st.floats(0.2, 50.0))
+def test_sketch_quantiles_converge_to_exact(seed, size, scale):
+    """Satellite: streamed p50/p99 within the sketch's guaranteed relative
+    error of exact ``jnp.percentile`` (plus one-sample rank slack)."""
+    precision = 0.01
+    lat = scale * jnp.exp(
+        0.6 * jax.random.normal(jax.random.PRNGKey(seed), (size,))) + 0.05
+    s = _lat_summary(lat, precision)
+    for q in (0.5, 0.99):
+        exact = float(jnp.percentile(lat, 100.0 * q))
+        # the sketch uses the ceil(q*n)-th order statistic; percentile
+        # interpolates — allow one rank of drift on top of the error bound
+        lo = float(jnp.sort(lat)[max(0, int(np.ceil(q * size)) - 2)])
+        hi = float(jnp.sort(lat)[min(size - 1, int(np.ceil(q * size)))])
+        est = float(s.quantile(q)[0])
+        assert (1 - 1.05 * precision) * lo <= est <= (1 + 1.05 * precision) \
+            * hi, (q, est, exact, lo, hi)
+
+
+def test_sketch_precision_knob_tightens_error():
+    lat = jnp.exp(0.8 * jax.random.normal(KEY, (50_000,))) + 0.3
+    exact = float(jnp.percentile(lat, 99.0))
+    err = {}
+    for precision in (0.05, 0.005):
+        est = float(_lat_summary(lat, precision).quantile(0.99)[0])
+        err[precision] = abs(est - exact) / exact
+        assert err[precision] < precision * 1.1
+    assert err[0.005] < err[0.05]
+
+
+# ---------------------------------------------------------------------------
+# merge algebra: exact, associative, commutative
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_sketch_merge_commutative_and_associative(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    parts = [_lat_summary(jnp.exp(jax.random.normal(k, (s,))) + 0.1)
+             for k, s in zip(ks, (400, 1_300, 77))]
+    a, b, c = parts
+    ab, ba = a.merge(b), b.merge(a)
+    # integer state merges bit-for-bit in either order
+    np.testing.assert_array_equal(np.asarray(ab.hist), np.asarray(ba.hist))
+    np.testing.assert_array_equal(np.asarray(ab.n_fast),
+                                  np.asarray(ba.n_fast))
+    assert np.allclose(np.asarray(ab.mean_ms), np.asarray(ba.mean_ms),
+                       rtol=1e-6)
+    abc1, abc2 = a.merge(b).merge(c), a.merge(b.merge(c))
+    np.testing.assert_array_equal(np.asarray(abc1.hist),
+                                  np.asarray(abc2.hist))
+    np.testing.assert_array_equal(np.asarray(abc1.n_trials),
+                                  np.asarray(abc2.n_trials))
+    assert np.allclose(np.asarray(abc1.mean_ms), np.asarray(abc2.mean_ms),
+                       rtol=1e-5)
+    assert np.allclose(np.asarray(abc1.max_ms), np.asarray(abc2.max_ms))
+    # merged quantiles == quantiles of the concatenated sample's sketch
+    whole = _lat_summary(jnp.concatenate(
+        [jnp.exp(jax.random.normal(k, (s,))) + 0.1
+         for k, s in zip(ks, (400, 1_300, 77))]))
+    np.testing.assert_array_equal(np.asarray(abc1.hist),
+                                  np.asarray(whole.hist))
+
+
+def test_merge_rejects_mismatched_precision():
+    a = _lat_summary(jnp.ones((10,)), 0.01)
+    b = _lat_summary(jnp.ones((10,)), 0.02)
+    with pytest.raises(ValueError, match="precision"):
+        a.merge(b)
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming vs the materializing engine
+# ---------------------------------------------------------------------------
+
+def test_single_chunk_bit_identical_to_materialized():
+    """Satellite: for T <= chunk the stream IS the materializing path plus
+    a reduction — integer state and the max match bit-for-bit."""
+    out = engine.race(KEY, build_mask_table([FFP, FP]), OFFS, n=11,
+                      k_proposers=2, samples=5_000)
+    ref = StreamSummary.from_outcomes(out)
+    st_ = streaming.race_stream(KEY, build_mask_table([FFP, FP]), OFFS,
+                                n=11, k_proposers=2, trials=5_000,
+                                chunk=8_192, shard=False)
+    for f in ("n_trials", "n_fast", "n_recovery", "n_undecided", "hist"):
+        np.testing.assert_array_equal(np.asarray(getattr(st_, f)),
+                                      np.asarray(getattr(ref, f)), f)
+    np.testing.assert_array_equal(np.asarray(st_.max_ms),
+                                  np.asarray(ref.max_ms))
+    assert np.allclose(np.asarray(st_.mean_ms), np.asarray(ref.mean_ms),
+                       rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(trials=st.integers(1, 9_000), chunk=st.integers(64, 4_096))
+def test_chunk_overhang_accounting(trials, chunk):
+    """Every trial is counted exactly once whatever the chunk overhang."""
+    table = build_mask_table([FFP])
+    st_ = streaming.fast_path_stream(jax.random.PRNGKey(trials), table,
+                                     n=11, trials=trials, chunk=chunk,
+                                     shard=False)
+    assert int(st_.n_trials[0]) == trials
+    assert int(st_.n_fast[0] + st_.n_recovery[0]
+               + st_.n_undecided[0]) == trials
+    assert int(np.asarray(st_.hist.sum())) == int(st_.n_decided[0])
+
+
+def test_multichunk_agrees_with_materialized_statistics():
+    table = build_mask_table([FFP, FP])
+    st_ = streaming.race_stream(KEY, table, OFFS, n=11, k_proposers=2,
+                                trials=40_000, chunk=8_192, shard=False)
+    out = engine.race(jax.random.PRNGKey(5), table, OFFS, n=11,
+                      k_proposers=2, samples=40_000)
+    exact = engine.summarize(out)
+    got = st_.summary()
+    for i in range(2):
+        assert abs(float(got["p50_ms"][i]) - float(exact["p50_ms"][i])) \
+            / float(exact["p50_ms"][i]) < 0.05
+        assert abs(float(got["recovery_rate"][i])
+                   - float(exact["recovery_rate"][i])) < 0.02
+
+
+def test_stream_masked_tables_and_fused_kernel_agree():
+    """The fused Pallas chunk reduction (masked tally + decide + histogram
+    in one kernel pass) must match the jnp scatter path: integer state
+    bit-for-bit, float reductions to tolerance."""
+    grid = ExplicitQuorumSystem.grid(3).to_masks().embed(11)
+    table = build_mask_table([FFP.to_masks(), grid])
+    assert "q" not in table
+    kw = dict(n=11, k_proposers=2, trials=6_000, chunk=2_048, shard=False)
+    ref = streaming.race_stream(KEY, table, OFFS, use_kernel=False, **kw)
+    ker = streaming.race_stream(KEY, table, OFFS, use_kernel=True, **kw)
+    for f in ("n_trials", "n_fast", "n_recovery", "n_undecided", "hist"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(ker, f)), f)
+    assert np.allclose(np.asarray(ref.mean_ms), np.asarray(ker.mean_ms),
+                       rtol=1e-5)
+    assert np.allclose(np.asarray(ref.max_ms), np.asarray(ker.max_ms))
+
+
+def test_stream_single_compile_per_table_shape():
+    """TRACE_COUNTS invariant: one compile per (table shape, chunk count) —
+    different trial counts with the same chunking, different keys, and
+    different same-shape tables all re-enter it (trials and table contents
+    are traced; only the scan length is static)."""
+    table = build_mask_table([FFP, FP])
+    streaming.race_stream(KEY, table, OFFS, n=11, k_proposers=2,
+                          trials=9_000, chunk=2_048, shard=False)
+    before = dict(engine.TRACE_COUNTS)
+    # 8_300..10_240 trials all scan 5 chunks of 2_048
+    streaming.race_stream(jax.random.PRNGKey(1), table, OFFS, n=11,
+                          k_proposers=2, trials=10_000, chunk=2_048,
+                          shard=False)
+    streaming.race_stream(KEY, build_mask_table([FP, FFP]), OFFS, n=11,
+                          k_proposers=2, trials=8_500, chunk=2_048,
+                          shard=False)
+    assert engine.TRACE_COUNTS == before
+
+
+def test_stream_state_size_independent_of_trials():
+    """The fixed-memory contract at the state level: summary leaves have
+    identical shapes at 3k and 300k trials (only chunk size matters)."""
+    table = build_mask_table([FFP])
+    small = streaming.fast_path_stream(KEY, table, n=11, trials=3_000,
+                                       chunk=1_024, shard=False)
+    big = streaming.fast_path_stream(KEY, table, n=11, trials=300_000,
+                                     chunk=1_024, shard=False)
+    shapes = lambda s: [leaf.shape for leaf in jax.tree_util.tree_leaves(s)]
+    assert shapes(small) == shapes(big)
+    assert int(big.n_trials[0]) == 300_000
+
+
+def test_classic_path_stream_semantics():
+    table = build_mask_table([FFP])
+    st_ = streaming.classic_path_stream(KEY, table, n=11, trials=5_000,
+                                        chunk=2_048, shard=False)
+    assert int(st_.n_fast[0]) == 0
+    assert int(st_.n_recovery[0]) == 5_000
+    fast = streaming.fast_path_stream(KEY, table, n=11, trials=5_000,
+                                      chunk=2_048, shard=False)
+    # classic adds the client->leader relay hop
+    assert float(st_.quantile(0.5)[0]) > float(fast.quantile(0.5)[0])
+
+
+def test_empty_summary_is_nan_rates_zero():
+    s = StreamSummary.zeros(2)
+    d = s.summary()
+    assert np.isnan(np.asarray(d["p50_ms"])).all()
+    assert np.isnan(np.asarray(d["mean_ms"])).all()
+    assert float(d["fast_rate"][0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# sharding over the trial axis (exercised for real in the CI multi-device
+# job via XLA_FLAGS=--xla_force_host_platform_device_count=8)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >1 device (run under "
+                           "--xla_force_host_platform_device_count)")
+def test_sharded_stream_counts_exact_and_stats_agree():
+    table = build_mask_table([FFP, FP])
+    trials = 30_011                      # deliberately not divisible
+    sh = streaming.race_stream(KEY, table, OFFS, n=11, k_proposers=2,
+                               trials=trials, chunk=2_048, shard=True)
+    assert [int(x) for x in sh.n_trials] == [trials, trials]
+    un = streaming.race_stream(KEY, table, OFFS, n=11, k_proposers=2,
+                               trials=trials, chunk=2_048, shard=False)
+    for i in range(2):
+        assert abs(float(sh.quantile(0.5)[i]) - float(un.quantile(0.5)[i])) \
+            / float(un.quantile(0.5)[i]) < 0.05
+        assert abs(float(sh.summary()["recovery_rate"][i])
+                   - float(un.summary()["recovery_rate"][i])) < 0.02
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >1 device (run under "
+                           "--xla_force_host_platform_device_count)")
+def test_sharded_fast_path_stream_exact_totals():
+    table = build_mask_table([FFP])
+    st_ = streaming.fast_path_stream(KEY, table, n=11, trials=10_001,
+                                     chunk=512, shard=True)
+    assert int(st_.n_trials[0]) == 10_001
+    assert int(st_.n_fast[0]) == 10_001       # no loss model -> all decide
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 10^7 trials, n=11, fixed memory, through the Experiment API
+# ---------------------------------------------------------------------------
+
+def test_experiment_ten_million_trials_fixed_memory():
+    """The ISSUE acceptance criterion: an n=11 system streams 10^7 trials
+    through ``Experiment`` with a fixed-size state, and the streamed p50/
+    p99 sit within the sketch's documented error of exact percentiles
+    measured on a materialized slice of the same workload."""
+    from repro.api import Experiment, Workload
+    exp = Experiment(systems=[FFP], workload=Workload.conflict_free(),
+                     trials=10_000_000, chunk=262_144,
+                     compute_fault_tolerance=False)
+    r = exp.run("montecarlo")
+    state = r.stream
+    assert int(state.n_trials[0]) == 10_000_000
+    assert state.hist.shape == (1, sketch_bins(exp.precision))
+    # exact reference: a materialized 200k sample of the same distribution
+    exact = engine.summarize(engine.fast_path(
+        jax.random.PRNGKey(17), build_mask_table([FFP]), n=11,
+        samples=200_000))
+    for q in ("p50_ms", "p99_ms"):
+        got, ref = float(r.summary[q][0]), float(exact[q][0])
+        # sketch precision + cross-sample Monte-Carlo noise at 200k
+        assert abs(got - ref) / ref < exp.precision + 0.02, (q, got, ref)
