@@ -1,45 +1,57 @@
-"""Beyond-paper: sweep every FFP-valid cardinality configuration on n=11.
+"""Beyond-paper: the full FFP-valid quorum space on n=11 as a *streamed*
+Pareto frontier.
 
 The paper (§5) gives two example points in the (q1, q2c, q2f) tradeoff
-space.  We enumerate the *whole* space permitted by Eqs. 13/14, score each
-configuration on the axes a deployment cares about —
+space.  We enumerate the *whole* space permitted by Eqs. 13/14 (271
+systems at n=11 — ``repro.frontier.families.cardinality_family``) and
+score every one through the streaming engine (``repro.frontier.score``):
+one ``fast_path_stream`` pass and one ``race_stream`` pass over the whole
+batch — 10^7 trials each in the full run (10^6 under ``--smoke``), fixed
+memory, common random numbers, ONE compile per engine path — extracting
+the six frontier axes a deployment cares about:
 
-  fast-path p50 latency      (order statistic of q2f acceptor round trips)
-  P(recovery | race)         (collision robustness at Δ=0.2 ms)
-  steady-state fault tolerance (n - q2f live crashes on the fast path)
-  phase-1 fault tolerance      (n - q1: crashes survivable for recovery)
+  fast_p50_ms    conflict-free fast-path median
+  race_p999_ms   p99.9 commit latency under a 2-way race at Δ=0.2 ms —
+                 the tail axis only streamed trial counts make meaningful
+  p_recovery     P(coordinated recovery | race)
+  ft_fast / ft_phase1 / ft_classic   per-phase crash budgets
 
-— and report the Pareto-optimal set.  This is the flexibility the paper's
-relaxation buys: Fast Paxos admits exactly one point (q1=q2c=6, q2f=9).
+The Pareto-optimal set under ``repro.frontier.pareto`` (epsilon ties
+matched to sketch precision) is the flexibility the paper's relaxation
+buys: Fast Paxos admits exactly one point (q1=q2c=6, q2f=9).
 
-Evaluation runs on ``repro.montecarlo``: quorum thresholds are traced, so
-the whole frontier is scored by ONE compiled fast-path program and ONE
-compiled race program (the old per-spec path re-jitted for every config).
-Every spec sees identical sampled delays (common random numbers), so the
-frontier ordering carries no cross-spec sampling noise.  The sweep asserts
-both the single-compile property (via ``engine.TRACE_COUNTS``) and agreement
-of the batched numbers with the legacy per-spec shim within Monte-Carlo
-tolerance.
+The sweep asserts the single-compile property (``engine.TRACE_COUNTS``),
+agreement of the streamed numbers with the legacy per-spec reference
+below (different implementation, different PRNG stream), and that the
+legacy quorum-size-minimal set is contained in the scored frontier.
+
+Usage:  PYTHONPATH=src python -m benchmarks.quorum_sweep [--smoke]
 """
 from __future__ import annotations
 
+import argparse
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quorum import QuorumSpec, ffp_card_ok
-from repro.montecarlo import build_mask_table, engine
+from repro.frontier import cardinality_family, score_systems
+from repro.montecarlo import engine
 
 N = 11
-SAMPLES = 50_000
+TRIALS = 10_000_000
+TRIALS_SMOKE = 1_000_000
+CHUNK = 16_384
 DELTA_MS = 0.2
+LEGACY_SAMPLES = 50_000
 
 
 # ---------------------------------------------------------------------------
 # Independent per-spec reference: the pre-refactor static-threshold
 # implementation (one jit per spec, python-int order statistics).  Kept here
-# verbatim so the batched engine is checked against a *different* code path,
+# verbatim so the streamed engine is checked against a *different* code path,
 # not a shim that now shares its internals.
 # ---------------------------------------------------------------------------
 
@@ -65,6 +77,8 @@ def _legacy_recovery_prob(key, spec: QuorumSpec, delta_ms: float,
 
 
 def enumerate_valid(n: int = N) -> List[QuorumSpec]:
+    """Brute-force triple loop over Eqs. 13/14 — the independent check on
+    ``families.cardinality_family``'s enumeration."""
     out = []
     for q1 in range(1, n + 1):
         for q2c in range(1, n + 1):
@@ -75,8 +89,9 @@ def enumerate_valid(n: int = N) -> List[QuorumSpec]:
 
 
 def minimal_frontier(specs: List[QuorumSpec]) -> List[QuorumSpec]:
-    """Drop specs dominated in (q1, q2c, q2f) — larger quorums are never
-    better on any axis we score."""
+    """Legacy per-spec reference: drop specs dominated in (q1, q2c, q2f) —
+    larger quorums are never better on any axis we score.  Retained as the
+    cross-check the scored frontier's membership is validated against."""
     keep = []
     for s in specs:
         if not any(o.q1 <= s.q1 and o.q2c <= s.q2c and o.q2f <= s.q2f
@@ -87,65 +102,72 @@ def minimal_frontier(specs: List[QuorumSpec]) -> List[QuorumSpec]:
 
 
 def run(quick: bool = False, seed: int = 0):
-    samples = 5_000 if quick else SAMPLES
-    valid = enumerate_valid()
-    frontier = minimal_frontier(valid)
-    rows: List[Tuple[str, float]] = [
-        ("sweep.n_valid_configs", len(valid)),
-        ("sweep.n_minimal_configs", len(frontier)),
-    ]
-    key = jax.random.PRNGKey(seed)
-    k_fast, k_race = jax.random.split(key)
-    # all-cardinality batch: the mask lowering carries the "q" entry, so the
-    # engine keeps the k-th-order-statistic gathers for the whole frontier
-    table = build_mask_table(frontier)
+    trials = TRIALS_SMOKE if quick else TRIALS
+    legacy_samples = 5_000 if quick else LEGACY_SAMPLES
 
-    # -- the entire frontier in two engine calls (one compile each) --------
+    members = cardinality_family(N)
+    specs = [m.system for m in members]
+    # family generator vs the independent brute-force enumeration
+    assert ({(s.q1, s.q2c, s.q2f) for s in specs}
+            == {(s.q1, s.q2c, s.q2f) for s in enumerate_valid(N)})
+
+    rows: List[Tuple[str, float]] = [
+        ("sweep.n_valid_configs", len(members)),
+        ("sweep.trials", trials),
+    ]
+
+    # -- the entire space in two streamed engine calls (one compile each) --
     t0 = dict(engine.TRACE_COUNTS)
-    lat = engine.fast_path(k_fast, table, n=N, samples=samples)    # (M, S)
-    race = engine.race(k_race, table, jnp.array([0.0, DELTA_MS]),
-                       n=N, k_proposers=2, samples=samples)
-    p50 = jnp.median(lat, axis=-1)
-    p_rec = race["recovery"].mean(axis=-1)
-    fast_traces = engine.TRACE_COUNTS["fast_path"] - t0["fast_path"]
-    race_traces = engine.TRACE_COUNTS["race"] - t0["race"]
+    result = score_systems(members, trials=trials, chunk=CHUNK,
+                           delta_ms=DELTA_MS, shard=True, seed=seed)
+    fast_traces = (engine.TRACE_COUNTS["fast_path_stream"]
+                   - t0["fast_path_stream"])
+    race_traces = engine.TRACE_COUNTS["race_stream"] - t0["race_stream"]
     assert fast_traces <= 1 and race_traces <= 1, (
         f"per-spec re-jit crept back in: {fast_traces} fast-path traces, "
-        f"{race_traces} race traces for {len(frontier)} specs")
+        f"{race_traces} race traces for {len(members)} specs")
     rows.append(("sweep.engine_compiles", fast_traces + race_traces))
 
-    scored = []
-    for i, s in enumerate(frontier):
-        ft = s.fault_tolerance()
-        scored.append((s, float(p50[i]), float(p_rec[i]), ft))
-        tag = f"q1={s.q1},q2c={s.q2c},q2f={s.q2f}"
-        rows.append((f"sweep.[{tag}].fast_p50_ms", float(p50[i])))
-        rows.append((f"sweep.[{tag}].p_recovery", float(p_rec[i])))
-        rows.append((f"sweep.[{tag}].ft_fast", ft["steady_state_fast"]))
-        rows.append((f"sweep.[{tag}].ft_phase1", ft["phase1"]))
+    mask = np.asarray(result.mask)
+    rows.append(("sweep.n_frontier_systems", int(mask.sum())))
+    for i in result.frontier_indices:
+        row = result.row(i)
+        tag = result.labels[i]
+        for axis in ("fast_p50_ms", "race_p999_ms", "p_recovery",
+                     "ft_fast", "ft_phase1", "ft_classic"):
+            rows.append((f"sweep.[{tag}].{axis}", row[axis]))
 
-    # -- batched vs independent per-spec reference (Monte-Carlo tolerance):
-    # different implementation, different PRNG stream, so agreement is a
-    # real check on the engine's order statistics, not a tautology.
+    # -- streamed vs independent per-spec reference (Monte-Carlo + sketch
+    # tolerance): different implementation, different PRNG stream, so
+    # agreement is a real check on the engine, not a tautology.
     k_check = jax.random.PRNGKey(1234)
-    # difference of two independent p-estimates has sd <= sqrt(0.5/samples);
-    # 4.5 sigma keeps the check meaningful at full samples without making the
-    # --quick CI smoke job (5k samples) flaky across jax/platform PRNG rolls
-    tol_rec = 4.5 * (0.5 / samples) ** 0.5
-    for i in (0, len(frontier) // 2, len(frontier) - 1):
-        s = frontier[i]
+    # difference of two independent p-estimates has sd <= sqrt(0.5/samples)
+    # (the legacy sample count dominates); 4.5 sigma keeps the check
+    # meaningful without making the CI smoke job flaky
+    tol_rec = 4.5 * (0.5 / legacy_samples) ** 0.5
+    front = result.frontier_indices
+    for i in (front[0], front[len(front) // 2], front[-1]):
+        s = specs[i]
+        row = result.row(i)
         old_p50 = _legacy_fast_p50(jax.random.fold_in(k_check, i),
-                                   s.n, s.q2f, samples)
+                                   s.n, s.q2f, legacy_samples)
         old_rec = _legacy_recovery_prob(jax.random.fold_in(k_check, 100 + i),
-                                        s, DELTA_MS, samples)
-        assert abs(old_p50 - float(p50[i])) < 0.05, (s, old_p50, float(p50[i]))
-        assert abs(old_rec - float(p_rec[i])) < tol_rec, (s, old_rec,
-                                                          float(p_rec[i]))
-    rows.append(("sweep.batched_vs_perspec_checked", 3))
+                                        s, DELTA_MS, legacy_samples)
+        assert abs(old_p50 - row["fast_p50_ms"]) < 0.05, (s, old_p50, row)
+        assert abs(old_rec - row["p_recovery"]) < tol_rec, (s, old_rec, row)
+    rows.append(("sweep.streamed_vs_perspec_checked", 3))
 
-    # sanity: latency is monotone in q2f on the frontier
-    by_q2f = sorted(scored, key=lambda t: t[0].q2f)
-    lats = [t[1] for t in by_q2f]
+    # -- membership cross-check: every quorum-size-minimal spec is
+    # undominated on the scored axes (one spec per q1; see tests/
+    # test_frontier.py for the fixed-seed anchor of the full set)
+    minimal = {(s.q1, s.q2c, s.q2f) for s in minimal_frontier(specs)}
+    scored = {(specs[i].q1, specs[i].q2c, specs[i].q2f) for i in front}
+    assert minimal <= scored, sorted(minimal - scored)
+    rows.append(("sweep.minimal_subset_of_frontier", len(minimal)))
+
+    # sanity: fast-path latency is monotone in q2f on the frontier
+    by_q2f = sorted(front, key=lambda i: specs[i].q2f)
+    lats = [result.row(i)["fast_p50_ms"] for i in by_q2f]
     assert all(a <= b + 0.05 for a, b in zip(lats, lats[1:])), lats
     return rows
 
@@ -158,4 +180,9 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="10^6 streamed trials instead of 10^7; asserts "
+                         "and frontier membership only")
+    args = ap.parse_args()
+    main(quick=args.smoke)

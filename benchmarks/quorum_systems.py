@@ -140,6 +140,22 @@ def run(quick: bool = False, seed: int = 0):
     assert undecided["row_outage"] < 0.2, \
         "a single-row outage must leave the grid's fast path mostly live"
 
+    # -- frontier coda: the same five systems through the streamed Pareto
+    # scorer (repro.frontier via api.frontier) — which of the §6 families
+    # survive dominance once the tail axis is measurable?
+    from repro.api import frontier as api_frontier
+    trials = 131_072 if quick else 2_000_000
+    fr = api_frontier([m for _, m in named], trials=trials, chunk=16_384,
+                      seed=seed)
+    rows.append(("qsys.frontier.n_systems", len(fr.labels)))
+    rows.append(("qsys.frontier.n_members", len(fr.frontier_indices)))
+    for (name, _), lab in zip(named, fr.labels):
+        rows.append((f"qsys.[{name}].on_frontier",
+                     float(fr.row(lab)["on_frontier"])))
+    # the paper's headline point trades tail latency against phase-1
+    # fault tolerance in a way nothing in this batch dominates
+    assert fr.row(fr.labels[0])["on_frontier"], fr.table(False)
+
     return rows
 
 

@@ -13,6 +13,9 @@ Sections:
                           call, traced thresholds (DESIGN.md §2)
   stream.*                streaming engine: trials/sec at fixed memory,
                           10^7-trial acceptance row (DESIGN.md §7)
+  frontier.*              mixed-family (grid + weighted + cardinality)
+                          Pareto frontier on n=12 through the streamed
+                          dominance scorer (DESIGN.md §8)
   kernel.*                per-kernel timing: jnp reference under jit (wall),
                           Pallas interpret-mode parity asserted in tests/
   roofline.*              aggregate of experiments/dryrun/*.json
@@ -180,6 +183,50 @@ def streaming_benches(quick: bool):
     return rows
 
 
+def frontier_benches(quick: bool):
+    """Mixed-family Pareto frontier (DESIGN.md §8) on an n=12 cluster:
+    grid systems over the 3x4 factorization (plus narrower embeds),
+    weighted voting, and the three cardinality landmarks, all in ONE mask
+    batch — the general masked stream path, since a mixed batch carries no
+    "q" specialization — scored by one ``fast_path_stream`` + one
+    ``race_stream`` compile and reduced by the dominance kernel."""
+    from repro.core.quorum import QuorumSpec
+    from repro.frontier import families, score_systems
+    from repro.montecarlo import engine
+
+    n = 12
+    members = (
+        [families.Member(f"card.{t}", s) for t, s in
+         (("headline", QuorumSpec.paper_headline(n)),
+          ("fast_paxos", QuorumSpec.fast_paxos(n)),
+          ("majority", QuorumSpec.majority_fast(n)))]
+        + families.grid_family(n) + families.weighted_family(n))
+    trials = 131_072 if quick else 2_000_000
+
+    t0 = dict(engine.TRACE_COUNTS)
+    s0 = time.perf_counter()
+    fr = score_systems(members, n=n, trials=trials, chunk=8_192, shard=True,
+                       seed=0)
+    wall = time.perf_counter() - s0
+    traces = (engine.TRACE_COUNTS["fast_path_stream"]
+              - t0["fast_path_stream"],
+              engine.TRACE_COUNTS["race_stream"] - t0["race_stream"])
+    assert traces[0] <= 1 and traces[1] <= 1, (
+        f"mixed-family frontier re-jitted: {traces}")
+
+    rows = [("frontier.n_systems", len(fr.labels)),
+            ("frontier.n_members", len(fr.frontier_indices)),
+            ("frontier.engine_compiles", sum(traces)),
+            (f"frontier.score_wall_s[{len(fr.labels)}sys.{trials}]", wall)]
+    for i in fr.frontier_indices:
+        row = fr.row(i)
+        rows.append((f"frontier.[{fr.labels[i]}].fast_p50_ms",
+                     row["fast_p50_ms"]))
+        rows.append((f"frontier.[{fr.labels[i]}].race_p999_ms",
+                     row["race_p999_ms"]))
+    return rows
+
+
 def roofline_summary(dryrun_dir: str = "experiments/dryrun"):
     rows = []
     files = sorted(glob.glob(os.path.join(dryrun_dir, "*.single.json")))
@@ -228,7 +275,8 @@ def _sections(args):
     out = [("fig2a", fig2a, True), ("fig2b", fig2b, True),
            ("fig2c", fig2c, True), ("sweep", sweep, True),
            ("qsys", qsys, True), ("mc", montecarlo_benches, False),
-           ("stream", streaming_benches, False)]
+           ("stream", streaming_benches, False),
+           ("frontier", frontier_benches, False)]
     if not args.skip_kernels:
         out.append(("kernels", kernel_benches, False))
     out.append(("roofline", lambda q: roofline_summary(), False))
@@ -241,7 +289,7 @@ def main() -> None:
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
-                         "qsys,mc,stream,kernels,roofline")
+                         "qsys,mc,stream,frontier,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable benchmark record "
                          "(metrics + per-section wall time + compile "

@@ -19,8 +19,12 @@ always the membership-mask table (DESIGN.md §2/§6).
 chunked trial reduction into a fixed-size quantile sketch
 (``StreamSummary``), sharded over local devices — memory stays one chunk
 no matter the trial count (DESIGN.md §7).
+
+``frontier(systems, ...)`` / ``Experiment.frontier()`` score a whole
+family batch through the streaming engine and return its Pareto frontier
+(``repro.frontier``, DESIGN.md §8).
 """
 from repro.montecarlo.streaming import StreamSummary  # noqa: F401
 
 from .experiment import (BACKENDS, Experiment, Results,  # noqa: F401
-                         Workload, sweep)
+                         Workload, frontier, sweep)

@@ -353,6 +353,27 @@ class Experiment:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"pick one of {BACKENDS}")
 
+    def frontier(self, axes=None, trials: Optional[int] = None):
+        """Streamed quorum-space Pareto frontier over this experiment's
+        systems (``repro.frontier``): one ``fast_path_stream`` pass and one
+        ``race_stream`` pass score the whole batch under common random
+        numbers, and the dominance kernel returns a ``FrontierResult``.
+
+        The race geometry comes from the declared workload when it races
+        (``k_proposers >= 2``); conflict-free workloads fall back to the
+        standard 2-way race at Δ=0.2 ms, since the frontier's recovery and
+        tail axes need collisions to measure.  The experiment's ``faults``
+        crash the named acceptors for the whole scoring run (every hop
+        touching them is lost), exactly as on the montecarlo backend.
+        ``trials`` defaults to the experiment's streaming trial count (or
+        10^6)."""
+        return frontier(self.systems, self.workload, n=self.n,
+                        faults=self.faults,
+                        trials=trials if trials is not None else self.trials,
+                        chunk=self.chunk, precision=self.precision,
+                        shard=self.shard, seed=self.seed,
+                        use_kernel=self.use_kernel, axes=axes)
+
     def _fault_tolerance(self) -> Optional[Tuple[Dict[str, int], ...]]:
         if not self.compute_fault_tolerance or self.n > _FT_MAX_N:
             return None
@@ -464,3 +485,45 @@ def sweep(experiment: Experiment, backends: Sequence[str] = BACKENDS
           ) -> Dict[str, Results]:
     """Run one experiment across several backends: {backend: Results}."""
     return {b: experiment.run(b) for b in backends}
+
+
+def frontier(systems: Sequence, workload: Optional[Workload] = None, *,
+             n: Optional[int] = None, faults: Sequence[int] = (),
+             trials: Optional[int] = None,
+             chunk: Optional[int] = None, precision: Optional[float] = None,
+             shard: bool = True, seed: int = 0, use_kernel: bool = False,
+             axes=None):
+    """One-call quorum-space Pareto frontier (``repro.frontier``).
+
+    ``systems`` is any mix of ``repro.frontier.families.Member``, quorum
+    systems, or raw ``QuorumMasks`` — smaller systems embed into the
+    largest cluster present (or an explicit ``n``).  ``workload`` supplies
+    the race geometry and delay model when it races; conflict-free /
+    omitted workloads score under the standard 2-way race at Δ=0.2 ms.
+    ``faults`` crashes the named acceptors for the whole run (every hop
+    touching them is lost) — note the crash budgets on the ft axes still
+    describe the *intact* systems.  Returns a ``FrontierResult``
+    (``.table()``, ``.to_dict()``, ``.frontier_labels``)."""
+    from repro.frontier import score as fscore
+    from repro.montecarlo.latency import CrashedDelay
+    from repro.montecarlo.scenarios import _crash_mask
+
+    systems = list(systems)          # may be a generator: consume once
+    wl = workload if workload is not None else Workload.race(
+        k=2, delta_ms=fscore.DEFAULT_DELTA_MS)
+    if n is None:
+        n = fscore._as_masks(systems, None)[2]
+    delay = wl.delay_for(n)
+    if len(tuple(faults)):
+        delay = CrashedDelay(delay, _crash_mask(n, faults))
+    racing = wl.k_proposers >= 2
+    return fscore.score_systems(
+        systems, n=n,
+        trials=trials if trials is not None else fscore.DEFAULT_TRIALS,
+        k_proposers=wl.k_proposers if racing else 2,
+        delta_ms=wl.delta_ms if racing else fscore.DEFAULT_DELTA_MS,
+        delay=delay,
+        chunk=chunk if chunk is not None else fscore.DEFAULT_CHUNK,
+        precision=(precision if precision is not None
+                   else streaming.DEFAULT_PRECISION),
+        shard=shard, seed=seed, use_kernel=use_kernel, axes=axes)

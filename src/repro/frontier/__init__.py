@@ -1,0 +1,26 @@
+"""Streamed quorum-space Pareto frontier (DESIGN.md §8).
+
+The paper's payoff (§5/§6) is a *space* of FFPaxos-valid quorum systems
+trading latency against fault tolerance.  This package walks that space
+end to end:
+
+  ``families``   enumerate FFP-valid systems per family — the full
+                 cardinality space (Eqs. 13/14) at any n, 3xC grids over
+                 factorizations of n, weighted voting — as labeled
+                 ``Member``s lowering into one shared mask batch
+  ``score``      stream the whole batch through ``fast_path_stream`` /
+                 ``race_stream`` (10^7 trials in fixed memory, common
+                 random numbers, one compile per path) and extract the
+                 frontier axes, p99.9 tail included
+  ``pareto``     the pure array-level dominance kernel: mixed min/max
+                 axes, epsilon ties matched to sketch precision, and the
+                 ``FrontierResult`` pytree with ``.table()``/``.to_dict()``
+
+Front doors: ``repro.api.frontier(...)`` and ``Experiment.frontier()``.
+"""
+from . import families, pareto, score  # noqa: F401
+from .families import (Member, all_families, cardinality_family,  # noqa: F401
+                       family, grid_family, weighted_family)
+from .pareto import (Axis, FrontierResult, dominates,  # noqa: F401
+                     maximal_mask, pareto_mask, quantize)
+from .score import default_axes, score_systems  # noqa: F401

@@ -31,7 +31,9 @@ axis over devices — 10^7+ trials on a laptop, tail percentiles included
 (DESIGN.md §7).
 
 The declarative front door over this engine (plus the model checker and
-the discrete-event simulator) is ``repro.api.Experiment``.
+the discrete-event simulator) is ``repro.api.Experiment``; the
+quorum-space Pareto frontier built on the streaming drivers is
+``repro.frontier`` (DESIGN.md §8).
 """
 from . import engine, latency, scenarios, streaming  # noqa: F401
 from .engine import (build_mask_table, classic_path,  # noqa: F401

@@ -237,12 +237,19 @@ def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
 # Cardinality specialization: k-th-order-statistic gathers.
 # ---------------------------------------------------------------------------
 
-def _decide(draws: Dict, q1: jax.Array, q2c: jax.Array,
+def _win_sorted(draws: Dict) -> jax.Array:
+    """(S, n) presorted 2b arrivals of each sample's winning value.  In the
+    cardinality path the winner (max vote count) is system-independent, so
+    this gather is computed once and shared across the whole spec table."""
+    return jnp.take_along_axis(
+        draws["sorted_val_arrive"], draws["winner"][:, None, None],
+        axis=1)[:, 0, :]
+
+
+def _decide(draws: Dict, win_sorted: jax.Array, q1: jax.Array, q2c: jax.Array,
             q2f: jax.Array) -> Dict[str, jax.Array]:
     """Apply one (traced) threshold triple to presorted draws: gathers only."""
     winner = draws["winner"]
-    win_sorted = jnp.take_along_axis(
-        draws["sorted_val_arrive"], winner[:, None, None], axis=1)[:, 0, :]
     t_fast = _kth(win_sorted, q2f)                                # (S,)
     # a fast commit needs q2f acceptor *votes* AND the learner actually
     # receiving the q2f-th 2b (lost 2bs leave t_fast at the sentinel);
@@ -374,8 +381,9 @@ def _race_outcomes(key: jax.Array, table: Dict[str, jax.Array],
     draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
                          samples=samples, use_kernel=use_kernel)
     if "q" in table:            # cardinality specialization: gathers only
-        return jax.vmap(lambda q: _decide(draws, q[0], q[1], q[2]))(
-            table["q"])
+        win_sorted = _win_sorted(draws)
+        return jax.vmap(lambda q: _decide(draws, win_sorted, q[0], q[1],
+                                          q[2]))(table["q"])
     winner, reached = _masked_vote_winner(draws["votes"], table,
                                           k_proposers, use_kernel)
     masks = {k: table[k] for k in MASK_KEYS}

@@ -6,7 +6,8 @@ order, presort layout) and the anchored numbers legitimately move:
     PYTHONPATH=src python tests/regen_anchors.py
 
 then paste the printed values into
-``tests/test_montecarlo.py::test_summarize_fixed_seed_regression_anchor``.
+``tests/test_montecarlo.py::test_summarize_fixed_seed_regression_anchor``
+and ``tests/test_frontier.py`` (``ANCHOR_MEMBERS`` / ``ANCHOR_ROW``).
 Anything that moves these numbers *without* an intentional sampling change
 is a silent behavioural regression — that is what the anchor exists to
 catch.
@@ -30,5 +31,25 @@ def montecarlo():
     print(f"latency_ms[0,1] = {float(out['latency_ms'][0, 1]):.7g}")
 
 
+def frontier():
+    """The n=11 frontier anchor: membership set + the paper-headline row.
+    Parameters mirror tests/test_frontier.py (ANCHOR_TRIALS/CHUNK/SEED);
+    shard=False keeps the numbers identical on 1 and 8 devices."""
+    from repro.frontier import cardinality_family, score_systems
+
+    r = score_systems(cardinality_family(11), trials=49_152, chunk=16_384,
+                      shard=False, seed=0)
+    print("ANCHOR_MEMBERS = [")
+    for lab in sorted(r.frontier_labels):
+        print(f"    {lab!r},")
+    print("]")
+    print("ANCHOR_ROW = {   # card[9,3,7]")
+    for k, v in r.row("card[9,3,7]").items():
+        if k != "on_frontier":
+            print(f"    {k!r}: {v!r},")
+    print("}")
+
+
 if __name__ == "__main__":
     montecarlo()
+    frontier()
