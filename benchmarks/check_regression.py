@@ -24,7 +24,12 @@ reported as warnings for a human to eyeball in the job log:
   metric present in baseline but missing     FAIL — a benchmark section
   from the current run                       silently disappeared
 
-Exit status 0 = clean (warnings allowed), 1 = regression.
+Improvements are reported too: any timing that got faster (or throughput
+that got higher) by more than the warning ratio shows up in a
+"faster by Nx" section, so deliberate speedups are visible in the same
+diff that would catch their regression later.
+
+Exit status 0 = clean (warnings and improvements allowed), 1 = regression.
 """
 from __future__ import annotations
 
@@ -53,10 +58,15 @@ def _is_count(name: str) -> bool:
     return "compile" in name or name.startswith("trace_counts.")
 
 
-def compare(current: Dict, baseline: Dict) -> Tuple[List[str], List[str]]:
-    """Returns (failures, warnings) as human-readable lines."""
+def compare(current: Dict, baseline: Dict
+            ) -> Tuple[List[str], List[str], List[str]]:
+    """Returns (failures, warnings, improvements) as human-readable
+    lines.  Improvements never affect the exit status; they exist so a
+    deliberate speedup is visible in the diff output (and nudges a
+    baseline refresh so the gain is locked in)."""
     fails: List[str] = []
     warns: List[str] = []
+    better: List[str] = []
 
     cur = dict(current.get("metrics", {}))
     base = dict(baseline.get("metrics", {}))
@@ -84,6 +94,9 @@ def compare(current: Dict, baseline: Dict) -> Tuple[List[str], List[str]]:
             elif b > 0 and c > RATIO_WARN * b:
                 warns.append(f"slower   {name}: {c:.6g} vs {b:.6g} "
                              f"({c / b:.2f}x)")
+            elif c > 0 and b > RATIO_WARN * c:
+                better.append(f"faster by {b / c:.2f}x  {name}: {c:.6g} "
+                              f"vs baseline {b:.6g}")
             continue
         if _is_throughput(name):
             if b > 0 and c < b / RATIO_FAIL:
@@ -92,6 +105,9 @@ def compare(current: Dict, baseline: Dict) -> Tuple[List[str], List[str]]:
             elif b > 0 and c < b / RATIO_WARN:
                 warns.append(f"slower   {name}: {c:.6g} vs {b:.6g} "
                              f"({c / b:.2f}x)")
+            elif b > 0 and c > RATIO_WARN * b:
+                better.append(f"faster by {c / b:.2f}x  {name}: {c:.6g} "
+                              f"vs baseline {b:.6g}")
             continue
         tol = REL_TOL * max(abs(b), ABS_FLOOR)
         if abs(c - b) > tol:
@@ -101,7 +117,7 @@ def compare(current: Dict, baseline: Dict) -> Tuple[List[str], List[str]]:
     for name in sorted(set(cur) - set(base)):
         warns.append(f"new      {name} = {cur[name]:.6g} (not in baseline; "
                      f"refresh BENCH_baseline.json to start tracking)")
-    return fails, warns
+    return fails, warns, better
 
 
 def main() -> int:
@@ -115,14 +131,19 @@ def main() -> int:
     with open(args.baseline) as fh:
         baseline = json.load(fh)
 
-    fails, warns = compare(current, baseline)
+    fails, warns, better = compare(current, baseline)
+    if better:
+        print("improvements:")
+        for line in better:
+            print(f"[fast] {line}")
     for line in warns:
         print(f"[warn] {line}")
     for line in fails:
         print(f"[FAIL] {line}")
     n_base = len(baseline.get("metrics", {}))
     print(f"check_regression: {n_base} baseline metrics, "
-          f"{len(warns)} warnings, {len(fails)} failures")
+          f"{len(warns)} warnings, {len(fails)} failures, "
+          f"{len(better)} improvements")
     return 1 if fails else 0
 
 

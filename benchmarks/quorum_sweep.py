@@ -30,6 +30,7 @@ Usage:  PYTHONPATH=src python -m benchmarks.quorum_sweep [--smoke]
 from __future__ import annotations
 
 import argparse
+import time
 from typing import List, Tuple
 
 import jax
@@ -118,15 +119,25 @@ def run(quick: bool = False, seed: int = 0):
 
     # -- the entire space in two streamed engine calls (one compile each) --
     t0 = dict(engine.TRACE_COUNTS)
+    wall0 = time.perf_counter()
     result = score_systems(members, trials=trials, chunk=CHUNK,
                            delta_ms=DELTA_MS, shard=True, seed=seed)
-    fast_traces = (engine.TRACE_COUNTS["fast_path_stream"]
-                   - t0["fast_path_stream"])
-    race_traces = engine.TRACE_COUNTS["race_stream"] - t0["race_stream"]
-    assert fast_traces <= 1 and race_traces <= 1, (
-        f"per-spec re-jit crept back in: {fast_traces} fast-path traces, "
-        f"{race_traces} race traces for {len(members)} specs")
-    rows.append(("sweep.engine_compiles", fast_traces + race_traces))
+    jax.block_until_ready(result.streams["race"].hist)
+    wall = time.perf_counter() - wall0
+    traced = {k: engine.TRACE_COUNTS[k] - t0[k] for k in t0}
+    # exactly one compile per stream path, and both on the sort-free
+    # lowering — a second trace (or a silent fall-back to the full-sort
+    # path) is a perf regression the trials/sec row would only show late
+    for k in ("fast_path_stream", "race_stream",
+              "fast_path_stream_sortfree", "race_stream_sortfree"):
+        assert traced[k] == 1, (
+            f"expected exactly one {k} trace for {len(members)} specs, got "
+            f"{traced[k]} (all deltas: { {a: b for a, b in traced.items() if b} })")
+    rows.append(("sweep.engine_compiles",
+                 traced["fast_path_stream"] + traced["race_stream"]))
+    # streamed throughput across both passes (fast + race trials / wall);
+    # _is_throughput in check_regression treats this as higher-is-better
+    rows.append(("sweep.trials_per_sec", 2.0 * trials / wall))
 
     mask = np.asarray(result.mask)
     rows.append(("sweep.n_frontier_systems", int(mask.sum())))

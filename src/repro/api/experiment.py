@@ -285,6 +285,11 @@ class Experiment:
     precision: float = streaming.DEFAULT_PRECISION
     chunk: int = streaming.DEFAULT_CHUNK
     shard: bool = True
+    # Sort-free streamed lowering (DESIGN.md §9): "auto" derives the
+    # per-phase top-k selection depths from the mask table, None keeps the
+    # full-sort reference path, an int / 3-tuple pins the depths.  Integer
+    # outputs (decide bits, counts, histograms) are identical either way.
+    k_max: object = "auto"
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "systems", tuple(self.systems))
@@ -372,7 +377,8 @@ class Experiment:
                         trials=trials if trials is not None else self.trials,
                         chunk=self.chunk, precision=self.precision,
                         shard=self.shard, seed=self.seed,
-                        use_kernel=self.use_kernel, axes=axes)
+                        use_kernel=self.use_kernel, k_max=self.k_max,
+                        axes=axes)
 
     def _fault_tolerance(self) -> Optional[Tuple[Dict[str, int], ...]]:
         if not self.compute_fault_tolerance or self.n > _FT_MAX_N:
@@ -390,7 +396,7 @@ class Experiment:
             state = scen.stream(key, self.lower(), self.trials,
                                 chunk=self.chunk, precision=self.precision,
                                 use_kernel=self.use_kernel,
-                                shard=self.shard)
+                                shard=self.shard, k_max=self.k_max)
             return Results(backend="montecarlo", labels=self.labels,
                            summary=state.summary(), stream=state,
                            fault_tolerance=self._fault_tolerance())
@@ -492,7 +498,7 @@ def frontier(systems: Sequence, workload: Optional[Workload] = None, *,
              trials: Optional[int] = None,
              chunk: Optional[int] = None, precision: Optional[float] = None,
              shard: bool = True, seed: int = 0, use_kernel: bool = False,
-             axes=None):
+             k_max="auto", axes=None):
     """One-call quorum-space Pareto frontier (``repro.frontier``).
 
     ``systems`` is any mix of ``repro.frontier.families.Member``, quorum
@@ -526,4 +532,5 @@ def frontier(systems: Sequence, workload: Optional[Workload] = None, *,
         chunk=chunk if chunk is not None else fscore.DEFAULT_CHUNK,
         precision=(precision if precision is not None
                    else streaming.DEFAULT_PRECISION),
-        shard=shard, seed=seed, use_kernel=use_kernel, axes=axes)
+        shard=shard, seed=seed, use_kernel=use_kernel, k_max=k_max,
+        axes=axes)

@@ -112,6 +112,7 @@ def score_systems(systems: Sequence, *,
                   precision: float = streaming.DEFAULT_PRECISION,
                   shard: bool = True,
                   use_kernel: bool = False,
+                  k_max="auto",
                   seed: int = 0,
                   axes: Optional[Sequence[Axis]] = None) -> FrontierResult:
     """Score a family batch and return its Pareto frontier.
@@ -123,6 +124,13 @@ def score_systems(systems: Sequence, *,
     one compile per engine path, fixed memory, trial axis sharded over
     local devices when ``shard`` — and the five default axes (or a custom
     ``axes`` tuple matching ``AXIS_NAMES``) feed ``pareto.pareto_mask``.
+
+    ``k_max`` selects the sort-free streamed lowering (DESIGN.md §9):
+    ``"auto"`` (default) derives the per-phase top-k selection depths from
+    the mask table, ``None`` keeps the full-sort reference path, and an
+    explicit int / 3-tuple pins the depths.  Integer outputs (decide bits,
+    counts, histograms — hence every frontier axis) are bit-identical
+    across all settings; only wall clock changes.
     """
     masks, native, n = _as_masks(systems, n)
     labels = tuple(m.label or f"system{i}" for i, m in enumerate(masks))
@@ -136,11 +144,13 @@ def score_systems(systems: Sequence, *,
 
     fast = streaming.fast_path_stream(k_fast, table, delay, n=n,
                                       trials=trials, chunk=chunk,
-                                      precision=precision, shard=shard)
+                                      precision=precision, shard=shard,
+                                      k_max=k_max)
     race = streaming.race_stream(k_race, table, offsets, delay, n=n,
                                  k_proposers=k_proposers, trials=trials,
                                  chunk=chunk, precision=precision,
-                                 use_kernel=use_kernel, shard=shard)
+                                 use_kernel=use_kernel, shard=shard,
+                                 k_max=k_max)
 
     fast_p50 = np.asarray(fast.quantile(0.5), np.float64)
     race_p999 = np.asarray(race.quantile(0.999), np.float64)

@@ -176,7 +176,7 @@ def masked_tally(votes: jax.Array, weights: jax.Array, thresholds: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Streaming fusion: masked tally + decide + block-local histogram.
+# Streaming fusion: selection network + masked tally + decide + histogram.
 # ---------------------------------------------------------------------------
 
 # Smaller trial blocks than the standalone tallies: the (BLOCK, bins_pad)
@@ -184,15 +184,56 @@ def masked_tally(votes: jax.Array, weights: jax.Array, thresholds: jax.Array,
 BLOCK_STREAM = 512
 
 
-def _stream_kernel(votes_ref, w_ref, t_ref, sat_ref, rec_ref, valid_ref,
-                   hist_ref, stats_ref, *, n_values: int, precision: float,
-                   bins: int, undecided_ms: float):
+def _select_sat(x, w, t, k: int, big):
+    """In-register k-step selection network: earliest masked saturation of
+    every quorum row, straight from *unsorted* arrivals.
+
+    ``x (BS, n_pad)`` raw arrival times (+inf on padding lanes, so real
+    entries — including LOST sentinels — are always extracted first),
+    ``w (G_pad, n_pad)`` row weights, ``t (1, G_pad)`` thresholds.
+
+    Each of the ``k`` static steps extracts the current minimum (ties to
+    the lowest lane, the stable-argsort order), accumulates the selected
+    acceptor's weight into every row via one MXU contraction, and records
+    the extraction instant for rows that just crossed their threshold.
+    After k >= the table's saturation depth (``engine.saturation_depths``)
+    every saturable row has crossed, so the result equals the full-sort
+    ``engine._sat_time`` — bit-identical when weights are integral (exact
+    f32 partial sums; the jnp path's cumsum is then the same sequence).
+    Unreached rows keep the ``big`` sentinel.  Returns the min over rows.
+    """
+    bs, n_pad = x.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bs, n_pad), 1)
+    csum = jnp.zeros((bs, w.shape[0]), jnp.float32)
+    sat = jnp.full((bs, w.shape[0]), big, jnp.float32)
+    done = jnp.zeros(csum.shape, jnp.bool_)
+    for _ in range(k):
+        cur = x.min(axis=-1, keepdims=True)              # (BS, 1)
+        first = jnp.where(x == cur, iota, n_pad).min(axis=-1, keepdims=True)
+        onehot = (iota == first).astype(jnp.float32)     # (BS, n_pad)
+        wsel = jax.lax.dot_general(onehot, w, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        csum = csum + wsel                               # (BS, G_pad)
+        newly = (csum >= t) & ~done
+        sat = jnp.where(newly, cur, sat)
+        done = done | newly
+        x = jnp.where(iota == first, jnp.inf, x)         # extract the lane
+    return sat.min(axis=-1)                              # (BS,)
+
+
+def _stream_kernel(votes_ref, val_ref, arr_ref, cls_ref, w1_ref, t1_ref,
+                   w2c_ref, t2c_ref, w2f_ref, t2f_ref, valid_ref,
+                   hist_ref, stats_ref, *, n_values: int, k_sat: tuple,
+                   precision: float, bins: int, undecided_ms: float):
     """One (system m, trial block s) grid step, everything VMEM-resident:
 
     * masked tally of the votes block against system m's fast-quorum rows
       (per-value MXU contraction, exactly ``_masked_tally_kernel``),
-    * decide: smallest satisfying value id -> winner; gather its fast
-      saturation instant; fall back to the recovery time otherwise,
+    * select the winning value's raw 2b arrival lane block and run the
+      ``k_sat``-deep selection networks (``_select_sat``) for the fast,
+      phase-1 and phase-2c saturation instants — the raw arrival block
+      never exists in sorted form anywhere,
+    * decide: winner's fast saturation, else detection + classic recovery,
     * classify fast / recovery / undecided (gated on the validity mask),
     * block-local DDSketch update: log-bucket index per decided trial, then
       a one-hot lane compare summed over the block,
@@ -204,28 +245,35 @@ def _stream_kernel(votes_ref, w_ref, t_ref, sat_ref, rec_ref, valid_ref,
     """
     from repro.montecarlo.streaming import bucket_index
     s = pl.program_id(1)
+    k1, k2c, k2f = k_sat
+    big = jnp.float32(2.0 * undecided_ms)
     votes = votes_ref[...]                               # (BS, n_pad) int32
-    w = w_ref[0]                                         # (G_pad, n_pad) f32
-    t = t_ref[0]                                         # (1, G_pad) f32
-    sat = sat_ref[0]                                     # (BS, K_pad) f32
-    rec = rec_ref[...][0]                                # (BS,) f32
+    w2f = w2f_ref[0]                                     # (G_pad, n_pad) f32
+    t2f = t2f_ref[0]                                     # (1, G_pad) f32
     valid = valid_ref[...][0] != 0                       # (BS,) bool
+    bs, n_pad = votes.shape
 
     # masked tally: smallest value id saturating any fast row (else V).
-    best = jnp.full((votes.shape[0], w.shape[0]), n_values, jnp.int32)
+    best = jnp.full((bs, w2f.shape[0]), n_values, jnp.int32)
     for v in range(n_values - 1, -1, -1):   # descending: lowest id wins
         hit = (votes == v).astype(jnp.float32)
-        wsum = jax.lax.dot_general(hit, w, (((1,), (1,)), ((), ())),
+        wsum = jax.lax.dot_general(hit, w2f, (((1,), (1,)), ((), ())),
                                    preferred_element_type=jnp.float32)
-        best = jnp.where(wsum >= t, v, best)             # (BS, G_pad)
+        best = jnp.where(wsum >= t2f, v, best)           # (BS, G_pad)
     best = best.min(axis=-1)                             # (BS,)
     reached = best < n_values
     widx = jnp.clip(best, 0, n_values - 1)
 
-    # decide: winner's fast saturation instant, else coordinated recovery.
-    t_fast = jnp.zeros_like(rec)
-    for k in range(n_values):                # static one-hot gather over K
-        t_fast = jnp.where(widx == k, sat[:, k], t_fast)
+    # winner's raw per-value 2b arrival lanes: static one-hot gather over K.
+    win_x = val_ref[:, 0:n_pad]
+    for k in range(1, n_values):
+        win_x = jnp.where((widx == k)[:, None],
+                          val_ref[:, k * n_pad:(k + 1) * n_pad], win_x)
+
+    t_fast = _select_sat(win_x, w2f, t2f, k2f, big)
+    t_det = _select_sat(arr_ref[...], w1_ref[0], t1_ref[0], k1, big)
+    t_cls = _select_sat(cls_ref[...], w2c_ref[0], t2c_ref[0], k2c, big)
+    rec = t_det + t_cls
     fast_ok = reached & (t_fast < undecided_ms)
     lat = jnp.where(fast_ok, t_fast, rec)
     und = lat >= undecided_ms
@@ -267,62 +315,104 @@ def _stream_kernel(votes_ref, w_ref, t_ref, sat_ref, rec_ref, valid_ref,
                                    prev + stat_blk)
 
 
-@functools.partial(jax.jit, static_argnames=("n_values", "precision", "bins",
-                                             "undecided_ms", "interpret"))
-def stream_tally_decide_hist(votes: jax.Array, w2f: jax.Array,
-                             t2f: jax.Array, val_sat: jax.Array,
-                             t_rec: jax.Array, valid: jax.Array, *,
-                             n_values: int, precision: float, bins: int,
+@functools.partial(jax.jit, static_argnames=("n_values", "k_sat", "precision",
+                                             "bins", "undecided_ms",
+                                             "interpret"))
+def stream_tally_decide_hist(votes: jax.Array, val_arr: jax.Array,
+                             arrive: jax.Array, classic: jax.Array,
+                             w1: jax.Array, t1: jax.Array,
+                             w2c: jax.Array, t2c: jax.Array,
+                             w2f: jax.Array, t2f: jax.Array,
+                             valid: jax.Array, *, n_values: int,
+                             k_sat: tuple, precision: float, bins: int,
                              undecided_ms: float, interpret: bool = True):
-    """Fused streaming chunk reduction; semantics of
+    """Fused sample→decide→sketch megakernel over a *raw* trial chunk.
+
+    Takes the unsorted draw block straight from ``engine._draw_race``:
+
+      votes   (S, n)    int32 per-acceptor 2b value ids (< 0: no vote)
+      val_arr (S, K, n) f32 per-value 2b arrival times (LOST where not cast)
+      arrive  (S, n)    f32 phase-1 arrival times
+      classic (S, n)    f32 phase-2 classic arrival times
+
+    plus the (M, G, n)/(M, G) mask tables for all three phases and the
+    static per-phase selection depths ``k_sat = (k1, k2c, k2f)`` from
+    ``engine.saturation_depths``.  Semantics of
     ``ref.stream_tally_decide_hist`` (same shapes, same bucketing).  Counts
-    and histograms are bit-identical to the oracle; the f32 latency sum
-    accumulates block-by-block so it matches to float tolerance only.
-    Trial counts per call must stay below 2^24 (exact f32 integers) — the
-    streaming driver calls once per chunk, far below that."""
+    and histograms are bit-identical to the oracle for integral weights;
+    the f32 latency sum accumulates block-by-block so it matches to float
+    tolerance only.  Trial counts per call must stay below 2^24 (exact f32
+    integers) — the streaming driver calls once per chunk, far below that.
+    """
     S, n = votes.shape
-    M, G, _ = w2f.shape
-    K = val_sat.shape[-1]
-    if val_sat.shape != (M, S, K) or t_rec.shape != (M, S) \
-            or t2f.shape != (M, G) or valid.shape != (S,):
+    M, G1, _ = w1.shape
+    G2c = w2c.shape[1]
+    G2f = w2f.shape[1]
+    K = val_arr.shape[1]
+    if val_arr.shape != (S, K, n) or arrive.shape != (S, n) \
+            or classic.shape != (S, n) or valid.shape != (S,) \
+            or w2c.shape[::2] != (M, n) or w2f.shape[::2] != (M, n) \
+            or t1.shape != (M, G1) or t2c.shape != (M, G2c) \
+            or t2f.shape != (M, G2f):
         raise ValueError(
-            f"inconsistent stream shapes: votes {votes.shape}, w2f "
-            f"{w2f.shape}, t2f {t2f.shape}, val_sat {val_sat.shape}, "
-            f"t_rec {t_rec.shape}, valid {valid.shape}")
+            f"inconsistent stream shapes: votes {votes.shape}, val_arr "
+            f"{val_arr.shape}, arrive {arrive.shape}, classic "
+            f"{classic.shape}, w1 {w1.shape}, w2c {w2c.shape}, w2f "
+            f"{w2f.shape}, valid {valid.shape}")
     if S >= 2 ** 24:
         raise ValueError(f"chunk of {S} trials overflows exact f32 counts; "
                          f"stream smaller chunks")
+    if len(k_sat) != 3 or not all(1 <= int(k) <= n for k in k_sat):
+        raise ValueError(f"k_sat {k_sat} out of range for n={n}")
     bs = BLOCK_STREAM
     n_pad = max(LANE, ((n + LANE - 1) // LANE) * LANE)
-    g_pad = max(LANE, ((G + LANE - 1) // LANE) * LANE)
-    k_pad = max(LANE, ((K + LANE - 1) // LANE) * LANE)
     b_pad = max(LANE, ((bins + LANE - 1) // LANE) * LANE)
     s_pad = ((S + bs - 1) // bs) * bs
-    big = jnp.float32(2.0 * undecided_ms)
+    inf = jnp.float32(jnp.inf)
+
+    def pad_masks(w, t):
+        G = w.shape[1]
+        g_pad = max(LANE, ((G + LANE - 1) // LANE) * LANE)
+        w_p = jnp.zeros((M, g_pad, n_pad), jnp.float32).at[:, :G, :n].set(
+            w.astype(jnp.float32))
+        t_p = jnp.full((M, 1, g_pad), jnp.float32(PAD_THRESHOLD)).at[
+            :, 0, :G].set(t.astype(jnp.float32))
+        return w_p, t_p, g_pad
+
+    def pad_arrivals(x):
+        # +inf on padding lanes/rows: never extracted before a real entry.
+        return jnp.full((s_pad, n_pad), inf).at[:S, :n].set(
+            x.astype(jnp.float32))
+
     votes_p = jnp.full((s_pad, n_pad), -1, jnp.int32).at[:S, :n].set(
         votes.astype(jnp.int32))
-    w_p = jnp.zeros((M, g_pad, n_pad), jnp.float32).at[:, :G, :n].set(
-        w2f.astype(jnp.float32))
-    t_p = jnp.full((M, 1, g_pad), jnp.float32(PAD_THRESHOLD)).at[
-        :, 0, :G].set(t2f.astype(jnp.float32))
-    sat_p = jnp.full((M, s_pad, k_pad), big).at[:, :S, :K].set(
-        val_sat.astype(jnp.float32))
-    rec_p = jnp.full((M, s_pad), big).at[:, :S].set(
-        t_rec.astype(jnp.float32))
+    val_p = jnp.full((s_pad, K, n_pad), inf).at[:S, :, :n].set(
+        val_arr.astype(jnp.float32)).reshape(s_pad, K * n_pad)
+    arr_p = pad_arrivals(arrive)
+    cls_p = pad_arrivals(classic)
+    w1_p, t1_p, g1_pad = pad_masks(w1, t1)
+    w2c_p, t2c_p, g2c_pad = pad_masks(w2c, t2c)
+    w2f_p, t2f_p, g2f_pad = pad_masks(w2f, t2f)
     valid_p = jnp.zeros((1, s_pad), jnp.int32).at[0, :S].set(
         valid.astype(jnp.int32))
 
     hist, stats = pl.pallas_call(
         functools.partial(_stream_kernel, n_values=n_values,
+                          k_sat=tuple(int(k) for k in k_sat),
                           precision=precision, bins=bins,
                           undecided_ms=undecided_ms),
         grid=(M, s_pad // bs),
         in_specs=[
             pl.BlockSpec((bs, n_pad), lambda m, s: (s, 0)),
-            pl.BlockSpec((1, g_pad, n_pad), lambda m, s: (m, 0, 0)),
-            pl.BlockSpec((1, 1, g_pad), lambda m, s: (m, 0, 0)),
-            pl.BlockSpec((1, bs, k_pad), lambda m, s: (m, s, 0)),
-            pl.BlockSpec((1, bs), lambda m, s: (m, s)),
+            pl.BlockSpec((bs, K * n_pad), lambda m, s: (s, 0)),
+            pl.BlockSpec((bs, n_pad), lambda m, s: (s, 0)),
+            pl.BlockSpec((bs, n_pad), lambda m, s: (s, 0)),
+            pl.BlockSpec((1, g1_pad, n_pad), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, 1, g1_pad), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, g2c_pad, n_pad), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, 1, g2c_pad), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, g2f_pad, n_pad), lambda m, s: (m, 0, 0)),
+            pl.BlockSpec((1, 1, g2f_pad), lambda m, s: (m, 0, 0)),
             pl.BlockSpec((1, bs), lambda m, s: (0, s)),
         ],
         out_specs=[
@@ -334,7 +424,8 @@ def stream_tally_decide_hist(votes: jax.Array, w2f: jax.Array,
             jax.ShapeDtypeStruct((M, LANE), jnp.float32),
         ],
         interpret=interpret,
-    )(votes_p, w_p, t_p, sat_p, rec_p, valid_p)
+    )(votes_p, val_p, arr_p, cls_p, w1_p, t1_p, w2c_p, t2c_p, w2f_p, t2f_p,
+      valid_p)
     return hist[:, :bins], {
         "n_fast": stats[:, 0].astype(jnp.int32),
         "n_recovery": stats[:, 1].astype(jnp.int32),

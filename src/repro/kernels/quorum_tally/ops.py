@@ -40,17 +40,23 @@ def masked_tally(votes: jax.Array, weights: jax.Array, thresholds: jax.Array,
                                interpret=not _on_tpu())
 
 
-def stream_tally_decide_hist(votes: jax.Array, w2f: jax.Array,
-                             t2f: jax.Array, val_sat: jax.Array,
-                             t_rec: jax.Array, valid: jax.Array, *,
-                             n_values: int, precision: float, bins: int,
+def stream_tally_decide_hist(votes: jax.Array, val_arr: jax.Array,
+                             arrive: jax.Array, classic: jax.Array,
+                             w1: jax.Array, t1: jax.Array,
+                             w2c: jax.Array, t2c: jax.Array,
+                             w2f: jax.Array, t2f: jax.Array,
+                             valid: jax.Array, *, n_values: int,
+                             k_sat: tuple, precision: float, bins: int,
                              undecided_ms: float):
-    """Block-resident streaming reduction of one trial chunk: masked tally
-    + decide + DDSketch histogram + count/sum/max in a single VMEM pass
-    (see ``ref.stream_tally_decide_hist`` for shapes/semantics).  Used by
+    """Block-resident streaming megakernel over one *raw* trial chunk:
+    masked tally + in-register top-k saturation selection + decide +
+    DDSketch histogram + count/sum/max in a single VMEM pass (see
+    ``ref.stream_tally_decide_hist`` for shapes/semantics).  No sorted
+    (chunk, n) array ever materializes.  Used by
     ``repro.montecarlo.streaming`` on the masked-race path when
     ``use_kernel``."""
     return kernel.stream_tally_decide_hist(
-        votes, w2f, t2f, val_sat, t_rec, valid, n_values=n_values,
+        votes, val_arr, arrive, classic, w1, t1, w2c, t2c, w2f, t2f, valid,
+        n_values=n_values, k_sat=tuple(int(k) for k in k_sat),
         precision=precision, bins=bins, undecided_ms=undecided_ms,
         interpret=not _on_tpu())

@@ -54,19 +54,50 @@ def masked_tally(votes: jnp.ndarray, weights: jnp.ndarray,
     return jnp.where(sat.any(axis=1), first, -1)
 
 
-def stream_tally_decide_hist(votes: jnp.ndarray, w2f: jnp.ndarray,
-                             t2f: jnp.ndarray, val_sat: jnp.ndarray,
-                             t_rec: jnp.ndarray, valid: jnp.ndarray, *,
-                             n_values: int, precision: float, bins: int,
-                             undecided_ms: float):
-    """Oracle for the fused streaming kernel: masked tally + decide +
-    block-local DDSketch histogram, reduced over one chunk of trials.
+def _prefix_sat(x: jnp.ndarray, w: jnp.ndarray, t: jnp.ndarray, k: int,
+                big) -> jnp.ndarray:
+    """Top-k-prefix masked saturation: min over quorum rows of the earliest
+    instant row g of every system crosses its threshold, from *unsorted*
+    arrivals.
 
-    votes       (S, n) int32 round-1 votes (< 0 = no vote)
-    w2f / t2f   (M, G, n) / (M, G) fast-phase quorum masks per system
-    val_sat     (M, S, K) f32 per-value fast-quorum 2b saturation instants
-    t_rec       (M, S) f32 coordinated-recovery commit times
+    x (S, n) f32 arrivals; w (M, G, n) f32 weights; t (M, G) thresholds.
+    Only the k smallest arrivals per trial are consulted — exact whenever
+    k >= ``engine.saturation_depths`` for this table.  Unreached rows get
+    the ``big`` sentinel.  Returns (M, S) f32.
+    """
+    k = min(int(k), x.shape[-1])
+    neg, idx = jax.lax.top_k(-x, k)                        # stable ties
+    srt = -neg                                             # (S, k) ascending
+    wp = jnp.take(w, idx, axis=2)                          # (M, G, S, k)
+    csum = jnp.cumsum(wp, axis=-1)
+    ok = csum >= t[:, :, None, None]                       # (M, G, S, k)
+    ii = jnp.argmax(ok, axis=-1)                           # first crossing
+    reached = ok[..., -1]
+    tt = jnp.take_along_axis(
+        jnp.broadcast_to(srt, ok.shape), ii[..., None], axis=-1)[..., 0]
+    return jnp.where(reached, tt, big).min(axis=1)         # (M, S)
+
+
+def stream_tally_decide_hist(votes: jnp.ndarray, val_arr: jnp.ndarray,
+                             arrive: jnp.ndarray, classic: jnp.ndarray,
+                             w1: jnp.ndarray, t1: jnp.ndarray,
+                             w2c: jnp.ndarray, t2c: jnp.ndarray,
+                             w2f: jnp.ndarray, t2f: jnp.ndarray,
+                             valid: jnp.ndarray, *, n_values: int,
+                             k_sat: tuple, precision: float, bins: int,
+                             undecided_ms: float):
+    """Oracle for the fused streaming megakernel: masked tally + top-k
+    saturation selection + decide + block-local DDSketch histogram, reduced
+    over one chunk of *raw* (unsorted) trials.
+
+    votes       (S, n)    int32 round-1 votes (< 0 = no vote)
+    val_arr     (S, K, n) f32 per-value 2b arrival times (LOST when not cast)
+    arrive      (S, n)    f32 phase-1 arrival times
+    classic     (S, n)    f32 phase-2 classic arrival times
+    w*/t*       (M, G, n) / (M, G) quorum masks per phase and system
     valid       (S,) bool trial-validity mask (False = padding trial)
+    k_sat       (k1, k2c, k2f) static per-phase selection depths
+                (``engine.saturation_depths``)
 
     Returns ``(hist, stats)``: hist (M, bins) int32 bucket counts over
     *decided* valid trials, stats a dict of per-system (M,) reductions —
@@ -77,14 +108,23 @@ def stream_tally_decide_hist(votes: jnp.ndarray, w2f: jnp.ndarray,
     """
     from repro.montecarlo.streaming import bucket_index
     M, G, n = w2f.shape
+    k1, k2c, k2f = k_sat
+    big = jnp.float32(2.0 * undecided_ms)
     per_q = masked_tally(votes, w2f.reshape(M * G, n), t2f.reshape(M * G),
                          n_values).reshape(-1, M, G)       # (S, M, G)
     nohit = jnp.int32(n_values)
     best = jnp.where(per_q < 0, nohit, per_q).min(axis=-1).T   # (M, S)
     reached = best < nohit
     widx = jnp.clip(best, 0, n_values - 1)
-    t_fast = jnp.take_along_axis(val_sat, widx[..., None],
-                                 axis=-1)[..., 0]          # (M, S)
+    # winner's raw per-value 2b arrival lanes, then its fast saturation.
+    win_x = jnp.take_along_axis(
+        jnp.broadcast_to(val_arr, (M,) + val_arr.shape),
+        widx[:, :, None, None], axis=2)[:, :, 0, :]        # (M, S, n)
+    t_fast = jax.vmap(
+        lambda x, wm, tm: _prefix_sat(x, wm[None], tm[None], k2f, big)[0]
+    )(win_x, w2f, t2f)                                     # (M, S)
+    t_rec = (_prefix_sat(arrive, w1, t1, k1, big)
+             + _prefix_sat(classic, w2c, t2c, k2c, big))   # (M, S)
     fast_ok = reached & (t_fast < undecided_ms)
     lat = jnp.where(fast_ok, t_fast, t_rec)
     und = lat >= undecided_ms

@@ -49,7 +49,7 @@ device memory use the chunked streaming drivers in
 from __future__ import annotations
 
 import functools
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,9 +68,18 @@ UNDECIDED_MS = LOST_MS / 2
 # a full table sweep costs exactly one trace (no per-system re-jit).  The
 # ``*_stream`` keys belong to the chunked drivers in ``streaming.py`` (one
 # trace per (table shape, chunking) — the scan reuses it for any trials).
+# The ``*_stream_sortfree`` keys count traces of the sort-free streamed
+# specializations (top-k prefixes + shared-column reduction, DESIGN.md §9)
+# and ``race_stream_fused`` traces of the raw-arrivals megakernel path; each
+# increments alongside its base ``*_stream`` key, so "sweep == one compile"
+# assertions can pin the exact lowering that ran.
 TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0,
                                 "race_stream": 0, "fast_path_stream": 0,
-                                "classic_path_stream": 0}
+                                "classic_path_stream": 0,
+                                "race_stream_sortfree": 0,
+                                "fast_path_stream_sortfree": 0,
+                                "classic_path_stream_sortfree": 0,
+                                "race_stream_fused": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +161,68 @@ def _check_mask_table(table, n: int) -> None:
             f"expected ({m_rows}, 3)")
 
 
+def saturation_depths(table: Dict[str, jax.Array]) -> Tuple[int, int, int]:
+    """Max prefix depths ``(k1, k2c, k2f)`` at which any quorum of the table
+    can saturate — the ``k_max`` of the sort-free lowering (DESIGN.md §9).
+
+    For a masked row with weights ``w`` and threshold ``t`` the adversarial
+    arrival order is ascending-by-weight, so the deepest position at which
+    the row can first saturate (over *every* possible arrival permutation)
+    is ``#{prefix sums of sorted(w) < t} + 1``.  Rows that cannot saturate
+    at all (total weight < t, e.g. group padding) are excluded: on any
+    prefix of that depth they still report "not reached", exactly as on the
+    full sort.  Cardinality tables reduce to the column maxima of ``q``.
+
+    Host-side and concrete (a table is concrete at stream entry); the
+    result is a static compile key for the prefix shapes.
+    """
+    import numpy as np
+    n = int(table["p1_w"].shape[-1])
+
+    def depth(w, t):
+        w = np.asarray(w, np.float64)
+        t = np.asarray(t, np.float64)
+        cs = np.cumsum(np.sort(w, axis=-1), axis=-1)
+        saturable = cs[..., -1] >= t
+        k_row = (cs < t[..., None]).sum(axis=-1) + 1
+        k_row = np.where(saturable, k_row, 0)
+        return int(k_row.max()) if k_row.size else 0
+
+    if "q" in table:
+        q = np.asarray(table["q"])
+        ks = (int(q[:, 0].max()), int(q[:, 1].max()), int(q[:, 2].max()))
+    else:
+        ks = (depth(table["p1_w"], table["p1_t"]),
+              depth(table["p2c_w"], table["p2c_t"]),
+              depth(table["p2f_w"], table["p2f_t"]))
+    return tuple(min(n, max(1, k)) for k in ks)
+
+
+def _topk_ascending(x: jax.Array, k: Optional[int]):
+    """Smallest-k ascending prefix of a stable sort over the last axis, plus
+    the matching permutation prefix.  ``k`` of None (or >= n) falls back to
+    the full argsort — that is the retained reference path, and keeps the
+    prefix path bit-identical to it by construction at k == n.
+
+    ``lax.top_k`` breaks ties toward the lower index, the same order as a
+    stable ascending argsort, so prefix values AND permutation entries match
+    the full sort element-for-element (including tied LOST sentinels)."""
+    n = x.shape[-1]
+    if k is None or k >= n:
+        perm = jnp.argsort(x, axis=-1).astype(jnp.int32)
+        return jnp.take_along_axis(x, perm, axis=-1), perm
+    neg, idx = jax.lax.top_k(-x, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def _sorted_prefix(x: jax.Array, k: Optional[int]) -> jax.Array:
+    """Values-only ``_topk_ascending`` (lets XLA skip the permutation when a
+    lowering consumes only order statistics)."""
+    if k is None or k >= x.shape[-1]:
+        return jnp.sort(x, axis=-1)
+    return -jax.lax.top_k(-x, k)[0]
+
+
 def _kth(sorted_x: jax.Array, k: jax.Array) -> jax.Array:
     """k-th order statistic (1-indexed, traced k) from a presorted last axis."""
     idx = jnp.clip(k - 1, 0, sorted_x.shape[-1] - 1).astype(jnp.int32)
@@ -178,9 +249,14 @@ def _counts_winner(votes: jax.Array, k_proposers: int, use_kernel: bool):
     return counts, winner, max_cnt
 
 
-def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
-                 k_proposers: int, samples: int, use_kernel: bool) -> Dict:
-    """Draw one race per sample and presort everything system-independent."""
+def _draw_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
+               k_proposers: int, samples: int) -> Dict:
+    """Raw race draws: RNG + vote structure only, nothing sorted.
+
+    The presorting lowerings (``_sample_race``) and the raw-arrivals
+    megakernel (``kernels/quorum_tally.stream_tally_decide_hist``) both
+    start from exactly these arrays, so the two streamed paths consume
+    identical sampled delays by construction."""
     K = k_proposers
     kp, kl, k2a, k2b = jax.random.split(key, 4)
 
@@ -198,9 +274,7 @@ def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
     arrive = jnp.where(voted, vote_time + d_ret, BIG)             # 2b @ learner
     arrive = jnp.where(arrive < UNDECIDED_MS, arrive, BIG)
 
-    counts, winner, max_cnt = _counts_winner(votes, K, use_kernel)
-
-    # per-value 2b arrival times, non-voters masked out, presorted over n.
+    # per-value 2b arrival times, non-voters masked out.
     val_arr = jnp.where(votes[:, None, :] == jnp.arange(K)[None, :, None],
                         arrive[:, None, :], BIG)                  # (S, K, n)
 
@@ -211,26 +285,50 @@ def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
     classic = d_2a + d_2b
     classic = jnp.where(classic < UNDECIDED_MS, classic, BIG)
 
-    # presort with explicit permutations: the cardinality specialization
-    # consumes only the sorted values, but the masked decide re-weights
-    # acceptors in arrival order, so argsort indices ride along (XLA
-    # dead-code-eliminates whichever outputs a lowering leaves unused).
-    val_perm = jnp.argsort(val_arr, axis=-1).astype(jnp.int32)
-    arr_perm = jnp.argsort(arrive, axis=-1).astype(jnp.int32)
-    cls_perm = jnp.argsort(classic, axis=-1).astype(jnp.int32)
+    return {"votes": votes, "arrive": arrive, "val_arr": val_arr,
+            "classic": classic}
 
-    return {
+
+def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
+                 k_proposers: int, samples: int, use_kernel: bool,
+                 k_sat: Optional[Tuple[int, int, int]] = None,
+                 need_perms: bool = True) -> Dict:
+    """Draw one race per sample and presort everything system-independent.
+
+    ``k_sat = (k1, k2c, k2f)`` (static, from ``saturation_depths``) switches
+    the three presorts to ``lax.top_k`` prefixes of those depths — every
+    downstream gather / saturation only ever reads within the prefix, so
+    results are bit-identical to the full sort (``None``, the reference
+    path).  ``need_perms=False`` drops the permutations for lowerings that
+    consume order statistics only (the cardinality specialization)."""
+    raw = _draw_race(key, offsets, delay, n=n, k_proposers=k_proposers,
+                     samples=samples)
+    counts, winner, max_cnt = _counts_winner(raw["votes"], k_proposers,
+                                             use_kernel)
+    k1, k2c, k2f = k_sat if k_sat is not None else (None, None, None)
+    out = {
         "counts": counts,                                # (S, K) int32
         "winner": winner,                                # (S,) int32
         "max_cnt": max_cnt,                              # (S,) int32
-        "votes": votes,                                  # (S, n) int32
-        "sorted_val_arrive": jnp.take_along_axis(val_arr, val_perm, axis=-1),
-        "perm_val_arrive": val_perm,                     # (S, K, n)
-        "sorted_arrive": jnp.take_along_axis(arrive, arr_perm, axis=-1),
-        "perm_arrive": arr_perm,                         # (S, n)
-        "sorted_classic": jnp.take_along_axis(classic, cls_perm, axis=-1),
-        "perm_classic": cls_perm,                        # (S, n)
+        "votes": raw["votes"],                           # (S, n) int32
     }
+    if need_perms:
+        # presort with explicit permutations: the cardinality specialization
+        # consumes only the sorted values, but the masked decide re-weights
+        # acceptors in arrival order, so argsort indices ride along (XLA
+        # dead-code-eliminates whichever outputs a lowering leaves unused).
+        sv, pv = _topk_ascending(raw["val_arr"], k2f)
+        sa, pa = _topk_ascending(raw["arrive"], k1)
+        sc, pc = _topk_ascending(raw["classic"], k2c)
+        out.update(perm_val_arrive=pv, perm_arrive=pa, perm_classic=pc)
+    else:
+        sv = _sorted_prefix(raw["val_arr"], k2f)
+        sa = _sorted_prefix(raw["arrive"], k1)
+        sc = _sorted_prefix(raw["classic"], k2c)
+    out.update(sorted_val_arrive=sv,      # (S, K, k2f)
+               sorted_arrive=sa,          # (S, k1)
+               sorted_classic=sc)         # (S, k2c)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -374,12 +472,18 @@ def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
 
 def _race_outcomes(key: jax.Array, table: Dict[str, jax.Array],
                    offsets: jax.Array, delay, *, n: int, k_proposers: int,
-                   samples: int, use_kernel: bool) -> Dict[str, jax.Array]:
-    """One full race evaluation: sample + presort once, decide per system."""
+                   samples: int, use_kernel: bool,
+                   k_sat: Optional[Tuple[int, int, int]] = None
+                   ) -> Dict[str, jax.Array]:
+    """One full race evaluation: sample + presort once, decide per system.
+    ``k_sat`` (static) presorts top-k prefixes instead of full sorts —
+    bit-identical when it upper-bounds the table's saturation depths
+    (``saturation_depths``); ``None`` keeps the full-sort reference path."""
     if delay is None:
         delay = default_delay()
     draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
-                         samples=samples, use_kernel=use_kernel)
+                         samples=samples, use_kernel=use_kernel, k_sat=k_sat,
+                         need_perms="q" not in table)
     if "q" in table:            # cardinality specialization: gathers only
         win_sorted = _win_sorted(draws)
         return jax.vmap(lambda q: _decide(draws, win_sorted, q[0], q[1],
@@ -444,15 +548,17 @@ def _fast_path_draws(key: jax.Array, delay, n: int,
 
 
 def _fast_path_outcomes(key: jax.Array, table: Dict[str, jax.Array], delay,
-                        *, n: int, samples: int) -> jax.Array:
+                        *, n: int, samples: int,
+                        k_sat: Optional[Tuple[int, int, int]] = None
+                        ) -> jax.Array:
     if delay is None:
         delay = default_delay()
+    k2f = k_sat[2] if k_sat is not None else None
     path = _fast_path_draws(key, delay, n, samples)
     if "q" in table:
-        srt = jnp.sort(path, axis=-1)
+        srt = _sorted_prefix(path, k2f)
         return jax.vmap(lambda q: _kth(srt, q[2]))(table["q"])
-    perm = jnp.argsort(path, axis=-1).astype(jnp.int32)
-    srt = jnp.take_along_axis(path, perm, axis=-1)
+    srt, perm = _topk_ascending(path, k2f)
     return jax.vmap(lambda m: _sat_time(srt, perm, m["p2f_w"], m["p2f_t"]))(
         {k: table[k] for k in MASK_KEYS})
 
@@ -474,21 +580,29 @@ def fast_path(key: jax.Array, table, delay=None, *, n: int,
     return _fast_path(key, table, delay, n=n, samples=samples)
 
 
-def _classic_path_outcomes(key: jax.Array, table: Dict[str, jax.Array],
-                           delay, *, n: int, samples: int) -> jax.Array:
-    if delay is None:
-        delay = default_delay()
+def _classic_path_draws(key: jax.Array, delay, n: int, samples: int):
+    """((S,) client->leader hop, (S, n) leader round-trip times); shared by
+    the materializing and streamed classic-path lowerings."""
     k0, k1, k2 = jax.random.split(key, 3)
     d0 = delay.sample_hops(k0, (samples,), lat_mod.CLIENT_TO_LEADER)
     d1 = delay.sample_hops(k1, (samples, n), lat_mod.FROM_COORDINATOR)
     d2 = delay.sample_hops(k2, (samples, n), lat_mod.TO_COORDINATOR)
     path = d1 + d2
-    path = jnp.where(path < UNDECIDED_MS, path, BIG)   # lost => never arrives
+    return d0, jnp.where(path < UNDECIDED_MS, path, BIG)  # lost => never
+
+
+def _classic_path_outcomes(key: jax.Array, table: Dict[str, jax.Array],
+                           delay, *, n: int, samples: int,
+                           k_sat: Optional[Tuple[int, int, int]] = None
+                           ) -> jax.Array:
+    if delay is None:
+        delay = default_delay()
+    k2c = k_sat[1] if k_sat is not None else None
+    d0, path = _classic_path_draws(key, delay, n, samples)
     if "q" in table:
-        srt = jnp.sort(path, axis=-1)
+        srt = _sorted_prefix(path, k2c)
         return jax.vmap(lambda q: d0 + _kth(srt, q[1]))(table["q"])
-    perm = jnp.argsort(path, axis=-1).astype(jnp.int32)
-    srt = jnp.take_along_axis(path, perm, axis=-1)
+    srt, perm = _topk_ascending(path, k2c)
     return jax.vmap(lambda m: d0 + _sat_time(srt, perm, m["p2c_w"],
                                              m["p2c_t"]))(
         {k: table[k] for k in MASK_KEYS})

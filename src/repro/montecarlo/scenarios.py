@@ -107,19 +107,23 @@ class Scenario:
 
     def stream(self, key: jax.Array, table, trials: int, *,
                chunk: Optional[int] = None, precision: Optional[float] = None,
-               use_kernel: bool = False, shard: bool = True):
+               use_kernel: bool = False, shard: bool = True, k_max="auto"):
         """Streamed evaluation: ``trials`` instances reduced chunk-by-chunk
         into a fixed-size ``streaming.StreamSummary`` (device memory is one
         chunk regardless of ``trials``; the trial axis shards over local
         devices when ``shard``).  A mixed workload streams its racing and
         conflict-free fractions separately and *merges* the two summaries —
         sketch merge is exact, so the blend matches a single mixed stream.
+
+        ``k_max`` selects the sort-free lowering (DESIGN.md §9): "auto"
+        derives per-phase top-k selection depths from the table, ``None``
+        keeps the full-sort reference path; integer outputs are identical.
         """
         from . import streaming
         chunk = streaming.DEFAULT_CHUNK if chunk is None else chunk
         precision = (streaming.DEFAULT_PRECISION if precision is None
                      else precision)
-        kw = dict(chunk=chunk, precision=precision, shard=shard)
+        kw = dict(chunk=chunk, precision=precision, shard=shard, k_max=k_max)
         if self.k_proposers == 1 or self.conflict_frac == 0.0:
             return streaming.fast_path_stream(key, table, self.delay,
                                               n=self.n, trials=trials, **kw)

@@ -281,56 +281,211 @@ def _lat_only_outcomes(lat: jax.Array, fast: bool) -> Dict[str, jax.Array]:
 
 
 def _chunk_outcomes(path: str, key, table, offsets, delay, *, n, k_proposers,
-                    chunk, use_kernel) -> Dict[str, jax.Array]:
+                    chunk, use_kernel, k_sat=None) -> Dict[str, jax.Array]:
     if path == "race":
         return engine._race_outcomes(key, table, offsets, delay, n=n,
                                      k_proposers=k_proposers, samples=chunk,
-                                     use_kernel=use_kernel)
+                                     use_kernel=use_kernel, k_sat=k_sat)
     if path == "fast_path":
         return _lat_only_outcomes(
             engine._fast_path_outcomes(key, table, delay, n=n,
-                                       samples=chunk), fast=True)
+                                       samples=chunk, k_sat=k_sat), fast=True)
     return _lat_only_outcomes(
         engine._classic_path_outcomes(key, table, delay, n=n,
-                                      samples=chunk), fast=False)
+                                      samples=chunk, k_sat=k_sat),
+        fast=False)
+
+
+# ---------------------------------------------------------------------------
+# Sort-free cardinality reductions (DESIGN.md §9): no (M, chunk) latency
+# matrix is ever materialized.  Cardinality systems share their random
+# structure — order statistics of one draw — so per-system chunk statistics
+# are gathers from small shared tables keyed by order-statistic column
+# (and, for the race, by the per-trial fast-saturation capacity).
+# ---------------------------------------------------------------------------
+
+def _card_layout(table) -> tuple:
+    """Host-side static pair structure of a concrete cardinality table: the
+    distinct (q1, q2c) recovery pairs (P, 2) and each system's pair id (M,).
+    Recovery latency depends on a system only through this pair, so P (not
+    M) recovery columns cover the whole table."""
+    import numpy as np
+    q = np.asarray(table["q"])
+    pairs, inv = np.unique(q[:, :2], axis=0, return_inverse=True)
+    return (jnp.asarray(pairs, jnp.int32),
+            jnp.asarray(inv.astype(np.int32)))
+
+
+def _dummy_layout() -> tuple:
+    """Placeholder pair layout for paths that never read it (masked tables /
+    reference path); keeps the ``_stream`` jit signature uniform."""
+    return (jnp.zeros((1, 2), jnp.int32), jnp.zeros((1,), jnp.int32))
+
+
+def _cols_card_update(state: StreamSummary, cols: jax.Array,
+                      col_of_m: jax.Array, valid: jax.Array, *,
+                      fast: bool) -> StreamSummary:
+    """Absorb a latency chunk whose per-system latency is one of ``Kc``
+    shared candidate columns: ``lat[m, c] = cols[c, col_of_m[m]]``.
+
+    One (Kc, bins) histogram scatter (Kc * chunk updates instead of
+    M * chunk) plus dense per-column sum/max reductions; every per-system
+    quantity is then a gather.  Counts, histogram and max are bit-identical
+    to ``state.update`` on the materialized (M, chunk) outcomes; the f32
+    latency sum reduces per column, so the running mean matches to float
+    tolerance only."""
+    B = state.bins
+    Kc = cols.shape[1]
+    und = cols >= UNDECIDED_MS
+    # decided trials land in their sketch bucket, undecided in slot B,
+    # padding trials in slot B + 1 (dropped).
+    bkey = jnp.where(und, B, bucket_index(cols, state.precision))
+    bkey = jnp.where(valid[:, None], bkey, B + 1)
+    flat = (jnp.arange(Kc, dtype=jnp.int32)[None, :] * (B + 2)
+            + bkey).ravel()
+    LH = jnp.zeros((Kc * (B + 2),), jnp.int32).at[flat].add(1)
+    LH = LH.reshape(Kc, B + 2)
+    rows = LH[col_of_m]                                  # (M, B + 2)
+    hist = rows[:, :B]
+    n_und = rows[:, B]
+    n_dec = hist.sum(axis=-1)
+    ok = valid[:, None] & ~und
+    col_sum = jnp.where(ok, cols, 0.0).sum(axis=0)       # (Kc,)
+    col_max = jnp.where(ok, cols, -jnp.inf).max(axis=0)  # (Kc,)
+    zero = jnp.zeros_like(n_dec)
+    n_valid = jnp.broadcast_to(valid.sum().astype(jnp.int32),
+                               col_of_m.shape)
+    return state._absorb(
+        n_trials=n_valid,
+        n_fast=n_dec if fast else zero,
+        n_recovery=zero if fast else n_dec,
+        n_undecided=n_und,
+        cnt=n_dec.astype(jnp.float32),
+        lat_sum=col_sum[col_of_m], lat_max=col_max[col_of_m], hist=hist)
+
+
+def _race_card_update(state: StreamSummary, key, table, layout, offsets,
+                      delay, valid, *, n, k_proposers, chunk, use_kernel,
+                      k_sat) -> StreamSummary:
+    """Sort-free streamed race chunk for cardinality tables.
+
+    The per-trial *fast capacity* ``fcap = min(max_cnt, #finite winner
+    2bs)`` collapses the fast-path decision: system m commits fast exactly
+    when ``fcap >= q2f_m`` (both need q2f votes AND the q2f-th winner 2b to
+    arrive, and the winner-2b prefix is ascending so the q2f-th is finite
+    iff at least q2f are).  Recovery latency depends on m only through its
+    (q1, q2c) pair.  So one chunk reduces into:
+
+      * FH (k2f, V, bins): winner-2b column histograms keyed by fcap slot —
+        suffix-cumsum over slots, then gather at (q2f-1, q2f) per system;
+      * RH (P, V, bins+1): recovery-pair histograms (undecided in the extra
+        bucket) keyed by fcap slot — prefix-cumsum, gather at (pair, q2f-1);
+      * matching per-slot sums (one-hot matmuls, no scatter) and maxima
+        (static loop over the <= n+1 slots).
+
+    Scatter volume drops from M * chunk to (k2f + P) * chunk updates; every
+    integer output (decide bits, histogram, counts, max) is bit-identical
+    to the materialized ``_decide`` + ``state.update`` path — only the f32
+    latency-sum reduction order differs.
+    """
+    k1, k2c, k2f = k_sat
+    draws = engine._sample_race(key, offsets, delay, n=n,
+                                k_proposers=k_proposers, samples=chunk,
+                                use_kernel=use_kernel, k_sat=k_sat,
+                                need_perms=False)
+    pairs, pair_of_m = layout                            # (P, 2), (M,)
+    P_ = pairs.shape[0]
+    q2f = table["q"][:, 2]                               # (M,) traced
+    B = state.bins
+    prec = state.precision
+    win = engine._win_sorted(draws)                      # (C, k2f) ascending
+    V = k2f + 1                                          # fcap slots 0..k2f
+
+    nfin = (win < UNDECIDED_MS).sum(axis=-1).astype(jnp.int32)
+    fcap = jnp.minimum(draws["max_cnt"], nfin)           # (C,) in [0, k2f]
+    vkey = jnp.where(valid, fcap, V)                     # V = padding slot
+
+    # ---- fast side: winner-2b prefix columns ------------------------------
+    bwin = bucket_index(win, prec)                       # (C, k2f)
+    fkey = (jnp.arange(k2f, dtype=jnp.int32)[None, :] * (V + 1)
+            + vkey[:, None]) * B + bwin
+    FH = jnp.zeros((k2f * (V + 1) * B,), jnp.int32).at[fkey.ravel()].add(1)
+    FH = FH.reshape(k2f, V + 1, B)[:, :V]                # drop padding slot
+    SFH = jnp.flip(jnp.cumsum(jnp.flip(FH, 1), axis=1), 1)   # suffix over v
+    hist_fast = SFH[q2f - 1, q2f]                        # (M, B)
+
+    oh = (vkey[:, None] == jnp.arange(V, dtype=jnp.int32)[None, :]
+          ).astype(jnp.float32)                          # (C, V) valid only
+    Fsum = jnp.einsum("cj,cv->jv", win, oh)              # (k2f, V)
+    SFsum = jnp.flip(jnp.cumsum(jnp.flip(Fsum, 1), axis=1), 1)
+    sum_fast = SFsum[q2f - 1, q2f]                       # (M,)
+
+    # per-slot column maxima: static loop over the <= n + 1 slots.
+    Fmax = jnp.stack([jnp.where((vkey == v)[:, None], win, -jnp.inf).max(0)
+                      for v in range(V)], axis=1)        # (k2f, V)
+    SFmax = jnp.flip(jax.lax.cummax(jnp.flip(Fmax, 1), axis=1), 1)
+    max_fast = SFmax[q2f - 1, q2f]                       # (M,)
+
+    cnt_v = jnp.zeros((V + 1,), jnp.int32).at[vkey].add(1)[:V]
+    scnt = jnp.flip(jnp.cumsum(jnp.flip(cnt_v, 0)), 0)   # suffix counts
+    n_fast = scnt[q2f]                                   # (M,)
+
+    # ---- recovery side: (q1, q2c) pair columns ----------------------------
+    t_rec = (jnp.take(draws["sorted_arrive"], pairs[:, 0] - 1, axis=1)
+             + jnp.take(draws["sorted_classic"], pairs[:, 1] - 1, axis=1))
+    dec = t_rec < UNDECIDED_MS                           # (C, P)
+    brec = jnp.where(dec, bucket_index(t_rec, prec), B)  # bucket B: undecided
+    rkey = (jnp.arange(P_, dtype=jnp.int32)[None, :] * (V + 1)
+            + vkey[:, None]) * (B + 1) + brec
+    RH = jnp.zeros((P_ * (V + 1) * (B + 1),),
+                   jnp.int32).at[rkey.ravel()].add(1)
+    RH = RH.reshape(P_, V + 1, B + 1)[:, :V]
+    CRH = jnp.cumsum(RH, axis=1)                         # prefix over v
+    rec_rows = CRH[pair_of_m, q2f - 1]                   # (M, B + 1)
+    hist_rec = rec_rows[:, :B]
+    n_und = rec_rows[:, B]
+    n_rec = hist_rec.sum(axis=-1)
+
+    Rsum = jnp.einsum("cp,cv->pv", jnp.where(dec, t_rec, 0.0), oh)
+    CRsum = jnp.cumsum(Rsum, axis=1)
+    sum_rec = CRsum[pair_of_m, q2f - 1]
+
+    Rmax = jnp.stack(
+        [jnp.where((vkey == v)[:, None] & dec, t_rec, -jnp.inf).max(0)
+         for v in range(V)], axis=1)                     # (P, V)
+    CRmax = jax.lax.cummax(Rmax, axis=1)
+    max_rec = CRmax[pair_of_m, q2f - 1]
+
+    n_valid = jnp.broadcast_to(valid.sum().astype(jnp.int32), q2f.shape)
+    return state._absorb(
+        n_trials=n_valid, n_fast=n_fast, n_recovery=n_rec,
+        n_undecided=n_und, cnt=(n_fast + n_rec).astype(jnp.float32),
+        lat_sum=sum_fast + sum_rec,
+        lat_max=jnp.maximum(max_fast, max_rec),
+        hist=hist_fast + hist_rec)
 
 
 def _race_fused_update(state: StreamSummary, key, table, offsets, delay,
-                       valid, *, n, k_proposers, chunk) -> StreamSummary:
-    """Masked-table race chunk through the fused block-resident kernel:
-    masked tally + decide + histogram never leave VMEM (DESIGN.md §3).
+                       valid, *, n, k_proposers, chunk,
+                       k_sat) -> StreamSummary:
+    """Masked-table race chunk through the fused megakernel: the *raw*
+    (unsorted) arrival block goes straight into the kernel, which runs the
+    k_max-step selection network in-registers, then masked tally + decide +
+    latency + one-hot histogram without leaving VMEM (DESIGN.md §3, §9).
 
-    The system-dependent saturation *times* still come from the presorted
-    jnp draws (they are sorts + prefix sums, which the engine already
-    shares across systems); the kernel fuses everything downstream of the
-    votes: quorum tally, winner/reached, fast-vs-recovery decision, bucket
-    histogram and the chunk's count/sum/max reductions.
-    """
-    draws = engine._sample_race(key, offsets, delay, n=n,
-                                k_proposers=k_proposers, samples=chunk,
-                                use_kernel=True)
-    masks = {k: table[k] for k in MASK_KEYS}
-
-    def times_one(m):
-        val_sat = jax.vmap(
-            lambda srt, perm: engine._sat_time(srt, perm, m["p2f_w"],
-                                               m["p2f_t"]),
-            in_axes=1, out_axes=1)(draws["sorted_val_arrive"],
-                                   draws["perm_val_arrive"])      # (C, K)
-        t_rec = engine._sat_time(draws["sorted_arrive"],
-                                 draws["perm_arrive"],
-                                 m["p1_w"], m["p1_t"]) \
-            + engine._sat_time(draws["sorted_classic"],
-                               draws["perm_classic"],
-                               m["p2c_w"], m["p2c_t"])            # (C,)
-        return val_sat, t_rec
-
-    val_sat, t_rec = jax.vmap(times_one)(masks)       # (M, C, K), (M, C)
+    No ``(chunk, n)`` sorted array is ever materialized on this path — the
+    engine contributes only the RNG draws and vote structure
+    (``_draw_race``); everything system-dependent happens inside the
+    kernel grid over (systems, trial blocks)."""
+    raw = engine._draw_race(key, offsets, delay, n=n,
+                            k_proposers=k_proposers, samples=chunk)
     from repro.kernels.quorum_tally import ops as qt_ops
     hist, stats = qt_ops.stream_tally_decide_hist(
-        draws["votes"], table["p2f_w"], table["p2f_t"], val_sat, t_rec,
-        valid, n_values=k_proposers, precision=state.precision,
-        bins=state.bins, undecided_ms=float(UNDECIDED_MS))
+        raw["votes"], raw["val_arr"], raw["arrive"], raw["classic"],
+        table["p1_w"], table["p1_t"], table["p2c_w"], table["p2c_t"],
+        table["p2f_w"], table["p2f_t"], valid, n_values=k_proposers,
+        k_sat=k_sat, precision=state.precision, bins=state.bins,
+        undecided_ms=float(UNDECIDED_MS))
     return state._absorb(
         n_trials=stats["n_fast"] + stats["n_recovery"] + stats["n_undecided"],
         n_fast=stats["n_fast"], n_recovery=stats["n_recovery"],
@@ -342,14 +497,21 @@ def _race_fused_update(state: StreamSummary, key, table, offsets, delay,
 @functools.partial(jax.jit,
                    static_argnames=("path", "n", "k_proposers", "chunk",
                                     "n_chunks", "precision", "use_kernel",
-                                    "mesh"))
-def _stream(key, table, offsets, delay, trials, *, path, n, k_proposers,
-            chunk, n_chunks, precision, use_kernel, mesh):
+                                    "mesh", "k_sat"))
+def _stream(key, table, layout, offsets, delay, trials, *, path, n,
+            k_proposers, chunk, n_chunks, precision, use_kernel, mesh,
+            k_sat):
     engine.TRACE_COUNTS[path + "_stream"] += 1
     m = table["p1_w"].shape[0]
-    fused = path == "race" and use_kernel and "q" not in table
+    fused = (path == "race" and use_kernel and "q" not in table
+             and k_sat is not None)
+    card = "q" in table and k_sat is not None
+    if fused:
+        engine.TRACE_COUNTS["race_stream_fused"] += 1
+    elif k_sat is not None:
+        engine.TRACE_COUNTS[path + "_stream_sortfree"] += 1
 
-    def device_stream(key, table, offsets, delay, trials):
+    def device_stream(key, table, layout, offsets, delay, trials):
         def body(state, i):
             k = jax.random.fold_in(key, i)
             valid = jnp.arange(chunk, dtype=jnp.int32) \
@@ -358,11 +520,28 @@ def _stream(key, table, offsets, delay, trials, *, path, n, k_proposers,
                 state = _race_fused_update(state, k, table, offsets, delay,
                                            valid, n=n,
                                            k_proposers=k_proposers,
-                                           chunk=chunk)
+                                           chunk=chunk, k_sat=k_sat)
+            elif card and path == "race":
+                state = _race_card_update(state, k, table, layout, offsets,
+                                          delay, valid, n=n,
+                                          k_proposers=k_proposers,
+                                          chunk=chunk,
+                                          use_kernel=use_kernel,
+                                          k_sat=k_sat)
+            elif card and path == "fast_path":
+                cols = engine._sorted_prefix(
+                    engine._fast_path_draws(k, delay, n, chunk), k_sat[2])
+                state = _cols_card_update(state, cols, table["q"][:, 2] - 1,
+                                          valid, fast=True)
+            elif card:                     # classic_path
+                d0, pathv = engine._classic_path_draws(k, delay, n, chunk)
+                cols = d0[:, None] + engine._sorted_prefix(pathv, k_sat[1])
+                state = _cols_card_update(state, cols, table["q"][:, 1] - 1,
+                                          valid, fast=False)
             else:
                 out = _chunk_outcomes(path, k, table, offsets, delay, n=n,
                                       k_proposers=k_proposers, chunk=chunk,
-                                      use_kernel=use_kernel)
+                                      use_kernel=use_kernel, k_sat=k_sat)
                 state = state.update(out, valid)
             return state, None
         state0 = StreamSummary.zeros(m, precision)
@@ -371,20 +550,20 @@ def _stream(key, table, offsets, delay, trials, *, path, n, k_proposers,
         return state
 
     if mesh is None:
-        return device_stream(key, table, offsets, delay, trials)
+        return device_stream(key, table, layout, offsets, delay, trials)
 
     ndev = mesh.shape[psharding.TRIAL_AXIS]
 
-    def per_device(key, table, offsets, delay, trials):
+    def per_device(key, table, layout, offsets, delay, trials):
         d = jax.lax.axis_index(psharding.TRIAL_AXIS)
         t_d = trials // ndev + jnp.where(d < trials % ndev, 1, 0)
         k_d = jax.random.fold_in(key, jnp.int32(0x5eed) + d)
-        return device_stream(k_d, table, offsets, delay,
+        return device_stream(k_d, table, layout, offsets, delay,
                              t_d).axis_merge(psharding.TRIAL_AXIS)
 
     return psharding.shard_map(
-        per_device, mesh=mesh, in_specs=(P(), P(), P(), P(), P()),
-        out_specs=P())(key, table, offsets, delay, trials)
+        per_device, mesh=mesh, in_specs=(P(), P(), P(), P(), P(), P()),
+        out_specs=P())(key, table, layout, offsets, delay, trials)
 
 
 def _resolve_mesh(shard):
@@ -395,8 +574,32 @@ def _resolve_mesh(shard):
     return shard                       # an explicit Mesh
 
 
+def _resolve_k_sat(table, k_max, n: int):
+    """Normalize the ``k_max`` knob to a static ``(k1, k2c, k2f)`` tuple
+    (or None = full-sort reference path).  ``"auto"`` derives the depths
+    from the concrete table (``engine.saturation_depths``); an int caps all
+    three phases; an explicit 3-tuple is clipped to [1, n]."""
+    if k_max is None:
+        return None
+    if k_max == "auto":
+        return engine.saturation_depths(table)
+    if isinstance(k_max, int):
+        k_max = (k_max, k_max, k_max)
+    ks = tuple(int(k) for k in k_max)
+    if len(ks) != 3:
+        raise ValueError(f"k_max must be None, 'auto', an int or a "
+                         f"(k1, k2c, k2f) triple, got {k_max!r}")
+    depths = engine.saturation_depths(table)
+    for req, need in zip(ks, depths):
+        if req < need:
+            raise ValueError(
+                f"k_max={ks} below the table's saturation depths {depths}; "
+                f"prefixes that short change results — use 'auto'")
+    return tuple(min(n, max(1, k)) for k in ks)
+
+
 def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
-                  trials, chunk, precision, use_kernel, shard
+                  trials, chunk, precision, use_kernel, shard, k_max="auto"
                   ) -> StreamSummary:
     engine._check_mask_table(table, n)
     if trials < 1:
@@ -421,6 +624,9 @@ def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
                 engine.classic_path(key, table, delay, n=n, samples=trials),
                 fast=False)
         return StreamSummary.from_outcomes(out, precision)
+    k_sat = _resolve_k_sat(table, k_max, n)
+    layout = (_card_layout(table) if "q" in table and k_sat is not None
+              else _dummy_layout())
     ndev = 1 if mesh is None else mesh.shape[psharding.TRIAL_AXIS]
     per_device = -(-trials // ndev)                # ceil: busiest device
     n_chunks = -(-per_device // chunk)
@@ -428,44 +634,56 @@ def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
         delay = default_delay()
     offsets = (jnp.zeros((1,), jnp.float32) if offsets is None
                else jnp.asarray(offsets, jnp.float32))
-    return _stream(key, table, offsets, delay, jnp.int32(trials), path=path,
-                   n=n, k_proposers=k_proposers, chunk=chunk,
+    return _stream(key, table, layout, offsets, delay, jnp.int32(trials),
+                   path=path, n=n, k_proposers=k_proposers, chunk=chunk,
                    n_chunks=n_chunks, precision=precision,
-                   use_kernel=use_kernel, mesh=mesh)
+                   use_kernel=use_kernel, mesh=mesh, k_sat=k_sat)
 
 
 def race_stream(key, table, offsets, delay=None, *, n: int, k_proposers: int,
                 trials: int, chunk: int = DEFAULT_CHUNK,
                 precision: float = DEFAULT_PRECISION,
-                use_kernel: bool = False, shard: bool = True
-                ) -> StreamSummary:
+                use_kernel: bool = False, shard: bool = True,
+                k_max="auto") -> StreamSummary:
     """``engine.race`` at any trial count in fixed memory: chunked
     ``lax.scan`` reduction into a ``StreamSummary``, trial axis sharded
     over local devices when ``shard`` (a bool or an explicit 1-D mesh).
-    One compile per (table shape, chunk count); ``trials`` is traced."""
+    One compile per (table shape, chunk count); ``trials`` is traced.
+
+    ``k_max`` (default ``"auto"``) selects the sort-free lowering
+    (DESIGN.md §9): top-k arrival prefixes at the table's saturation depths
+    plus, on cardinality tables, the shared-column chunk reduction — decide
+    bits, histograms, counts and maxima are bit-identical to ``k_max=None``
+    (the retained full-sort reference path); only the f32 mean accumulates
+    in a different order.  With ``use_kernel`` on masked tables the chunk
+    runs through the raw-arrivals megakernel instead (requires ``k_max``)."""
     return _stream_entry("race", key, table, delay, offsets, n=n,
                          k_proposers=k_proposers, trials=trials, chunk=chunk,
                          precision=precision, use_kernel=use_kernel,
-                         shard=shard)
+                         shard=shard, k_max=k_max)
 
 
 def fast_path_stream(key, table, delay=None, *, n: int, trials: int,
                      chunk: int = DEFAULT_CHUNK,
                      precision: float = DEFAULT_PRECISION,
-                     shard: bool = True) -> StreamSummary:
+                     shard: bool = True, k_max="auto") -> StreamSummary:
     """Streamed conflict-free fast path (k=1): decided instances count as
-    fast-path commits, lost ones as undecided."""
+    fast-path commits, lost ones as undecided.  ``k_max`` as in
+    ``race_stream``."""
     return _stream_entry("fast_path", key, table, delay, None, n=n,
                          k_proposers=1, trials=trials, chunk=chunk,
-                         precision=precision, use_kernel=False, shard=shard)
+                         precision=precision, use_kernel=False, shard=shard,
+                         k_max=k_max)
 
 
 def classic_path_stream(key, table, delay=None, *, n: int, trials: int,
                         chunk: int = DEFAULT_CHUNK,
                         precision: float = DEFAULT_PRECISION,
-                        shard: bool = True) -> StreamSummary:
+                        shard: bool = True, k_max="auto") -> StreamSummary:
     """Streamed leader-relayed classic path: decided instances count as
-    recoveries (there is no fast path to reach)."""
+    recoveries (there is no fast path to reach).  ``k_max`` as in
+    ``race_stream``."""
     return _stream_entry("classic_path", key, table, delay, None, n=n,
                          k_proposers=1, trials=trials, chunk=chunk,
-                         precision=precision, use_kernel=False, shard=shard)
+                         precision=precision, use_kernel=False, shard=shard,
+                         k_max=k_max)

@@ -1,7 +1,4 @@
-"""Regenerate the fixed-seed regression anchors used by the test suite.
-
-Run when the engine's *sampling* is changed on purpose (key splits, draw
-order, presort layout) and the anchored numbers legitimately move:
+"""Regenerate ALL fixed-seed regression anchors in one command.
 
     PYTHONPATH=src python tests/regen_anchors.py
 
@@ -11,6 +8,31 @@ and ``tests/test_frontier.py`` (``ANCHOR_MEMBERS`` / ``ANCHOR_ROW``).
 Anything that moves these numbers *without* an intentional sampling change
 is a silent behavioural regression — that is what the anchor exists to
 catch.
+
+Which anchors are layout-sensitive (and to what):
+
+* ``test_montecarlo`` fixed-seed anchor (``montecarlo()`` below) —
+  sensitive to the *draw layout*: PRNG key-split order and draw shapes in
+  ``engine._draw_race`` (``fold_in`` sequence, per-hop sample shapes).
+  NOT sensitive to how arrivals are subsequently sorted/selected: the
+  sort-free lowering (DESIGN.md §9 — ``lax.top_k`` prefixes, cardinality
+  column reductions, the fused megakernel) is bit-identical on decide
+  bits and order statistics, so it must NOT move this anchor.
+* ``test_frontier`` ``ANCHOR_MEMBERS`` / ``ANCHOR_ROW`` (``frontier()``
+  below) — additionally sensitive to the *streamed chunk layout*: chunk
+  size, per-chunk ``fold_in`` indices, device count when sharded
+  (shard=False here precisely so 1 and 8 devices agree), and the sketch
+  precision (frontier axes read quantiles + counts only, never the f32
+  latency-sum whose accumulation order the sort-free paths do change).
+  ``k_max`` settings must NOT move it either — the streamed sort-free
+  paths are integer-bit-identical (asserted in
+  ``tests/test_streaming.py::
+  test_sortfree_card_streams_bit_identical_to_full_sort``).
+
+Run when the draw or chunk layout changes on purpose (new key splits,
+different per-chunk folding, reshaped hop draws); do NOT regenerate to
+absorb a change that only claims to be a lowering — bit-identity is the
+contract, and a moved anchor means that contract broke.
 """
 import jax
 import jax.numpy as jnp

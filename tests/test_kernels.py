@@ -120,37 +120,51 @@ def test_masked_tally_lowest_value_wins_ties():
 
 
 # ---------------------------------------------------------------------------
-# fused streaming reduction (masked tally + decide + block histogram)
+# fused streaming megakernel (selection network + masked tally + decide +
+# block histogram) over a *raw* unsorted chunk
 # ---------------------------------------------------------------------------
 
 def _stream_inputs(seed: int, S: int, n: int, M: int, G: int, K: int):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
-    votes = jax.random.randint(ks[0], (S, n), -1, K)
-    w = jax.random.randint(ks[1], (M, G, n), 0, 3).astype(jnp.float32)
-    t = jax.random.randint(ks[2], (M, G), 1, n + 2).astype(jnp.float32)
-    # saturation / recovery instants: mostly small, some at the sentinel
+    """Raw draw block + three-phase mask tables with *integral* f32 weights
+    (the bit-identity contract of the selection network holds for integral
+    weights — f32 partial sums are then exact in any order).  Arrival times
+    are quantized to force ties, and ~10% of the 2b lanes sit at the LOST
+    sentinel (crashed / never cast)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 9)
     und = 5e8
-    sat = jnp.exp(jax.random.normal(ks[3], (M, S, K))) + 0.2
-    sat = jnp.where(jax.random.uniform(ks[4], sat.shape) < 0.1, 1e9, sat)
-    rec = jnp.exp(jax.random.normal(ks[5], (M, S))) + 0.5
-    rec = jnp.where(jax.random.uniform(ks[4], rec.shape) < 0.05, 1e9, rec)
+    votes = jax.random.randint(ks[0], (S, n), -1, K)
+    arrive = jnp.floor(jnp.exp(jax.random.normal(ks[1], (S, n))) * 8.0) / 4.0
+    classic = jnp.floor(jnp.exp(jax.random.normal(ks[2], (S, n))) * 8.0) / 4.0
+    val_arr = jnp.floor(
+        jnp.exp(jax.random.normal(ks[3], (S, K, n))) * 8.0) / 4.0 + 0.25
+    lost = (votes[:, None, :] != jnp.arange(K)[None, :, None]) \
+        | (jax.random.uniform(ks[4], (S, K, n)) < 0.1)
+    val_arr = jnp.where(lost, jnp.float32(1e9), val_arr)
+    masks = []
+    for i, kk in enumerate(jax.random.split(ks[5], 3)):
+        kw_, kt_ = jax.random.split(kk)
+        w = jax.random.randint(kw_, (M, G, n), 0, 3).astype(jnp.float32)
+        t = jax.random.randint(kt_, (M, G), 1, n + 2).astype(jnp.float32)
+        masks += [w, t]
     valid = (jnp.arange(S) < S - S // 7)      # trailing padding trials
-    return votes, w, t, sat, rec, valid, und
+    return (votes, val_arr, arrive, classic, *masks, valid), und
 
 
-@pytest.mark.parametrize("S,n,M,G,K", [(300, 11, 2, 3, 2), (1025, 9, 1, 6, 3),
-                                       (513, 7, 3, 1, 2)])
-def test_stream_tally_decide_hist_kernel_vs_ref(S, n, M, G, K):
-    """Fused streaming kernel vs jnp oracle: histogram and outcome counts
-    bit-identical, float reductions (sum/max) to tolerance (the kernel
-    accumulates block-by-block)."""
-    votes, w, t, sat, rec, valid, und = _stream_inputs(S * 13 + M, S, n, M,
-                                                       G, K)
-    kw = dict(n_values=K, precision=0.01, bins=_BINS, undecided_ms=und)
-    h_k, s_k = qt_ops.stream_tally_decide_hist(votes, w, t, sat, rec,
-                                               valid, **kw)
-    h_r, s_r = qt_ref.stream_tally_decide_hist(votes, w, t, sat, rec,
-                                               valid, **kw)
+@pytest.mark.parametrize("S,n,M,G,K,k_sat", [
+    (300, 11, 2, 3, 2, (4, 5, 6)),
+    (1025, 9, 1, 6, 3, (9, 9, 9)),        # k = n: selection IS a full sort
+    (513, 7, 3, 1, 2, (2, 3, 2)),
+    (700, 11, 4, 2, 2, (11, 1, 7)),       # mixed extreme depths
+])
+def test_stream_tally_decide_hist_kernel_vs_ref(S, n, M, G, K, k_sat):
+    """Fused streaming megakernel vs jnp oracle across (M, chunk, k_sat)
+    shapes: histogram and outcome counts bit-identical, float reductions
+    (sum/max) to tolerance (the kernel accumulates block-by-block)."""
+    args, und = _stream_inputs(S * 13 + M, S, n, M, G, K)
+    kw = dict(n_values=K, k_sat=k_sat, precision=0.01, bins=_BINS,
+              undecided_ms=und)
+    h_k, s_k = qt_ops.stream_tally_decide_hist(*args, **kw)
+    h_r, s_r = qt_ref.stream_tally_decide_hist(*args, **kw)
     np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
     for f in ("n_fast", "n_recovery", "n_undecided"):
         np.testing.assert_array_equal(np.asarray(s_k[f]), np.asarray(s_r[f]),
@@ -159,6 +173,7 @@ def test_stream_tally_decide_hist_kernel_vs_ref(S, n, M, G, K):
                        rtol=1e-5)
     assert np.allclose(np.asarray(s_k["max_ms"]), np.asarray(s_r["max_ms"]))
     # accounting: histogram mass == decided == valid - undecided
+    valid = args[-1]
     n_valid = int(np.asarray(valid).sum())
     per_sys = np.asarray(s_r["n_fast"]) + np.asarray(s_r["n_recovery"]) \
         + np.asarray(s_r["n_undecided"])
@@ -168,13 +183,37 @@ def test_stream_tally_decide_hist_kernel_vs_ref(S, n, M, G, K):
                                   + np.asarray(s_k["n_recovery"]))
 
 
+def test_stream_megakernel_depth_saturation_invariance():
+    """Once every phase depth covers the table's saturation depths
+    (``engine.saturation_depths``), the decide bits (and hence counts and
+    histogram) stop depending on k_sat — deeper selection only re-extracts
+    arrivals no quorum can still need."""
+    from repro.montecarlo.engine import saturation_depths
+    S, n, M, G, K = 400, 9, 2, 2, 2
+    args, und = _stream_inputs(11, S, n, M, G, K)
+    (w1, t1, w2c, t2c, w2f, t2f) = args[4:10]
+    depths = saturation_depths({"p1_w": w1, "p1_t": t1, "p2c_w": w2c,
+                                "p2c_t": t2c, "p2f_w": w2f, "p2f_t": t2f})
+    kw = dict(n_values=K, precision=0.01, bins=_BINS, undecided_ms=und)
+    h_a, s_a = qt_ref.stream_tally_decide_hist(*args, k_sat=depths, **kw)
+    h_b, s_b = qt_ref.stream_tally_decide_hist(*args, k_sat=(n, n, n), **kw)
+    np.testing.assert_array_equal(np.asarray(h_a), np.asarray(h_b))
+    for f in ("n_fast", "n_recovery", "n_undecided"):
+        np.testing.assert_array_equal(np.asarray(s_a[f]), np.asarray(s_b[f]))
+    # and the kernel at the derived depths matches too
+    h_k, s_k = qt_ops.stream_tally_decide_hist(*args, k_sat=depths, **kw)
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_a))
+    for f in ("n_fast", "n_recovery", "n_undecided"):
+        np.testing.assert_array_equal(np.asarray(s_k[f]), np.asarray(s_a[f]))
+
+
 def test_stream_tally_decide_hist_all_invalid_block():
     """A fully padded chunk contributes nothing — counts zero, histogram
     empty, max at the -inf identity."""
-    votes, w, t, sat, rec, _, und = _stream_inputs(3, 128, 5, 1, 2, 2)
-    valid = jnp.zeros((128,), bool)
+    args, und = _stream_inputs(3, 128, 5, 1, 2, 2)
+    args = args[:-1] + (jnp.zeros((128,), bool),)
     h, s = qt_ops.stream_tally_decide_hist(
-        votes, w, t, sat, rec, valid, n_values=2, precision=0.01, bins=_BINS,
+        *args, n_values=2, k_sat=(3, 3, 3), precision=0.01, bins=_BINS,
         undecided_ms=und)
     assert int(np.asarray(h).sum()) == 0
     assert int(np.asarray(s["n_fast"]).sum()) == 0

@@ -189,6 +189,80 @@ def test_stream_masked_tables_and_fused_kernel_agree():
     assert np.allclose(np.asarray(ref.max_ms), np.asarray(ker.max_ms))
 
 
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 16),
+       G=st.integers(1, 5))
+def test_topk_prefix_saturation_equals_full_sort(seed, n, G):
+    """Satellite: for any masked table, cutting the sort to the
+    ``saturation_depths`` prefix leaves ``_sat_time`` bit-identical to the
+    full sort — quantized delays force ties (the top-k tie-break must match
+    stable argsort order) and some arrivals sit at the crashed/lost ``inf``
+    sentinel."""
+    rng = np.random.default_rng(seed)
+    S = 64
+    w = rng.integers(0, 4, size=(G, n)).astype(np.float32)
+    # mix of saturable and unsaturable rows (threshold above total weight)
+    t = np.maximum(1.0, rng.integers(1, max(2, int(w.sum(-1).max()) + 3),
+                                     size=(G,))).astype(np.float32)
+    x = np.floor(rng.exponential(4.0, size=(S, n)) * 4.0) / 4.0   # ties
+    x[rng.random((S, n)) < 0.15] = float(engine.BIG)   # crashed / lost
+    xw, tw = jnp.asarray(w), jnp.asarray(t)
+    xj = jnp.asarray(x, jnp.float32)
+
+    tbl = {"p1_w": xw[None], "p1_t": tw[None], "p2c_w": xw[None],
+           "p2c_t": tw[None], "p2f_w": xw[None], "p2f_t": tw[None]}
+    k = engine.saturation_depths(tbl)[0]
+    srt_full, perm_full = engine._topk_ascending(xj, None)
+    srt_k, perm_k = engine._topk_ascending(xj, k)
+    full = engine._sat_time(srt_full, perm_full, xw, tw)
+    pref = engine._sat_time(srt_k, perm_k, xw, tw)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(pref))
+    # top-k prefix itself matches the stable full sort element-for-element
+    np.testing.assert_array_equal(np.asarray(srt_full[:, :k]),
+                                  np.asarray(srt_k))
+    np.testing.assert_array_equal(np.asarray(perm_full[:, :k]),
+                                  np.asarray(perm_k))
+
+
+def test_sortfree_card_streams_bit_identical_to_full_sort():
+    """Acceptance gate: on a cardinality batch, the sort-free streamed
+    lowering (k_max="auto" — shared-column order-statistic reductions, no
+    per-system sorted gathers) produces bit-identical integer state and
+    histogram vs the retained full-sort reference path (k_max=None) on all
+    three drivers."""
+    table = build_mask_table([FFP, FP, QuorumSpec.majority_fast(11)])
+    assert "q" in table
+    kw = dict(n=11, trials=20_000, chunk=4_096, shard=False)
+    fields = ("n_trials", "n_fast", "n_recovery", "n_undecided", "hist")
+    for name, call in (
+        ("race", lambda km: streaming.race_stream(
+            KEY, table, OFFS, n=11, k_proposers=2, trials=20_000,
+            chunk=4_096, shard=False, k_max=km)),
+        ("fast", lambda km: streaming.fast_path_stream(KEY, table,
+                                                       k_max=km, **kw)),
+        ("classic", lambda km: streaming.classic_path_stream(KEY, table,
+                                                             k_max=km, **kw)),
+    ):
+        ref, new = call(None), call("auto")
+        for f in fields:
+            np.testing.assert_array_equal(np.asarray(getattr(new, f)),
+                                          np.asarray(getattr(ref, f)),
+                                          f"{name}.{f}")
+        np.testing.assert_array_equal(np.asarray(new.max_ms),
+                                      np.asarray(ref.max_ms), name)
+        assert np.allclose(np.asarray(new.mean_ms), np.asarray(ref.mean_ms),
+                           rtol=1e-5, equal_nan=True)
+
+
+def test_k_max_below_saturation_depth_rejected():
+    """An explicit k_max below the table's saturation depths would silently
+    change semantics — the driver must refuse it."""
+    table = build_mask_table([FFP, FP])
+    with pytest.raises(ValueError, match="saturation depths"):
+        streaming.fast_path_stream(KEY, table, n=11, trials=20_000,
+                                   chunk=4_096, shard=False, k_max=(1, 1, 1))
+
+
 def test_stream_single_compile_per_table_shape():
     """TRACE_COUNTS invariant: one compile per (table shape, chunk count) —
     different trial counts with the same chunking, different keys, and
