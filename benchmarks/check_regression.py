@@ -23,6 +23,12 @@ reported as warnings for a human to eyeball in the job log:
                                              near-zero rates don't trip)
   metric present in baseline but missing     FAIL — a benchmark section
   from the current run                       silently disappeared
+  ``stream.multihost*`` missing either way   WARN only — the multi-process
+                                             section needs working gloo
+                                             collectives (and exists only
+                                             from PR 7 on), so runners
+                                             without it must not fail the
+                                             gate
 
 Improvements are reported too: any timing that got faster (or throughput
 that got higher) by more than the warning ratio shows up in a
@@ -43,6 +49,11 @@ ABS_FLOOR = 0.05
 RATIO_FAIL = 10.0
 RATIO_WARN = 1.3
 REL_TOL = 0.30
+# Metric prefixes that may legitimately be absent from one side of the
+# diff: the multihost section self-skips on platforms without
+# multi-process CPU collectives, and pre-PR-7 baselines don't record it
+# at all.  Missing -> warn, never fail.
+OPTIONAL_PREFIXES = ("stream.multihost",)
 
 
 def _is_timing(name: str) -> bool:
@@ -78,8 +89,12 @@ def compare(current: Dict, baseline: Dict
 
     for name, b in sorted(base.items()):
         if name not in cur:
-            fails.append(f"MISSING  {name} (baseline {b:.6g}) — section "
-                         f"dropped or renamed without a baseline refresh")
+            if name.startswith(OPTIONAL_PREFIXES):
+                warns.append(f"missing  {name} (baseline {b:.6g}) — "
+                             f"optional section skipped on this runner")
+            else:
+                fails.append(f"MISSING  {name} (baseline {b:.6g}) — section "
+                             f"dropped or renamed without a baseline refresh")
             continue
         c = cur[name]
         if _is_count(name):

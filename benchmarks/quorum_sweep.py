@@ -30,10 +30,20 @@ Usage:  PYTHONPATH=src python -m benchmarks.quorum_sweep [--smoke]
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from typing import List, Tuple
 
 import jax
+
+# Join a multi-process grid BEFORE anything touches the jax backend: the
+# repro imports below create module-level arrays (engine.BIG), and both
+# the gloo CPU-collectives selection and jax.distributed.initialize only
+# take effect pre-backend.  No-op without the REPRO_* launch env.
+if os.environ.get("REPRO_COORDINATOR"):
+    from repro.parallel import distributed as _distributed
+    _distributed.initialize()
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -102,7 +112,7 @@ def minimal_frontier(specs: List[QuorumSpec]) -> List[QuorumSpec]:
     return keep
 
 
-def run(quick: bool = False, seed: int = 0):
+def run(quick: bool = False, seed: int = 0, shard=True):
     trials = TRIALS_SMOKE if quick else TRIALS
     legacy_samples = 5_000 if quick else LEGACY_SAMPLES
 
@@ -121,7 +131,7 @@ def run(quick: bool = False, seed: int = 0):
     t0 = dict(engine.TRACE_COUNTS)
     wall0 = time.perf_counter()
     result = score_systems(members, trials=trials, chunk=CHUNK,
-                           delta_ms=DELTA_MS, shard=True, seed=seed)
+                           delta_ms=DELTA_MS, shard=shard, seed=seed)
     jax.block_until_ready(result.streams["race"].hist)
     wall = time.perf_counter() - wall0
     traced = {k: engine.TRACE_COUNTS[k] - t0[k] for k in t0}
@@ -183,10 +193,11 @@ def run(quick: bool = False, seed: int = 0):
     return rows
 
 
-def main(quick: bool = False):
-    rows = run(quick)
-    for name, val in rows:
-        print(f"{name},{val:.6g}")
+def main(quick: bool = False, shard=True):
+    rows = run(quick, shard=shard)
+    if jax.process_index() == 0:        # one copy of the CSV per grid
+        for name, val in rows:
+            print(f"{name},{val:.6g}")
     return rows
 
 
@@ -195,5 +206,19 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="10^6 streamed trials instead of 10^7; asserts "
                          "and frontier membership only")
+    ap.add_argument("--shard", action="store_true",
+                    help="join the multi-process grid configured via "
+                         "REPRO_COORDINATOR/REPRO_NUM_PROCESSES/"
+                         "REPRO_PROCESS_ID (repro.parallel.distributed; "
+                         "no-op env -> this process's devices) and sweep "
+                         "on an explicit global trial mesh — honored even "
+                         "with a single device")
     args = ap.parse_args()
-    main(quick=args.smoke)
+    if args.shard:
+        # Grid membership was established at import (see top of module);
+        # the explicit mesh pins the sweep to ALL global devices and is
+        # honored even when only one is visible.
+        from repro.parallel import sharding
+        main(quick=args.smoke, shard=sharding.trial_mesh())
+    else:
+        main(quick=args.smoke)

@@ -13,6 +13,11 @@ Sections:
                           call, traced thresholds (DESIGN.md §2)
   stream.*                streaming engine: trials/sec at fixed memory,
                           10^7-trial acceptance row (DESIGN.md §7)
+  stream.multihost.*      multi-host trial mesh: 2 procs x 4 forced host
+                          devices vs 1 proc x 8 on the same global key —
+                          bit-identity of the merged summary + throughput
+                          (DESIGN.md §10; skipped where the platform has
+                          no multi-process CPU collectives)
   frontier.*              mixed-family (grid + weighted + cardinality)
                           Pareto frontier on n=12 through the streamed
                           dominance scorer (DESIGN.md §8)
@@ -183,6 +188,46 @@ def streaming_benches(quick: bool):
     return rows
 
 
+def multihost_benches(quick: bool):
+    """Multi-host trial mesh acceptance as a benchmark row (DESIGN.md §10):
+    launch the fixed stream workload on 2 processes x 4 forced host devices
+    and on 1 process x 8, same global key, and record (a) bit-identity of
+    the merged decide counts/histogram across layouts and (b) the
+    distributed layout's throughput.  Skipped (no rows, a printed note)
+    where the platform lacks multi-process CPU collectives —
+    ``check_regression`` tolerates the missing ``stream.multihost``
+    section."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.parallel import distributed
+
+    trials = 50_011 if quick else 200_003      # odd: exercises remainders
+    rows = []
+    try:
+        with tempfile.TemporaryDirectory() as td:
+            multi = distributed.run_stream_layout(
+                2, 4, os.path.join(td, "p2x4.npz"), trials=trials)
+            single = distributed.run_stream_layout(
+                1, 8, os.path.join(td, "p1x8.npz"), trials=trials)
+    except (NotImplementedError, RuntimeError) as e:
+        print(f"# stream.multihost skipped: {type(e).__name__}: "
+              f"{str(e).splitlines()[0]}")
+        return []
+    bit = all(np.array_equal(multi[k], single[k])
+              for k in ("n_trials", "n_fast", "n_recovery", "n_undecided",
+                        "hist"))
+    rows.append(("stream.multihost.bit_identical", 1.0 if bit else 0.0))
+    rows.append((f"stream.multihost.trials_per_s[{trials}.2x4]",
+                 trials / float(multi["wall_s"])))
+    # per-system vectors (headline, fast_paxos); report the headline system
+    rows.append(("stream.multihost.p999_ms", float(multi["p999_ms"][0])))
+    rows.append(("stream.multihost.p9999_ms", float(multi["p9999_ms"][0])))
+    assert bit, "2x4 vs 1x8 merged StreamSummary diverged (layout variance)"
+    return rows
+
+
 def frontier_benches(quick: bool):
     """Mixed-family Pareto frontier (DESIGN.md §8) on an n=12 cluster:
     grid systems over the 3x4 factorization (plus narrower embeds),
@@ -276,6 +321,7 @@ def _sections(args):
            ("fig2c", fig2c, True), ("sweep", sweep, True),
            ("qsys", qsys, True), ("mc", montecarlo_benches, False),
            ("stream", streaming_benches, False),
+           ("multihost", multihost_benches, False),
            ("frontier", frontier_benches, False)]
     if not args.skip_kernels:
         out.append(("kernels", kernel_benches, False))
@@ -289,7 +335,8 @@ def main() -> None:
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
-                         "qsys,mc,stream,frontier,kernels,roofline")
+                         "qsys,mc,stream,multihost,frontier,kernels,"
+                         "roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable benchmark record "
                          "(metrics + per-section wall time + compile "

@@ -263,13 +263,17 @@ class Experiment:
     ``trials`` switches the montecarlo backend to the streaming engine
     (``repro.montecarlo.streaming``): trials are drawn, decided and
     reduced chunk-by-chunk into a fixed-size quantile sketch, sharded over
-    local devices — 10^7+ trials in one-chunk memory, with ``Results``
-    exposing the same normalized summary keys (plus ``p999_ms``, which
-    only streaming trial counts make meaningful) and ``Results.raw`` None.
-    ``precision`` is the sketch's guaranteed relative quantile error;
-    ``chunk`` the per-step trial block; ``shard`` toggles the trial-axis
-    ``shard_map``.  When ``trials`` is None the materializing path runs
-    unchanged on ``samples``.
+    the global device grid — 10^7+ trials in one-chunk memory, with
+    ``Results`` exposing the same normalized summary keys (plus
+    ``p999_ms``/``p9999_ms``, which only streaming trial counts make
+    meaningful) and ``Results.raw`` None.  ``precision`` is the sketch's
+    guaranteed relative quantile error; ``chunk`` the per-step trial
+    block; ``shard`` toggles the trial-axis ``shard_map`` — ``True`` uses
+    all visible devices (every process's, once
+    ``repro.parallel.distributed.initialize()`` has joined a multi-host
+    grid), or pass an explicit 1-D ``jax.sharding.Mesh`` to pin the
+    layout (honored even with a single device).  When ``trials`` is None
+    the materializing path runs unchanged on ``samples``.
     """
 
     systems: Tuple
@@ -458,7 +462,7 @@ class Experiment:
         return {
             "mean_ms": sum(lats) / len(lats) if lats else float("nan"),
             "p50_ms": q(0.50), "p95_ms": q(0.95), "p99_ms": q(0.99),
-            "p999_ms": q(0.999),
+            "p999_ms": q(0.999), "p9999_ms": q(0.9999),
             "max_ms": lats[-1] if lats else float("nan"),
             "fast_rate": fast / m, "recovery_rate": rec / m,
             "undecided_rate": (m - fast - rec) / m,

@@ -645,13 +645,15 @@ def summarize(out, axis: int = -1) -> Dict[str, jax.Array]:
         }
     else:
         lat, extra = out, {}
-    q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99, 0.999]), axis=axis)
+    q = jnp.nanquantile(lat, jnp.array([0.5, 0.95, 0.99, 0.999, 0.9999]),
+                        axis=axis)
     return {
         "mean_ms": jnp.nanmean(lat, axis=axis),
         "p50_ms": q[0],
         "p95_ms": q[1],
         "p99_ms": q[2],
         "p999_ms": q[3],
+        "p9999_ms": q[4],
         "max_ms": jnp.nanmax(lat, axis=axis),
         **extra,
     }

@@ -13,19 +13,29 @@ the same per-chunk computation into a **reduction** (DESIGN.md §7):
                   log-bucket histogram with a guaranteed relative error
                   (``precision``); bucket counts are integers, so sketch
                   merge is exact, associative and commutative.
-  shard_map       the trial axis shards over local devices
-                  (``parallel.sharding.trial_mesh``); the cross-device
-                  reduction is the summary merge (psum counts/histograms,
-                  pmax maxima, count-weighted mean combine).
+  shard_map       the trial axis shards over the *global* device grid
+                  (``parallel.sharding.trial_mesh`` over ``jax.devices()``
+                  — all devices of all processes when ``jax.distributed``
+                  is initialized, see ``parallel.distributed``); the
+                  cross-device reduction is the summary merge (psum
+                  counts/histograms, pmax maxima, count-weighted mean
+                  combine), which is already a valid cross-host reduction.
 
 ``race_stream`` / ``fast_path_stream`` / ``classic_path_stream`` mirror the
 materializing entry points;  ``trials <= chunk`` on a single device falls
 back to the materializing path itself (same compile, bit-identical draws)
 and reduces its output — the old behaviour survives as the small-T special
-case.  Chunk c of a multi-chunk stream draws from ``fold_in(key, c)`` (and
-device d of a sharded stream from ``fold_in(key, 0x5eed + d)``), so a
-streamed run is reproducible for a given (trials, chunk, device count) but
-is a different — equally valid — sample than the materializing path.
+case.  Chunk c of a multi-chunk stream draws from ``fold_in(key, c)``;
+global device d of a sharded stream re-keys through a second fold-in level,
+``fold_in(fold_in(key, DEVICE_FOLD_DOMAIN), d)``, so device key streams can
+never collide with chunk keys of a long unsharded stream (chunk indices and
+device indices live in *disjoint* fold-in domains — DESIGN.md §10).  A
+streamed run is therefore reproducible for a given (trials, chunk, global
+device count) — and layout-invariant across process grids of the same
+global device count: per-device trial counts and keys depend only on the
+global index ``process_index * local_count + local_index``, and the merge
+is integer-exact, so 2 processes x 4 devices ≡ 1 process x 8 devices
+bit-for-bit on counts and histograms.
 
 Everything is one jit per (table shape, chunking): ``trials`` and the table
 contents are traced, so scaling a sweep from 10^5 to 10^7 trials or
@@ -36,6 +46,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from dataclasses import dataclass, replace
 from typing import Dict, Optional
 
@@ -51,6 +62,16 @@ from .latency import default_delay
 
 DEFAULT_CHUNK = 65536
 DEFAULT_PRECISION = 0.01
+
+# Second-level fold-in tag separating the per-device key domain from the
+# per-chunk one.  Chunk c draws from fold_in(key, c) with c in [0, n_chunks);
+# device d draws from fold_in(fold_in(key, DEVICE_FOLD_DOMAIN), d).  The
+# old single-level scheme fold_in(key, 0x5eed + d) collided with chunk
+# index 0x5eed + d of a long unsharded stream (0x5eed = 24301 < 2^20 —
+# well inside real chunk counts); the extra fold-in level makes the two
+# domains disjoint for ANY chunk/device index (regression-tested to
+# n_chunks = 2^20 in tests/test_streaming.py).
+DEVICE_FOLD_DOMAIN = 0x7FFFFFFF
 
 # Sketch coverage: 10 us .. ~3 hours.  Latencies outside clamp to the edge
 # buckets — quantile estimates stay order-correct but the relative-error
@@ -252,14 +273,14 @@ class StreamSummary:
 
     def summary(self) -> Dict[str, jax.Array]:
         """The normalized summary dict (`engine.summarize` keys, plus the
-        p99.9 that streaming trial counts make meaningful)."""
+        p99.9/p99.99 that streaming trial counts make meaningful)."""
         n = jnp.maximum(self.n_trials, 1).astype(jnp.float32)
         has = self.n_decided > 0
-        qs = self.quantile(jnp.array([0.5, 0.95, 0.99, 0.999]))
+        qs = self.quantile(jnp.array([0.5, 0.95, 0.99, 0.999, 0.9999]))
         return {
             "mean_ms": jnp.where(has, self.mean_ms, jnp.nan),
             "p50_ms": qs[0], "p95_ms": qs[1], "p99_ms": qs[2],
-            "p999_ms": qs[3],
+            "p999_ms": qs[3], "p9999_ms": qs[4],
             "max_ms": jnp.where(has, self.max_ms, jnp.nan),
             "fast_rate": self.n_fast / n,
             "recovery_rate": self.n_recovery / n,
@@ -555,11 +576,28 @@ def _stream(key, table, layout, offsets, delay, trials, *, path, n,
     ndev = mesh.shape[psharding.TRIAL_AXIS]
 
     def per_device(key, table, layout, offsets, delay, trials):
+        # All per-device quantities derive from the GLOBAL device index
+        # (process_index * local_count + local_index on a multi-host grid),
+        # so any process layout of the same global device count runs the
+        # same per-device programs and the integer-exact axis_merge makes
+        # the merged summary layout-invariant bit-for-bit.
         d = jax.lax.axis_index(psharding.TRIAL_AXIS)
         t_d = trials // ndev + jnp.where(d < trials % ndev, 1, 0)
-        k_d = jax.random.fold_in(key, jnp.int32(0x5eed) + d)
-        return device_stream(k_d, table, layout, offsets, delay,
-                             t_d).axis_merge(psharding.TRIAL_AXIS)
+        # Second fold-in level = device key domain disjoint from chunk keys.
+        k_d = jax.random.fold_in(
+            jax.random.fold_in(key, jnp.int32(DEVICE_FOLD_DOMAIN)), d)
+        # trials < ndev leaves trailing devices with t_d == 0: they would
+        # still scan n_chunks all-invalid chunks.  Short-circuit them to
+        # the zeros identity (exact under merge: counts/hist 0, max -inf)
+        # — XLA runs only the taken cond branch, so empty devices launch
+        # no per-chunk kernels.  The collective merge stays OUTSIDE the
+        # cond: every device must participate in the psum/pmax.
+        state = jax.lax.cond(
+            t_d > 0,
+            lambda: device_stream(key=k_d, table=table, layout=layout,
+                                  offsets=offsets, delay=delay, trials=t_d),
+            lambda: StreamSummary.zeros(m, precision))
+        return state.axis_merge(psharding.TRIAL_AXIS)
 
     return psharding.shard_map(
         per_device, mesh=mesh, in_specs=(P(), P(), P(), P(), P(), P()),
@@ -567,11 +605,27 @@ def _stream(key, table, layout, offsets, delay, trials, *, path, n,
 
 
 def _resolve_mesh(shard):
+    """``shard=True`` -> the global trial mesh (falls back to unsharded on
+    a single device, with a ``UserWarning`` so multi-process launch scripts
+    that forgot ``distributed.initialize()`` / forced host devices fail
+    loudly rather than quietly degrading); an explicit ``Mesh`` is honored
+    as-is, 1-device included (the layout was chosen deliberately — e.g. a
+    worker that must stay on the collective code path)."""
     if shard is False or shard is None:
         return None
     if shard is True:
-        return psharding.trial_mesh() if len(jax.devices()) > 1 else None
-    return shard                       # an explicit Mesh
+        ndev = len(jax.devices())
+        if ndev > 1:
+            return psharding.trial_mesh()
+        warnings.warn(
+            f"shard=True but only {ndev} device is visible - running "
+            f"unsharded. For a multi-process grid call "
+            f"repro.parallel.distributed.initialize() before any jax use; "
+            f"for local device parallelism set "
+            f"--xla_force_host_platform_device_count in XLA_FLAGS; pass "
+            f"shard=False to silence.", UserWarning, stacklevel=4)
+        return None
+    return shard                       # an explicit Mesh (any device count)
 
 
 def _resolve_k_sat(table, k_max, n: int):

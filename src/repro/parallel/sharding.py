@@ -53,10 +53,17 @@ TRIAL_AXIS = "trials"
 
 
 def trial_mesh(devices: Optional[Sequence] = None) -> Mesh:
-    """1-D mesh over all local devices for trial-axis sharding.  The
-    Monte-Carlo trial dimension is embarrassingly parallel, so the only
-    collective the streaming engine needs is the cross-device summary
-    merge (psum/pmax over ``TRIAL_AXIS``)."""
+    """1-D mesh over all *global* devices for trial-axis sharding.
+
+    ``jax.devices()`` enumerates every process's devices (process-major:
+    global index = process_index * local_count + local_index) once
+    ``repro.parallel.distributed.initialize()`` has joined a multi-host
+    grid — a single-process run sees only its own, so the same mesh
+    construction covers both.  The Monte-Carlo trial dimension is
+    embarrassingly parallel, so the only collective the streaming engine
+    needs is the cross-device summary merge (psum/pmax over
+    ``TRIAL_AXIS``), which is integer-exact and therefore also the
+    cross-host reduction (DESIGN.md §10)."""
     devices = jax.devices() if devices is None else list(devices)
     return Mesh(np.array(devices), (TRIAL_AXIS,))
 

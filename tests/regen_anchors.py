@@ -24,6 +24,14 @@ Which anchors are layout-sensitive (and to what):
   (shard=False here precisely so 1 and 8 devices agree), and the sketch
   precision (frontier axes read quantiles + counts only, never the f32
   latency-sum whose accumulation order the sort-free paths do change).
+  The PR 7 device-key derivation change (``fold_in(key, 0x5eed+d)`` →
+  the two-level ``fold_in(fold_in(key, DEVICE_FOLD_DOMAIN), d)``,
+  DESIGN.md §10) moved NO anchors: both anchors run shard=False, and
+  only *sharded* streams draw from the device key domain.  Sharded
+  results keyed by the global device index are layout-invariant across
+  process grids (2x4 == 1x8) but DO differ from the pre-PR-7 sharded
+  numbers — any future sharded anchor must be regenerated if the
+  device-domain derivation changes again.
   ``k_max`` settings must NOT move it either — the streamed sort-free
   paths are integer-bit-identical (asserted in
   ``tests/test_streaming.py::

@@ -1,0 +1,104 @@
+"""Multi-host trial mesh acceptance (``repro.parallel.distributed``,
+DESIGN.md §10).
+
+The contract under test: the merged ``StreamSummary`` of a streamed run
+depends only on the *global* key and the *global* device count — never on
+how those devices are laid out across processes.  A 2-process x 4-device
+local grid (forced host devices + gloo CPU collectives) must therefore be
+bit-identical in decide counts and sketch histogram to the 1-process x
+8-device run, and its quantiles (computed from that identical histogram)
+within the sketch's guaranteed relative error of any other layout's.
+
+Tests here launch real subprocesses (each pays a fresh jax import +
+compile), so they are deliberately few and small; platforms whose jax/CPU
+backend cannot do multi-process collectives skip instead of failing.
+
+The 10^9-trial fixed-memory criterion is env-gated (hours of wall time on
+a small CPU):  REPRO_GIGATRIAL=1 PYTHONPATH=src python -m pytest
+tests/test_multihost.py -k gigatrial
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.parallel import distributed
+
+pytestmark = pytest.mark.slow
+
+TRIALS = 50_011                           # odd: exercises remainder splits
+CHUNK = 2_048
+
+
+def _layout(procs, dev_per_proc, path):
+    try:
+        return distributed.run_stream_layout(procs, dev_per_proc, path,
+                                             trials=TRIALS, chunk=CHUNK)
+    except NotImplementedError as e:      # no gloo multi-process collectives
+        pytest.skip(f"platform lacks multi-process CPU collectives: "
+                    f"{str(e).splitlines()[0]}")
+
+
+def test_two_by_four_bit_identical_to_one_by_eight():
+    with tempfile.TemporaryDirectory() as td:
+        multi = _layout(2, 4, os.path.join(td, "p2x4.npz"))
+        single = _layout(1, 8, os.path.join(td, "p1x8.npz"))
+
+    assert int(multi["process_count"]) == 2
+    assert int(multi["global_devices"]) == 8
+    assert int(single["process_count"]) == 1
+    assert int(single["global_devices"]) == 8
+
+    # integer state: bit-identical across layouts (exact psum merge over
+    # global-index-derived per-device streams)
+    for k in ("n_trials", "n_fast", "n_recovery", "n_undecided", "hist"):
+        np.testing.assert_array_equal(multi[k], single[k], err_msg=k)
+    assert (multi["n_trials"] == TRIALS).all()
+    assert (multi["n_fast"] + multi["n_recovery"]
+            + multi["n_undecided"] == TRIALS).all()
+
+    # float state: max is a pmax of identical per-device values (equal);
+    # quantiles come from the identical hist, so they agree to within the
+    # sketch's relative-error guarantee (trivially: exactly)
+    np.testing.assert_array_equal(multi["max_ms"], single["max_ms"])
+    for q in ("p50_ms", "p999_ms", "p9999_ms"):
+        np.testing.assert_allclose(multi[q], single[q], rtol=0.01,
+                                   err_msg=q)
+        assert np.isfinite(multi[q]).all(), q
+
+
+def test_single_process_forced_devices_layout_runs():
+    """The degenerate 1-process 'grid' works through the same launcher
+    path (coordinator env set, gloo selected, 2 forced devices) — the
+    shape every multihost CI job debugs with first."""
+    with tempfile.TemporaryDirectory() as td:
+        out = _layout(1, 2, os.path.join(td, "p1x2.npz"))
+    assert int(out["global_devices"]) == 2
+    assert (out["n_trials"] == TRIALS).all()
+    assert np.isfinite(out["p9999_ms"]).all()
+
+
+@pytest.mark.skipif(os.environ.get("REPRO_GIGATRIAL") != "1",
+                    reason="10^9-trial run takes CPU-hours; set "
+                           "REPRO_GIGATRIAL=1 to enable")
+def test_gigatrial_race_stream_fixed_memory_p9999():
+    """ISSUE 7 acceptance: a 10^9-trial ``race_stream`` completes in fixed
+    memory with the p99.99 tail populated.  Runs in-process on whatever
+    devices are visible (shard=True picks them up; a 1-device host warns
+    and streams unsharded — same fixed-size state either way)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.quorum import QuorumSpec
+    from repro.montecarlo import build_mask_table, streaming
+
+    table = build_mask_table([QuorumSpec.paper_headline(11)])
+    offsets = jnp.array([0.0, 0.2], jnp.float32)
+    state = streaming.race_stream(jax.random.PRNGKey(0), table, offsets,
+                                  n=11, k_proposers=2, trials=1_000_000_000,
+                                  chunk=262_144)
+    assert int(state.n_trials[0]) == 1_000_000_000
+    s = state.summary()
+    assert np.isfinite(float(s["p9999_ms"][0]))
+    assert float(s["p9999_ms"][0]) >= float(s["p999_ms"][0]) > 0

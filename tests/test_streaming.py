@@ -374,3 +374,159 @@ def test_experiment_ten_million_trials_fixed_memory():
         got, ref = float(r.summary[q][0]), float(exact[q][0])
         # sketch precision + cross-sample Monte-Carlo noise at 200k
         assert abs(got - ref) / ref < exp.precision + 0.02, (q, got, ref)
+
+
+# ---------------------------------------------------------------------------
+# RNG fold-in domains: device keys must never collide with chunk keys
+# ---------------------------------------------------------------------------
+
+def test_device_and_chunk_fold_in_domains_disjoint():
+    """Regression (ISSUE 7 satellite): the sharded per-device keys used to
+    be ``fold_in(key, 0x5eed + d)`` — the same fold-in space as the
+    unsharded per-chunk keys ``fold_in(key, c)``, so chunk 0x5eed + d of a
+    long stream replayed device d's draws.  The two-level derivation
+    ``fold_in(fold_in(key, DEVICE_FOLD_DOMAIN), d)`` must be disjoint from
+    every chunk key for n_chunks up to 2^20."""
+    key = jax.random.PRNGKey(0)
+    n_chunks, n_dev = 1 << 20, 4_096
+    chunk_keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
+        jnp.arange(n_chunks, dtype=jnp.int32))
+    dev_base = jax.random.fold_in(
+        key, jnp.int32(streaming.DEVICE_FOLD_DOMAIN))
+    dev_keys = jax.vmap(lambda d: jax.random.fold_in(dev_base, d))(
+        jnp.arange(n_dev, dtype=jnp.int32))
+
+    def pack(ks):                         # (N, 2) uint32 -> (N,) uint64
+        a = np.asarray(ks).astype(np.uint64)
+        return (a[:, 0] << np.uint64(32)) | a[:, 1]
+
+    assert np.intersect1d(pack(chunk_keys), pack(dev_keys)).size == 0
+    # and the OLD single-level scheme demonstrably collided: device 0's
+    # key WAS chunk key 0x5eed
+    old_dev0 = jax.random.fold_in(key, jnp.int32(0x5eed) + jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(old_dev0),
+                                  np.asarray(chunk_keys[0x5eed]))
+
+
+# ---------------------------------------------------------------------------
+# mesh resolution: loud single-device fallback, explicit meshes honored
+# ---------------------------------------------------------------------------
+
+def test_resolve_mesh_single_device_warns_or_shards():
+    import warnings as _warnings
+    with _warnings.catch_warnings(record=True) as w:
+        _warnings.simplefilter("always")
+        mesh = streaming._resolve_mesh(True)
+    if len(jax.devices()) == 1:
+        assert mesh is None
+        assert any("only 1 device" in str(x.message) for x in w), \
+            [str(x.message) for x in w]
+    else:
+        assert mesh is not None
+        assert not w, [str(x.message) for x in w]
+    # shard=False / None stay silent and unsharded
+    with _warnings.catch_warnings(record=True) as w:
+        _warnings.simplefilter("always")
+        assert streaming._resolve_mesh(False) is None
+        assert streaming._resolve_mesh(None) is None
+    assert not w
+
+
+def test_explicit_single_device_mesh_honored():
+    """A deliberately-passed 1-device Mesh must run the sharded (collective)
+    code path, not silently degrade to unsharded — multi-process workers
+    depend on every process entering the same psum."""
+    from repro.parallel import sharding as psharding
+    mesh = psharding.trial_mesh(jax.devices()[:1])
+    assert streaming._resolve_mesh(mesh) is mesh
+    table = build_mask_table([FFP, FP])
+    st_ = streaming.race_stream(KEY, table, OFFS, n=11, k_proposers=2,
+                                trials=10_007, chunk=2_048, shard=mesh)
+    assert [int(x) for x in st_.n_trials] == [10_007, 10_007]
+    un = streaming.race_stream(KEY, table, OFFS, n=11, k_proposers=2,
+                               trials=10_007, chunk=2_048, shard=False)
+    # different (device-domain) key stream, same distribution
+    for i in range(2):
+        assert abs(float(st_.quantile(0.5)[i]) - float(un.quantile(0.5)[i])) \
+            / float(un.quantile(0.5)[i]) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# trials < ndev: empty devices contribute the exact zeros identity
+# ---------------------------------------------------------------------------
+
+def test_zero_summary_is_exact_merge_identity():
+    """zeros() must be the identity of the merge algebra — counts/hist
+    unchanged, max_ms not poisoned by the -inf init, mean not NaN — because
+    on a wide mesh with trials < ndev the trailing devices contribute
+    exactly this state to the cross-device psum/pmax."""
+    table = build_mask_table([FFP, FP])
+    st_ = streaming.race_stream(KEY, table, OFFS, n=11, k_proposers=2,
+                                trials=4_000, chunk=1_024, shard=False)
+    for merged in (st_.merge(StreamSummary.zeros(2, st_.precision)),
+                   StreamSummary.zeros(2, st_.precision).merge(st_)):
+        for f in ("n_trials", "n_fast", "n_recovery", "n_undecided", "hist"):
+            np.testing.assert_array_equal(np.asarray(getattr(merged, f)),
+                                          np.asarray(getattr(st_, f)), f)
+        np.testing.assert_array_equal(np.asarray(merged.max_ms),
+                                      np.asarray(st_.max_ms))
+        assert np.isfinite(np.asarray(merged.mean_ms)).all()
+        np.testing.assert_allclose(np.asarray(merged.mean_ms),
+                                   np.asarray(st_.mean_ms), rtol=1e-6)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >1 device (run under "
+                           "--xla_force_host_platform_device_count)")
+def test_sharded_trials_below_device_count():
+    """trials < ndev leaves devices empty: their short-circuited zero
+    contribution must keep the merged summary exact (no -inf/NaN leakage)."""
+    ndev = len(jax.devices())
+    table = build_mask_table([FFP])
+    st_ = streaming.fast_path_stream(KEY, table, n=11, trials=ndev - 1,
+                                     chunk=64, shard=True)
+    assert int(st_.n_trials[0]) == ndev - 1
+    assert int(st_.n_fast[0]) == ndev - 1
+    assert np.isfinite(np.asarray(st_.max_ms)).all()
+    assert np.isfinite(np.asarray(st_.mean_ms)).all()
+    assert int(np.asarray(st_.hist).sum()) == ndev - 1
+
+
+# ---------------------------------------------------------------------------
+# _resolve_k_sat edge cases: clip-vs-validate order pinned
+# ---------------------------------------------------------------------------
+
+def test_resolve_k_sat_clips_above_n_after_validation():
+    """Components > n pass depth validation first and only then clip to n
+    — an explicit (100, 100, 100) is a valid 'everything' request."""
+    table = build_mask_table([FFP, FP])
+    assert streaming._resolve_k_sat(table, (100, 100, 100), 11) \
+        == (11, 11, 11)
+
+
+def test_resolve_k_sat_validates_before_clipping():
+    """The order is observable below 1: on a depth-(1,1,1) table a request
+    of (0,0,0) must RAISE (validate first) — clip-first would silently lift
+    it to the legal (1,1,1)."""
+    table = build_mask_table([QuorumSpec(1, 1, 1, 1)])
+    assert engine.saturation_depths(table) == (1, 1, 1)
+    with pytest.raises(ValueError, match="saturation depths"):
+        streaming._resolve_k_sat(table, (0, 0, 0), 1)
+    # and the clipped legal request still resolves
+    assert streaming._resolve_k_sat(table, (5, 5, 5), 1) == (1, 1, 1)
+
+
+def test_resolve_k_sat_int_below_depths_raises():
+    table = build_mask_table([FFP, FP])     # q2f depths reach 9 (FP)
+    with pytest.raises(ValueError, match="saturation depths"):
+        streaming._resolve_k_sat(table, 2, 11)
+
+
+def test_resolve_k_sat_auto_on_mixed_table():
+    """'auto' on a mixed cardinality+masked batch (no "q" specialization)
+    must still equal the table's saturation depths."""
+    grid = ExplicitQuorumSystem.grid(3).to_masks().embed(11)
+    table = build_mask_table([FFP.to_masks(), grid])
+    assert "q" not in table
+    assert streaming._resolve_k_sat(table, "auto", 11) \
+        == engine.saturation_depths(table)
