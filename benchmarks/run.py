@@ -21,6 +21,11 @@ Sections:
   frontier.*              mixed-family (grid + weighted + cardinality)
                           Pareto frontier on n=12 through the streamed
                           dominance scorer (DESIGN.md §8)
+  planner.*               search-and-serve planner (DESIGN.md §11):
+                          successive-halving search wall vs the exhaustive
+                          sweep at the same final budget, cold vs warm
+                          query latency, zero-compile warm queries, and a
+                          service round trip
   kernel.*                per-kernel timing: jnp reference under jit (wall),
                           Pallas interpret-mode parity asserted in tests/
   roofline.*              aggregate of experiments/dryrun/*.json
@@ -272,6 +277,88 @@ def frontier_benches(quick: bool):
     return rows
 
 
+def planner_benches(quick: bool):
+    """Search-and-serve planner (DESIGN.md §11): successive-halving over
+    the full n=11 cardinality family vs the exhaustive sweep at the same
+    final budget, then query latency cold vs warm.
+
+    The cold query runs the whole search (every rung compiles fresh in a
+    new ``EngineCache``); the warm query differs only in fault budget, so
+    it must hit the search cache and add ZERO engine compiles — asserted
+    here and regression-pinned via ``planner.warm_engine_compiles``.  The
+    exhaustive pass scores all candidates at the final budget directly;
+    the search's final-rung scores are bit-identical per system (common
+    random numbers), so the frontier-set match is exact, not approximate.
+    """
+    import numpy as np
+
+    from repro.frontier import families, score_systems
+    from repro.planner import Planner, default_schedule
+
+    n = 11
+    final = 100_000 if quick else 1_000_000
+    schedule = tuple((r.trials, r.slack)
+                     for r in default_schedule(final, min_trials=10_000))
+    planner = Planner()                     # fresh engine cache: clean cold
+    query = dict(n=n, family="cardinality", trials=final, schedule=schedule,
+                 chunk=16_384, shard=False, seed=0)
+
+    t0 = time.perf_counter()
+    cold = planner.plan(dict(query, faults={"classic": 1}))
+    cold_wall = time.perf_counter() - t0
+    warm_wall = float("inf")
+    for _ in range(3):                      # best-of-3: stable on busy CI
+        t0 = time.perf_counter()
+        warm = planner.plan(dict(query, faults={"fast": 1, "phase1": 1}))
+        warm_wall = min(warm_wall, time.perf_counter() - t0)
+    assert warm.engine_compiles == 0 and not warm.cold, (
+        f"warm same-geometry query recompiled: {warm.engine_compiles}")
+
+    # the exhaustive sweep at the same final budget, for the wall-clock
+    # and frontier-set comparison (scored after the search so no compile
+    # is accidentally shared — the batch shapes differ anyway)
+    members = families.cardinality_family(n)
+    t0 = time.perf_counter()
+    full = score_systems(members, n=n, trials=final, chunk=16_384,
+                         shard=False, seed=0)
+    exhaustive_wall = time.perf_counter() - t0
+    sr = next(iter(planner._searches.values()))       # the cached search
+    match = set(sr.frontier_labels) == set(full.frontier_labels)
+    assert match, (f"search frontier {sorted(sr.frontier_labels)} != "
+                   f"exhaustive {sorted(full.frontier_labels)}")
+
+    rows = [
+        ("planner.cold_query_wall_s", cold_wall),
+        ("planner.warm_query_wall_s", warm_wall),
+        ("planner.cold_engine_compiles", float(cold.engine_compiles)),
+        ("planner.warm_engine_compiles", float(warm.engine_compiles)),
+        ("planner.search_wall_s", float(sum(
+            v for k, v in cold.search.items() if k.endswith(".wall_s")))),
+        ("planner.exhaustive_wall_s", exhaustive_wall),
+        ("planner.budget_fraction", float(cold.search["budget_fraction"])),
+        ("planner.n_candidates", float(cold.search["n_candidates"])),
+        ("planner.n_survivors", float(cold.search["n_survivors"])),
+        ("planner.n_frontier", float(cold.search["n_frontier"])),
+        ("planner.frontier_matches_exhaustive", 1.0 if match else 0.0),
+    ]
+
+    # service round-trip on the warm planner: JSON in, recommendation out
+    from repro.planner import PlannerServer, query_server
+    srv = PlannerServer(planner=planner, port=0, batch_window_s=0.01)
+    srv.start()
+    try:
+        payload = {"op": "plan", **query, "faults": {"classic": 1},
+                   "schedule": [list(r) for r in schedule]}
+        t0 = time.perf_counter()
+        reply = query_server(payload, port=srv.port)
+        rt = time.perf_counter() - t0
+        assert reply["ok"] and reply["engine_compiles"] == 0, reply
+        rows.append(("planner.serve_warm_roundtrip_s", rt))
+    finally:
+        srv.shutdown()
+    return rows
+
+
 def roofline_summary(dryrun_dir: str = "experiments/dryrun"):
     rows = []
     files = sorted(glob.glob(os.path.join(dryrun_dir, "*.single.json")))
@@ -322,7 +409,8 @@ def _sections(args):
            ("qsys", qsys, True), ("mc", montecarlo_benches, False),
            ("stream", streaming_benches, False),
            ("multihost", multihost_benches, False),
-           ("frontier", frontier_benches, False)]
+           ("frontier", frontier_benches, False),
+           ("planner", planner_benches, False)]
     if not args.skip_kernels:
         out.append(("kernels", kernel_benches, False))
     out.append(("roofline", lambda q: roofline_summary(), False))
@@ -335,8 +423,8 @@ def main() -> None:
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
-                         "qsys,mc,stream,multihost,frontier,kernels,"
-                         "roofline")
+                         "qsys,mc,stream,multihost,frontier,planner,"
+                         "kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable benchmark record "
                          "(metrics + per-section wall time + compile "

@@ -23,8 +23,13 @@ no matter the trial count (DESIGN.md §7).
 ``frontier(systems, ...)`` / ``Experiment.frontier()`` score a whole
 family batch through the streaming engine and return its Pareto frontier
 (``repro.frontier``, DESIGN.md §8).
+
+``plan(...)`` / ``Experiment.plan()`` run the successive-halving planner
+(``repro.planner``, DESIGN.md §11): search a family for the cheapest
+system meeting a fault budget under a workload, through a process-wide
+warm engine cache — repeat same-geometry calls recompile nothing.
 """
 from repro.montecarlo.streaming import StreamSummary  # noqa: F401
 
 from .experiment import (BACKENDS, Experiment, Results,  # noqa: F401
-                         Workload, frontier, sweep)
+                         Workload, frontier, plan, sweep)

@@ -30,7 +30,7 @@ and host-side verdicts ride as aux data.
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -384,6 +384,41 @@ class Experiment:
                         use_kernel=self.use_kernel, k_max=self.k_max,
                         axes=axes)
 
+    def plan(self, family: str = "cardinality", *,
+             faults: Optional[Dict[str, int]] = None,
+             trials: Optional[int] = None,
+             objective: str = "race_p999_ms", planner=None, **query_kw):
+        """Search ``family`` for the best system under THIS experiment's
+        workload and engine knobs (``repro.planner``, DESIGN.md §11).
+
+        ``faults`` is the minimum crash-budget triple the recommendation
+        must satisfy (``{"fast": 1, "phase1": 2, "classic": 2}``; missing
+        keys 0) — distinct from the experiment's ``faults`` tuple, whose
+        named acceptors are *crashed for the whole scoring run* (their
+        hops are lost), exactly as on the montecarlo backend.  ``trials``
+        is the final successive-halving budget (default: the experiment's
+        streaming trial count, or 10^6).  Queries route through the
+        process-wide planner (or an explicit ``planner``), so repeat
+        same-geometry plans re-enter warm compiles and cached searches.
+        Returns a ``repro.planner.PlanResult``."""
+        wl = self.workload
+        if self.faults:
+            from repro.montecarlo.latency import CrashedDelay
+            from repro.montecarlo.scenarios import _crash_mask
+            wl = replace(wl,
+                         delay=CrashedDelay(wl.delay_for(self.n),
+                                            _crash_mask(self.n, self.faults)),
+                         loss_prob=0.0)
+        query = dict(n=self.n, family=family, workload=wl,
+                     faults=faults or {},
+                     trials=(trials if trials is not None
+                             else self.trials or 1_000_000),
+                     objective=objective, chunk=self.chunk,
+                     precision=self.precision, seed=self.seed,
+                     shard=self.shard, use_kernel=self.use_kernel,
+                     k_max=self.k_max, **query_kw)
+        return plan(query, planner=planner)
+
     def _fault_tolerance(self) -> Optional[Tuple[Dict[str, int], ...]]:
         if not self.compute_fault_tolerance or self.n > _FT_MAX_N:
             return None
@@ -538,3 +573,40 @@ def frontier(systems: Sequence, workload: Optional[Workload] = None, *,
                    else streaming.DEFAULT_PRECISION),
         shard=shard, seed=seed, use_kernel=use_kernel, k_max=k_max,
         axes=axes)
+
+
+# Process-wide planner behind ``plan()``: one warm engine pool + search
+# LRU shared by every in-process query, so the second same-geometry call
+# recompiles nothing (the planner service holds its own instance).
+_PLANNER = None
+
+
+def default_planner():
+    """The lazily-created process-wide ``repro.planner.Planner``."""
+    global _PLANNER
+    if _PLANNER is None:
+        from repro.planner import Planner
+        _PLANNER = Planner()
+    return _PLANNER
+
+
+def plan(query=None, *, planner=None, **query_kw):
+    """One-call quorum planning (``repro.planner``, DESIGN.md §11).
+
+    Successive-halving search over a family, answered from the
+    process-wide warm planner: pass a ``repro.planner.PlanQuery``, a dict,
+    or its fields as keywords —
+
+        plan(n=11, family="cardinality",
+             workload=Workload.race(k=2, delta_ms=0.2),
+             faults={"fast": 1, "classic": 2}, trials=1_000_000)
+
+    ``faults`` is the minimum crash-budget triple the recommendation must
+    satisfy; ``objective`` ranks the budget-satisfying frontier members
+    (``race_p999_ms`` default).  Returns a ``repro.planner.PlanResult``
+    (recommended system, predicted p50/p99.9/p99.99, fault-tolerance
+    triple, search telemetry).  Repeat same-geometry calls hit the search
+    cache and add zero engine compiles."""
+    if planner is None:
+        planner = default_planner()
+    return planner.plan(query, **query_kw)

@@ -151,6 +151,20 @@ def _free_port() -> int:
         return s.getsockname()[1]
 
 
+# ``_free_port`` closes the probe socket before the coordinator process
+# binds the port, so another process can steal it in between; the
+# coordinator then dies with EADDRINUSE.  ``launch_local`` retries the
+# whole bring-up on a fresh port when a failing process's output matches
+# these markers (gRPC and raw-errno spellings).
+EADDRINUSE_MARKERS = ("EADDRINUSE", "address already in use",
+                      "Address already in use", "Failed to listen")
+LAUNCH_PORT_RETRIES = 3
+
+
+def _is_addr_in_use(text: str) -> bool:
+    return any(m in text for m in EADDRINUSE_MARKERS)
+
+
 def _src_root() -> str:
     # .../src/repro/parallel/distributed.py -> .../src
     return os.path.dirname(os.path.dirname(
@@ -159,7 +173,8 @@ def _src_root() -> str:
 
 def launch_local(num_processes: int, devices_per_process: int,
                  argv: Sequence[str], *, env: Optional[Dict[str, str]] = None,
-                 timeout_s: float = 900.0) -> List[str]:
+                 timeout_s: float = 900.0,
+                 port_retries: int = LAUNCH_PORT_RETRIES) -> List[str]:
     """Run ``argv`` as ``num_processes`` cooperating local processes, each
     seeing ``devices_per_process`` forced host devices.
 
@@ -171,10 +186,31 @@ def launch_local(num_processes: int, devices_per_process: int,
     ``RuntimeError`` with the failing process's output on any non-zero
     exit, and ``NotImplementedError`` when the failure is the platform
     lacking multi-process CPU collectives (so callers can skip, not fail).
+
+    The free-port probe closes its socket before the coordinator binds,
+    so the port can be stolen in between; a failure whose output matches
+    ``EADDRINUSE_MARKERS`` retries the whole bring-up on a fresh port, up
+    to ``port_retries`` times, instead of failing the launch.
     """
     if num_processes < 1 or devices_per_process < 1:
         raise ValueError(f"need at least 1 process and 1 device, got "
                          f"{num_processes} x {devices_per_process}")
+    for attempt in range(port_retries + 1):
+        try:
+            return _launch_once(num_processes, devices_per_process, argv,
+                                env=env, timeout_s=timeout_s)
+        except NotImplementedError:
+            raise                           # platform gap, not a port race
+        except RuntimeError as e:
+            if attempt < port_retries and _is_addr_in_use(str(e)):
+                continue                    # lost the race: fresh port
+            raise
+    raise AssertionError("unreachable")     # loop always returns or raises
+
+
+def _launch_once(num_processes: int, devices_per_process: int,
+                 argv: Sequence[str], *, env: Optional[Dict[str, str]],
+                 timeout_s: float) -> List[str]:
     port = _free_port()
     base = dict(os.environ)
     base.update(env or {})

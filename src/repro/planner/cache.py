@@ -1,0 +1,221 @@
+"""Warm compiled-engine pool for planner queries (DESIGN.md §11).
+
+``montecarlo.streaming._stream`` compiles once per engine *geometry* —
+the static signature (table shapes, pair-layout width, chunk count,
+precision, resolved saturation depths, mesh) — and JAX's jit cache keeps
+that compile warm for the life of the process.  What a long-lived planner
+needs on top is bookkeeping and memoization:
+
+  EngineKey     the geometry a scoring query lowers to, computed host-side
+                without touching the engine — two queries with equal keys
+                are guaranteed to re-enter the same compiles.
+  EngineCache   routes ``frontier.score.score_systems`` calls through a
+                per-key ledger (queries seen, compiles actually paid,
+                measured via the ``engine.TRACE_COUNTS`` delta around the
+                call) plus an LRU of full ``FrontierResult``s keyed by a
+                *content* fingerprint (table bytes + delay leaves + every
+                parameter), so a bit-identical repeat query returns
+                without running the engine at all.
+
+The planner service keeps one ``EngineCache`` for its whole lifetime; the
+successive-halving search threads one through all its rungs.  The
+"second same-shape query adds zero compiles" acceptance criterion is
+asserted against ``TRACE_COUNTS`` in tests/test_planner.py and the CI
+planner smoke job.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.montecarlo import engine, streaming
+
+# The base per-path trace counters.  The ``*_sortfree`` / ``*_fused`` keys
+# increment ALONGSIDE their base key (they pin which lowering ran), so
+# summing everything would double-count one trace.
+BASE_TRACE_KEYS = ("race", "fast_path", "classic_path",
+                   "race_stream", "fast_path_stream", "classic_path_stream")
+
+
+def trace_total() -> int:
+    """Total engine traces so far (jit cache misses across all paths)."""
+    return sum(engine.TRACE_COUNTS[k] for k in BASE_TRACE_KEYS)
+
+
+@dataclass(frozen=True)
+class EngineKey:
+    """The static geometry one scoring query lowers to.
+
+    Mirrors ``streaming._stream``'s static argnames plus everything that
+    feeds them: equal keys ⇒ the query re-enters already-traced compiles
+    (shapes and statics identical; table *contents* are traced).  The
+    materializing T <= chunk fallback jits on ``samples`` instead of a
+    chunk count, so ``mode`` + ``n_chunks`` carries either geometry.
+    """
+
+    table_sig: Tuple[Tuple[str, Tuple[int, ...], str], ...]
+    layout_pairs: int               # P of the cardinality pair layout (0: n/a)
+    n: int
+    k_proposers: int
+    chunk: int
+    n_chunks: int                   # streamed: chunks; materializing: samples
+    mode: str                       # "stream" | "materialize"
+    precision: float
+    k_sat: Optional[Tuple[int, int, int]]
+    use_kernel: bool
+    ndev: int
+
+
+def _resolve_ndev(shard) -> int:
+    """Device count a ``shard`` setting will actually run on (without the
+    loud single-device warning — key computation is not a run)."""
+    if shard is False or shard is None:
+        return 1
+    if shard is True:
+        n = len(jax.devices())
+        return n if n > 1 else 1
+    from repro.parallel import sharding as psharding
+    return shard.shape[psharding.TRIAL_AXIS]
+
+
+def engine_key(table: Dict, *, n: int, k_proposers: int, trials: int,
+               chunk: int, precision: float, shard, use_kernel: bool,
+               k_max) -> EngineKey:
+    """Compute the warm-pool key for one scoring query, host-side."""
+    sig = tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                       for k, v in table.items()))
+    ndev = _resolve_ndev(shard)
+    if ndev == 1 and trials <= chunk:
+        # materializing fallback: ``samples`` itself is the jit static
+        return EngineKey(sig, 0, n, k_proposers, chunk, trials,
+                         "materialize", precision, None, use_kernel, 1)
+    k_sat = streaming._resolve_k_sat(table, k_max, n)
+    pairs = 0
+    if "q" in table and k_sat is not None:
+        pairs = int(np.unique(np.asarray(table["q"])[:, :2], axis=0).shape[0])
+    per_device = -(-trials // ndev)
+    n_chunks = -(-per_device // chunk)
+    return EngineKey(sig, pairs, n, k_proposers, chunk, n_chunks, "stream",
+                     precision, k_sat, use_kernel, ndev)
+
+
+def _delay_token(delay) -> bytes:
+    """Content fingerprint of a delay-model pytree (class + leaf bytes)."""
+    if delay is None:
+        return b"default"
+    leaves, treedef = jax.tree_util.tree_flatten(delay)
+    h = hashlib.sha256(str(treedef).encode())
+    h.update(type(delay).__name__.encode())
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.digest()
+
+
+class EngineCache:
+    """Warm engine pool + result memo for a long-lived planner process.
+
+    ``score`` has the same semantics as ``frontier.score.score_systems``
+    (same arguments, same ``FrontierResult``, bit-identical values) with
+    three additions: a per-``EngineKey`` ledger of queries vs compiles
+    paid, an ``engine_compiles`` attribute on the returned result (the
+    TRACE_COUNTS delta this call caused), and an LRU memo of results so a
+    bit-identical repeat query skips the engine entirely (memo hits report
+    ``engine_compiles == 0`` without even entering jit dispatch).
+    """
+
+    def __init__(self, memo_size: int = 64):
+        self.memo_size = memo_size
+        self.stats: Dict[EngineKey, Dict[str, int]] = {}
+        self._memo: "OrderedDict[bytes, object]" = OrderedDict()
+        self.memo_hits = 0
+        self.memo_misses = 0
+
+    # -- introspection -----------------------------------------------------
+    def warm(self, key: EngineKey) -> bool:
+        """Has this geometry been scored (hence traced) before?"""
+        return key in self.stats
+
+    @property
+    def total_compiles(self) -> int:
+        return sum(s["compiles"] for s in self.stats.values())
+
+    def stats_dict(self) -> Dict[str, float]:
+        return {"engine_keys": float(len(self.stats)),
+                "engine_compiles": float(self.total_compiles),
+                "memo_hits": float(self.memo_hits),
+                "memo_misses": float(self.memo_misses)}
+
+    # -- the one entry point ----------------------------------------------
+    def score(self, systems: Sequence, *, trials: int,
+              n: Optional[int] = None, k_proposers: int = 2,
+              delta_ms: Optional[float] = None, delay=None,
+              chunk: Optional[int] = None, precision: Optional[float] = None,
+              shard=False, use_kernel: bool = False, k_max="auto",
+              seed: int = 0, axes=None):
+        from repro.frontier import score as fscore
+
+        delta_ms = (fscore.DEFAULT_DELTA_MS if delta_ms is None
+                    else delta_ms)
+        chunk = fscore.DEFAULT_CHUNK if chunk is None else chunk
+        precision = (streaming.DEFAULT_PRECISION if precision is None
+                     else precision)
+
+        masks, _, n = fscore._as_masks(list(systems), n)
+        table = engine.build_mask_table(masks)
+        key = engine_key(table, n=n, k_proposers=k_proposers, trials=trials,
+                         chunk=chunk, precision=precision, shard=shard,
+                         use_kernel=use_kernel, k_max=k_max)
+        labels = tuple(m.label or f"system{i}" for i, m in enumerate(masks))
+        fp = self._fingerprint(table, key, labels=labels, trials=trials,
+                               seed=seed, delta_ms=delta_ms, delay=delay,
+                               axes=axes)
+        hit = self._memo.get(fp)
+        if hit is not None:
+            self._memo.move_to_end(fp)
+            self.memo_hits += 1
+            st = self.stats.setdefault(key, {"queries": 0, "compiles": 0})
+            st["queries"] += 1
+            out = replace(hit)                  # fresh wrapper, shared arrays
+            out.engine_compiles = 0
+            return out
+        self.memo_misses += 1
+
+        before = trace_total()
+        result = fscore.score_systems(
+            list(systems), trials=trials, n=n, k_proposers=k_proposers,
+            delta_ms=delta_ms, delay=delay, chunk=chunk, precision=precision,
+            shard=shard, use_kernel=use_kernel, k_max=k_max, seed=seed,
+            axes=axes)
+        compiles = trace_total() - before
+        st = self.stats.setdefault(key, {"queries": 0, "compiles": 0})
+        st["queries"] += 1
+        st["compiles"] += compiles
+        result.engine_compiles = compiles
+
+        self._memo[fp] = result
+        while len(self._memo) > self.memo_size:
+            self._memo.popitem(last=False)
+        return result
+
+    # -- internals ---------------------------------------------------------
+    def _fingerprint(self, table: Dict, key: EngineKey, *,
+                     labels: Tuple[str, ...], trials: int, seed: int,
+                     delta_ms: float, delay, axes) -> bytes:
+        h = hashlib.sha256(repr(key).encode())
+        h.update(repr((labels, trials, seed, delta_ms)).encode())
+        for name in sorted(table):
+            arr = np.asarray(table[name])
+            h.update(name.encode())
+            h.update(arr.tobytes())
+        h.update(_delay_token(delay))
+        h.update(repr(tuple(axes) if axes is not None else None).encode())
+        return h.digest()
