@@ -54,8 +54,9 @@ REL_TOL = 0.30
 # multi-process CPU collectives (and pre-PR-7 baselines don't record it
 # at all); the planner section exists only from PR 8 on and binds a
 # localhost socket for its service round trip, which sandboxed runners
-# may forbid.  Missing -> warn, never fail.
-OPTIONAL_PREFIXES = ("stream.multihost", "planner")
+# may forbid; the regimes section exists only from PR 9 on.  Missing ->
+# warn, never fail.
+OPTIONAL_PREFIXES = ("stream.multihost", "planner", "regimes")
 
 
 def _is_timing(name: str) -> bool:

@@ -126,7 +126,8 @@ def run(quick: bool = False, seed: int = 0):
                          ("scattered", (0, 4, 8))):
         scen, masks = grid_wan(cols=3, k=2, delta_ms=DELTA_MS,
                                crashed=crashed)
-        out = scen.run(kk, build_mask_table([masks]), inj_samples)
+        out = scen.with_spec(samples=inj_samples).run(
+            kk, build_mask_table([masks]))
         undecided[tag] = float(out["undecided"].mean())
         rows.append((f"qsys.grid_wan.{tag}.undecided_rate", undecided[tag]))
         rows.append((f"qsys.grid_wan.{tag}.p_recovery",

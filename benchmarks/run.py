@@ -26,6 +26,11 @@ Sections:
                           sweep at the same final budget, cold vs warm
                           query latency, zero-compile warm queries, and a
                           service round trip
+  regimes.*               Markov-modulated scenario regimes (DESIGN.md
+                          §12): the committed trace_replay config streamed
+                          end-to-end through Experiment.from_config —
+                          throughput, per-regime occupancy split,
+                          single-compile discipline
   kernel.*                per-kernel timing: jnp reference under jit (wall),
                           Pallas interpret-mode parity asserted in tests/
   roofline.*              aggregate of experiments/dryrun/*.json
@@ -359,6 +364,60 @@ def planner_benches(quick: bool):
     return rows
 
 
+def regimes_benches(quick: bool):
+    """Markov-modulated scenario regimes (DESIGN.md §12) from a committed
+    scenario config: stream the ``trace_replay`` example (empirical
+    trace-driven delay + 3-regime failure chain) end-to-end through
+    ``Experiment.from_config`` and record throughput, the per-regime
+    occupancy split, and the compile discipline — ONE fresh
+    ``race_stream_regimes`` trace for the geometry, ZERO on a same-shape
+    repeat (different seed re-enters the warm compile; trial counts and
+    regime parameters are traced operands)."""
+    import dataclasses
+
+    from repro.api.experiment import Experiment
+    from repro.montecarlo import engine
+
+    cfg = os.path.join(os.path.dirname(__file__), "..",
+                       "examples", "scenarios", "trace_replay.json")
+    trials = 200_000 if quick else 1_000_000
+    exp = dataclasses.replace(Experiment.from_config(cfg), trials=trials,
+                              shard=len(jax.devices()) > 1)
+
+    t0 = dict(engine.TRACE_COUNTS)
+    s0 = time.perf_counter()
+    r = exp.run("montecarlo")
+    jax.block_until_ready(r.stream.occupancy)
+    wall = time.perf_counter() - s0
+    compiles = (engine.TRACE_COUNTS["race_stream_regimes"]
+                - t0["race_stream_regimes"])
+    assert compiles == 1, (
+        f"3-regime stream took {compiles} compiles (expected 1)")
+
+    t1 = dict(engine.TRACE_COUNTS)
+    r2 = dataclasses.replace(exp, seed=exp.seed + 1).run("montecarlo")
+    jax.block_until_ready(r2.stream.occupancy)
+    repeat = (engine.TRACE_COUNTS["race_stream_regimes"]
+              - t1["race_stream_regimes"])
+    assert repeat == 0, (
+        f"same-geometry regime stream re-jitted ({repeat} traces)")
+
+    rep = r.stream.report()
+    rows = [("regimes.n_regimes", float(len(rep["names"]))),
+            ("regimes.engine_compiles", float(compiles)),
+            ("regimes.repeat_engine_compiles", float(repeat)),
+            (f"regimes.trials_per_s[{trials}]", trials / wall),
+            ("regimes.p999_ms", float(r.summary["p999_ms"][0]))]
+    import numpy as np
+    for i, name in enumerate(rep["names"]):
+        rows.append((f"regimes.occupancy_frac.{name}",
+                     float(rep["occupancy_frac"][i])))
+        # per-system vector (scalar when M == 1); report the first system
+        rows.append((f"regimes.[{name}].p50_ms",
+                     float(np.ravel(rep["per_regime"][name]["p50_ms"])[0])))
+    return rows
+
+
 def roofline_summary(dryrun_dir: str = "experiments/dryrun"):
     rows = []
     files = sorted(glob.glob(os.path.join(dryrun_dir, "*.single.json")))
@@ -410,7 +469,8 @@ def _sections(args):
            ("stream", streaming_benches, False),
            ("multihost", multihost_benches, False),
            ("frontier", frontier_benches, False),
-           ("planner", planner_benches, False)]
+           ("planner", planner_benches, False),
+           ("regimes", regimes_benches, False)]
     if not args.skip_kernels:
         out.append(("kernels", kernel_benches, False))
     out.append(("roofline", lambda q: roofline_summary(), False))
@@ -424,7 +484,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
                          "qsys,mc,stream,multihost,frontier,planner,"
-                         "kernels,roofline")
+                         "regimes,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable benchmark record "
                          "(metrics + per-section wall time + compile "

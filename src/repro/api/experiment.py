@@ -29,19 +29,24 @@ and host-side verdicts ride as aux data.
 """
 from __future__ import annotations
 
+import json
 import random
 from dataclasses import dataclass, field, replace
+from pathlib import Path
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.model_check import explore
-from repro.core.quorum import QuorumMasks
+from repro.core.quorum import (ExplicitQuorumSystem, QuorumMasks, QuorumSpec,
+                               WeightedQuorumSystem)
 from repro.core.simulator import FastPaxosSim, LatencyModel
 from repro.montecarlo import engine, streaming
 from repro.montecarlo.latency import (LossyDelay, ShiftedLognormalDelay,
-                                      WanDelay)
+                                      WanDelay, delay_from_config,
+                                      delay_to_config)
+from repro.montecarlo.regimes import MarkovRegimes
 from repro.montecarlo.scenarios import Scenario
 
 BACKENDS = ("montecarlo", "des", "modelcheck")
@@ -66,10 +71,17 @@ class Workload:
     ``k_proposers`` values race for each instance (k=1: conflict-free),
     proposer i submitting at ``i * delta_ms``; a ``conflict_frac`` < 1
     mixes in conflict-free commands (Fig. 2b).  ``delay`` is a
-    ``repro.montecarlo.latency`` pytree (``None`` = the §6 EC2 fit, the
-    one distribution the DES backend shares); ``inter_region_ms`` instead
-    builds a WAN placement once the cluster size is known, and
-    ``loss_prob`` wraps the model with i.i.d. message loss.
+    ``repro.montecarlo.latency`` pytree OR its serialized config dict
+    (``None`` = the §6 EC2 fit, the one distribution the DES backend
+    shares); ``inter_region_ms`` instead builds a WAN placement once the
+    cluster size is known, and ``loss_prob`` wraps the model with i.i.d.
+    message loss.  ``regimes`` (a ``MarkovRegimes`` or its config dict)
+    Markov-modulates streamed runs through failure epochs (DESIGN.md §12).
+
+    A workload is declarative data: ``to_dict()`` / ``from_dict()``
+    round-trip every constructor — trace-driven delays and regime chains
+    included — through plain JSON, the schema ``examples/scenarios/*.json``
+    and ``Experiment.from_config`` consume.
     """
 
     name: str = "conflict_free"
@@ -81,6 +93,7 @@ class Workload:
     n_regions: int = 3
     loss_prob: float = 0.0
     des_requests: int = 1200        # DES backend sample count (per system)
+    regimes: object = None          # MarkovRegimes | config dict | None
 
     def __post_init__(self) -> None:
         if self.k_proposers < 1:
@@ -125,9 +138,53 @@ class Workload:
         return cls(name="lossy", k_proposers=k, delta_ms=delta_ms,
                    loss_prob=loss_prob, delay=delay, **kw)
 
+    # -- declarative config (DESIGN.md §12) --------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Serialize to a plain JSON-ready dict (the scenario-config
+        schema).  ``from_dict`` inverts it; fields at their defaults are
+        dropped for readability."""
+        regimes = self.regimes
+        if isinstance(regimes, MarkovRegimes):
+            regimes = regimes.to_config()
+        cfg: Dict[str, Any] = {
+            "name": self.name, "k_proposers": self.k_proposers,
+            "delta_ms": float(self.delta_ms),
+            "conflict_frac": float(self.conflict_frac),
+            "delay": (self.delay if isinstance(self.delay, dict)
+                      else delay_to_config(self.delay)),
+            "inter_region_ms": (None if self.inter_region_ms is None
+                                else float(self.inter_region_ms)),
+            "n_regions": self.n_regions,
+            "loss_prob": float(self.loss_prob),
+            "des_requests": self.des_requests, "regimes": regimes}
+        defaults = Workload()
+        return {k: v for k, v in cfg.items()
+                if v is not None and v != getattr(defaults, k, None)
+                or k == "name"}
+
+    @classmethod
+    def from_dict(cls, cfg: Dict[str, Any]) -> "Workload":
+        """Build from ``to_dict`` output or the ``{"kind": ...}``
+        constructor shorthand (``race``/``mixed``/``wan``/``lossy``/
+        ``conflict_free`` with that constructor's keywords).  Delay and
+        regime configs stay declarative until a cluster size is known
+        (``delay_for`` / ``scenario`` resolve them)."""
+        cfg = dict(cfg)
+        kind = cfg.pop("kind", None)
+        if kind is not None:
+            ctors = {"conflict_free": cls.conflict_free, "race": cls.race,
+                     "mixed": cls.mixed, "wan": cls.wan, "lossy": cls.lossy}
+            if kind not in ctors:
+                raise ValueError(f"unknown workload kind {kind!r}; "
+                                 f"pick one of {sorted(ctors)}")
+            return ctors[kind](**cfg)
+        return cls(**cfg)
+
     # -- lowering ----------------------------------------------------------
     def delay_for(self, n: int):
         d = self.delay
+        if isinstance(d, dict):             # serialized form: resolve now
+            d = delay_from_config(d, n)
         if d is None and self.inter_region_ms is not None:
             d = WanDelay.symmetric(self.inter_region_ms, n,
                                    self.k_proposers, self.n_regions)
@@ -137,18 +194,33 @@ class Workload:
             d = LossyDelay(d, self.loss_prob)
         return d
 
+    def regimes_for(self, n: int) -> Optional[MarkovRegimes]:
+        """The regime chain with config dicts resolved for a cluster of
+        ``n`` (base-delay inheritance stays deferred until the stream
+        binds its model)."""
+        if self.regimes is None:
+            return None
+        if isinstance(self.regimes, MarkovRegimes):
+            return self.regimes.validate()
+        return MarkovRegimes.from_config(self.regimes, n)
+
     def scenario(self, n: int, faults: Sequence[int] = ()) -> Scenario:
         """Lower to a Monte-Carlo ``Scenario`` for a cluster of ``n``."""
         offs = self.delta_ms * jnp.arange(self.k_proposers,
                                           dtype=jnp.float32)
         scen = Scenario(self.name, n, self.k_proposers, offs,
                         self.delay_for(n), self.conflict_frac)
+        regimes = self.regimes_for(n)
+        if regimes is not None:
+            scen = scen.with_spec(regimes=regimes)
         return scen.with_faults(faults)
 
     def des_latency(self) -> LatencyModel:
         """Lower the delay model for the discrete-event backend (which
         speaks the shifted-lognormal EC2 fit, optionally lossy)."""
         d = self.delay if self.delay is not None else ShiftedLognormalDelay()
+        if isinstance(d, dict):
+            d = delay_from_config(d)
         if self.inter_region_ms is not None or not isinstance(
                 d, ShiftedLognormalDelay):
             raise ValueError(
@@ -349,6 +421,34 @@ class Experiment:
                 self.masks(), specialize=specialize)
         return cache[specialize]
 
+    # -- declarative config (DESIGN.md §12) --------------------------------
+    @classmethod
+    def from_config(cls, path_or_dict) -> "Experiment":
+        """Build a whole experiment from declarative data: a JSON file
+        path or an already-parsed dict (the ``examples/scenarios/*.json``
+        schema) —
+
+            {"systems": [{"kind": "cardinality", "preset": "paper_headline",
+                          "n": 11}, ...],
+             "workload": {"kind": "race", "k": 2, "delta_ms": 0.2,
+                          "regimes": {...}},
+             "trials": 1000000, "seed": 0}
+
+        ``systems`` entries lower through ``system_from_config``;
+        ``workload`` through ``Workload.from_dict``; every remaining key
+        is an ``Experiment`` field."""
+        cfg = path_or_dict
+        if isinstance(cfg, (str, Path)):
+            with open(cfg) as f:
+                cfg = json.load(f)
+        cfg = dict(cfg)
+        systems = [system_from_config(s) for s in cfg.pop("systems")]
+        wl = cfg.pop("workload", None)
+        workload = (Workload.from_dict(wl) if isinstance(wl, dict)
+                    else wl if wl is not None else Workload())
+        cfg["faults"] = tuple(cfg.get("faults", ()))
+        return cls(systems=systems, workload=workload, **cfg)
+
     # -- execution ---------------------------------------------------------
     def run(self, backend: Optional[str] = None) -> Results:
         """Evaluate on ``backend`` (default: the declared one)."""
@@ -432,14 +532,17 @@ class Experiment:
         scen = self.workload.scenario(self.n, self.faults)
         key = jax.random.PRNGKey(self.seed)
         if self.trials is not None:
-            state = scen.stream(key, self.lower(), self.trials,
-                                chunk=self.chunk, precision=self.precision,
-                                use_kernel=self.use_kernel,
-                                shard=self.shard, k_max=self.k_max)
+            state = scen.with_spec(
+                trials=self.trials, chunk=self.chunk,
+                precision=self.precision, use_kernel=self.use_kernel,
+                shard=self.shard, k_max=self.k_max).stream(
+                    key, self.lower())
             return Results(backend="montecarlo", labels=self.labels,
                            summary=state.summary(), stream=state,
                            fault_tolerance=self._fault_tolerance())
-        out = scen.run(key, self.lower(), self.samples, self.use_kernel)
+        out = scen.with_spec(samples=self.samples,
+                             use_kernel=self.use_kernel).run(
+                                 key, self.lower())
         return Results(backend="montecarlo", labels=self.labels,
                        summary=engine.summarize(out), raw=out,
                        fault_tolerance=self._fault_tolerance())
@@ -526,6 +629,38 @@ class Experiment:
                        safety=tuple(verdicts))
 
 
+def system_from_config(cfg):
+    """One quorum system from declarative data (the ``systems`` entries of
+    the scenario-config schema):
+
+      {"kind": "cardinality", "n": 11, "q1": 9, "q2c": 3, "q2f": 7}
+      {"kind": "cardinality", "preset": "paper_headline", "n": 11}
+      {"kind": "grid", "cols": 3, "rows": 3, "n": 11}      # n: embed target
+      {"kind": "weighted", "weights": [...], "t1": ..., "t2c": ..., "t2f": ...}
+    """
+    cfg = dict(cfg)
+    kind = cfg.pop("kind", "cardinality")
+    if kind == "cardinality":
+        preset = cfg.pop("preset", None)
+        if preset is not None:
+            ctor = getattr(QuorumSpec, preset, None)
+            if ctor is None:
+                raise ValueError(f"unknown QuorumSpec preset {preset!r}")
+            return ctor(**cfg).validate()
+        return QuorumSpec(**cfg).validate()
+    if kind == "grid":
+        n = cfg.pop("n", None)
+        sys_ = ExplicitQuorumSystem.grid(int(cfg.pop("cols", 3)),
+                                         int(cfg.pop("rows", 3))).validate()
+        return sys_ if n is None or n == sys_.n else sys_.embed(int(n))
+    if kind == "weighted":
+        return WeightedQuorumSystem(
+            tuple(int(w) for w in cfg["weights"]), int(cfg["t1"]),
+            int(cfg["t2c"]), int(cfg["t2f"])).validate()
+    raise ValueError(f"unknown system kind {kind!r}; pick one of "
+                     f"('cardinality', 'grid', 'weighted')")
+
+
 def sweep(experiment: Experiment, backends: Sequence[str] = BACKENDS
           ) -> Dict[str, Results]:
     """Run one experiment across several backends: {backend: Results}."""
@@ -572,7 +707,7 @@ def frontier(systems: Sequence, workload: Optional[Workload] = None, *,
         precision=(precision if precision is not None
                    else streaming.DEFAULT_PRECISION),
         shard=shard, seed=seed, use_kernel=use_kernel, k_max=k_max,
-        axes=axes)
+        axes=axes, regimes=wl.regimes_for(n))
 
 
 # Process-wide planner behind ``plan()``: one warm engine pool + search

@@ -114,6 +114,7 @@ def score_systems(systems: Sequence, *,
                   use_kernel: bool = False,
                   k_max="auto",
                   seed: int = 0,
+                  regimes=None,
                   axes: Optional[Sequence[Axis]] = None) -> FrontierResult:
     """Score a family batch and return its Pareto frontier.
 
@@ -131,6 +132,11 @@ def score_systems(systems: Sequence, *,
     explicit int / 3-tuple pins the depths.  Integer outputs (decide bits,
     counts, histograms — hence every frontier axis) are bit-identical
     across all settings; only wall clock changes.
+
+    ``regimes`` (a ``MarkovRegimes`` or its config dict) modulates both
+    stream passes through Markov failure epochs; the scored axes then
+    read the regime-merged totals, so the frontier prices the *mixture*
+    the workload declares rather than a single i.i.d. environment.
     """
     masks, native, n = _as_masks(systems, n)
     labels = tuple(m.label or f"system{i}" for i, m in enumerate(masks))
@@ -145,12 +151,12 @@ def score_systems(systems: Sequence, *,
     fast = streaming.fast_path_stream(k_fast, table, delay, n=n,
                                       trials=trials, chunk=chunk,
                                       precision=precision, shard=shard,
-                                      k_max=k_max)
+                                      k_max=k_max, regimes=regimes)
     race = streaming.race_stream(k_race, table, offsets, delay, n=n,
                                  k_proposers=k_proposers, trials=trials,
                                  chunk=chunk, precision=precision,
                                  use_kernel=use_kernel, shard=shard,
-                                 k_max=k_max)
+                                 k_max=k_max, regimes=regimes)
 
     fast_p50 = np.asarray(fast.quantile(0.5), np.float64)
     race_p999 = np.asarray(race.quantile(0.999), np.float64)

@@ -30,18 +30,29 @@ reduce chunked trials into a fixed-size mergeable ``StreamSummary``
 axis over devices — 10^7+ trials on a laptop, tail percentiles included
 (DESIGN.md §7).
 
+Beyond i.i.d. draws, ``traces.EmpiricalDelay`` replays a measured latency
+trace as a traced quantile table, and ``regimes.MarkovRegimes`` modulates
+a streamed run through named failure epochs (baseline / degraded /
+partitioned / ...), returning per-regime ``RegimeStreamSummary`` slices —
+both declaratively serializable through the ``latency`` registry
+(DESIGN.md §12).
+
 The declarative front door over this engine (plus the model checker and
 the discrete-event simulator) is ``repro.api.Experiment``; the
 quorum-space Pareto frontier built on the streaming drivers is
 ``repro.frontier`` (DESIGN.md §8).
 """
-from . import engine, latency, scenarios, streaming  # noqa: F401
+from . import engine, latency, regimes, scenarios  # noqa: F401
+from . import streaming, traces  # noqa: F401
 from .engine import (build_mask_table, classic_path,  # noqa: F401
                      fast_path, race, summarize)
 from .latency import (CrashedDelay, LossyDelay, ParetoDelay,  # noqa: F401
-                      ShiftedLognormalDelay, WanDelay)
-from .scenarios import (Scenario, conflict_free, grid_wan,  # noqa: F401
-                        k_way_race, lossy_acceptors, mixed_workload, wan,
-                        weighted_acceptors)
+                      ShiftedLognormalDelay, WanDelay, delay_from_config,
+                      delay_kinds, delay_to_config)
+from .regimes import MarkovRegimes, RegimeStreamSummary  # noqa: F401
+from .scenarios import (RunSpec, Scenario, conflict_free,  # noqa: F401
+                        grid_wan, k_way_race, lossy_acceptors,
+                        mixed_workload, wan, weighted_acceptors)
 from .streaming import (StreamSummary, classic_path_stream,  # noqa: F401
                         fast_path_stream, race_stream)
+from .traces import EmpiricalDelay  # noqa: F401

@@ -79,7 +79,10 @@ TRACE_COUNTS: Dict[str, int] = {"race": 0, "fast_path": 0, "classic_path": 0,
                                 "race_stream_sortfree": 0,
                                 "fast_path_stream_sortfree": 0,
                                 "classic_path_stream_sortfree": 0,
-                                "race_stream_fused": 0}
+                                "race_stream_fused": 0,
+                                "race_stream_regimes": 0,
+                                "fast_path_stream_regimes": 0,
+                                "classic_path_stream_regimes": 0}
 
 
 # ---------------------------------------------------------------------------

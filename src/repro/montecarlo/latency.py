@@ -26,10 +26,11 @@ A delay >= ``LOST_MS`` means the message never arrives (used by
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Sentinel one-way delay for a dropped message.  Anything this large is
 # treated as "never arrived" by the engine (real delays are a few ms).
@@ -223,3 +224,122 @@ class CrashedDelay:
 def default_delay() -> ShiftedLognormalDelay:
     """The paper-§6 EC2 fit shared with the discrete-event simulator."""
     return ShiftedLognormalDelay()
+
+
+# ---------------------------------------------------------------------------
+# Named registry + declarative serialization (DESIGN.md §12).
+#
+# Every model registers a ``kind`` name plus to/from-config codecs, so a
+# whole delay stack — wrappers included — round-trips through plain JSON:
+#
+#     {"kind": "lossy", "loss_prob": 0.02,
+#      "inner": {"kind": "empirical", "probs": [...], "values_ms": [...]}}
+#
+# ``delay_from_config`` optionally takes the cluster size ``n`` for kinds
+# whose placement depends on it (the symmetric WAN shorthand).  The
+# trace-driven ``empirical`` kind registers itself from ``traces.py``.
+# ---------------------------------------------------------------------------
+
+_DELAY_REGISTRY: Dict[str, Tuple[type, Callable, Callable]] = {}
+
+
+def register_delay_model(kind: str, cls: type, to_config: Callable,
+                         from_config: Callable) -> None:
+    """Register a delay-model kind: ``to_config(model) -> dict`` (without
+    the ``kind`` key) and ``from_config(cfg, n=None) -> model``."""
+    _DELAY_REGISTRY[kind] = (cls, to_config, from_config)
+
+
+def delay_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_DELAY_REGISTRY))
+
+
+def delay_to_config(model) -> Optional[dict]:
+    """Serialize any registered delay model (wrappers recurse) to a plain
+    JSON-ready dict; ``None`` passes through (= the engine default)."""
+    if model is None:
+        return None
+    for kind, (cls, to_cfg, _) in _DELAY_REGISTRY.items():
+        if type(model) is cls:
+            return {"kind": kind, **to_cfg(model)}
+    raise TypeError(f"unregistered delay model {type(model).__name__}; "
+                    f"known kinds: {delay_kinds()}")
+
+
+def delay_from_config(cfg, n: Optional[int] = None):
+    """Inverse of ``delay_to_config``.  Accepts ``None``, an
+    already-constructed model (idempotent pass-through), or a
+    ``{"kind": ...}`` dict."""
+    if cfg is None or not isinstance(cfg, dict):
+        return cfg
+    kind = cfg.get("kind")
+    if kind not in _DELAY_REGISTRY:
+        raise ValueError(f"unknown delay kind {kind!r}; "
+                         f"known kinds: {delay_kinds()}")
+    body = {k: v for k, v in cfg.items() if k != "kind"}
+    return _DELAY_REGISTRY[kind][2](body, n)
+
+
+def _f(x) -> float:
+    return float(np.asarray(x))
+
+
+register_delay_model(
+    "lognormal", ShiftedLognormalDelay,
+    lambda m: {"base_ms": _f(m.base_ms), "mu": _f(m.mu),
+               "sigma": _f(m.sigma)},
+    lambda cfg, n=None: ShiftedLognormalDelay(**cfg))
+
+register_delay_model(
+    "pareto", ParetoDelay,
+    lambda m: {"base_ms": _f(m.base_ms), "scale_ms": _f(m.scale_ms),
+               "alpha": _f(m.alpha)},
+    lambda cfg, n=None: ParetoDelay(**cfg))
+
+
+def _wan_to_config(m: WanDelay) -> dict:
+    return {"oneway_ms": np.asarray(m.oneway_ms, np.float64).tolist(),
+            "acceptor_region": np.asarray(m.acceptor_region,
+                                          np.int64).tolist(),
+            "proposer_region": np.asarray(m.proposer_region,
+                                          np.int64).tolist(),
+            "learner_region": int(np.asarray(m.learner_region)),
+            "jitter_mu": _f(m.jitter_mu), "jitter_sigma": _f(m.jitter_sigma)}
+
+
+def _wan_from_config(cfg: dict, n: Optional[int] = None) -> WanDelay:
+    cfg = dict(cfg)
+    if "inter_region_ms" in cfg:    # symmetric shorthand: needs cluster size
+        if n is None:
+            raise ValueError(
+                "the symmetric WAN delay config needs the cluster size; "
+                "pass n= (Workload/Experiment configs resolve it for you)")
+        kw = {k: cfg[k] for k in ("jitter_mu", "jitter_sigma") if k in cfg}
+        return WanDelay.symmetric(float(cfg["inter_region_ms"]), n,
+                                  int(cfg.get("k_proposers", 2)),
+                                  int(cfg.get("n_regions", 3)), **kw)
+    return WanDelay(
+        oneway_ms=jnp.asarray(cfg["oneway_ms"], jnp.float32),
+        acceptor_region=jnp.asarray(cfg["acceptor_region"], jnp.int32),
+        proposer_region=jnp.asarray(cfg["proposer_region"], jnp.int32),
+        learner_region=jnp.int32(cfg.get("learner_region", 0)),
+        jitter_mu=float(cfg.get("jitter_mu", -2.0)),
+        jitter_sigma=float(cfg.get("jitter_sigma", 0.4)))
+
+
+register_delay_model("wan", WanDelay, _wan_to_config, _wan_from_config)
+
+register_delay_model(
+    "lossy", LossyDelay,
+    lambda m: {"loss_prob": _f(m.loss_prob),
+               "inner": delay_to_config(m.inner)},
+    lambda cfg, n=None: LossyDelay(delay_from_config(cfg["inner"], n),
+                                   float(cfg.get("loss_prob", 0.01))))
+
+register_delay_model(
+    "crashed", CrashedDelay,
+    lambda m: {"crashed": np.asarray(m.crashed, bool).astype(int).tolist(),
+               "inner": delay_to_config(m.inner)},
+    lambda cfg, n=None: CrashedDelay(
+        delay_from_config(cfg["inner"], n),
+        jnp.asarray(np.asarray(cfg["crashed"], np.int64) != 0)))

@@ -25,6 +25,7 @@ row versus the same number of scattered acceptors.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, replace
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -40,11 +41,59 @@ from .latency import (CrashedDelay, LossyDelay, ShiftedLognormalDelay,
 
 
 @dataclass(frozen=True)
+class RunSpec:
+    """Execution knobs of a scenario run, carried BY the scenario.
+
+    ``Scenario.run`` / ``summary`` / ``stream`` used to thread the same
+    keywords (samples, chunk, precision, faults, kernel/sharding/k_max
+    switches) three separate ways; a ``RunSpec`` states them once —
+    ``scenario.with_spec(trials=10**7, faults=(0, 3)).stream(key, table)``
+    — and the per-call keywords survive one PR behind a
+    ``DeprecationWarning``.
+
+    ``samples`` sizes materializing runs (``run``/``summary``), ``trials``
+    streamed ones; ``chunk``/``precision`` default to the streaming
+    module's defaults when None.  ``faults`` crashes those acceptor ids
+    for the run (``CrashedDelay``); ``regimes`` (a
+    ``regimes.MarkovRegimes`` or its config dict) Markov-modulates a
+    streamed run through failure epochs (DESIGN.md §12).
+    """
+
+    samples: int = 20000
+    trials: int = 1_000_000
+    chunk: Optional[int] = None
+    precision: Optional[float] = None
+    use_kernel: bool = False
+    shard: bool = True
+    k_max: object = "auto"
+    faults: Tuple[int, ...] = ()
+    regimes: Optional[object] = None
+
+    def merged(self, **overrides) -> "RunSpec":
+        """This spec with every non-None override applied."""
+        kw = {k: v for k, v in overrides.items() if v is not None}
+        return replace(self, **kw) if kw else self
+
+
+def _warn_spec(what: str) -> None:
+    warnings.warn(
+        f"passing {what} per call is deprecated; carry execution knobs in "
+        f"Scenario.spec (a RunSpec — see Scenario.with_spec)",
+        DeprecationWarning, stacklevel=3)
+
+
+# distinguishes "not passed" from an explicit None (k_max=None is the
+# meaningful full-sort reference path)
+_UNSET = object()
+
+
+@dataclass(frozen=True)
 class Scenario:
     """A runnable workload: K proposers at ``offsets_ms`` under ``delay``.
 
     ``conflict_frac`` < 1 mixes in conflict-free commands: the reported
-    per-spec latency distribution is the blend, as in Fig. 2b.
+    per-spec latency distribution is the blend, as in Fig. 2b.  ``spec``
+    carries the execution knobs (``RunSpec``).
     """
 
     name: str
@@ -53,6 +102,16 @@ class Scenario:
     offsets_ms: jax.Array            # (K,)
     delay: object
     conflict_frac: float = 1.0
+    spec: RunSpec = RunSpec()
+
+    def with_spec(self, spec: Optional[RunSpec] = None, **kw) -> "Scenario":
+        """Carry these execution knobs: ``with_spec(trials=10**7)``
+        overrides fields of the current spec; ``with_spec(RunSpec(...))``
+        replaces it outright (then applies any overrides)."""
+        base = self.spec if spec is None else spec
+        if kw:
+            base = replace(base, **kw)
+        return replace(self, spec=base)
 
     def with_faults(self, crashed: Sequence[int]) -> "Scenario":
         """Inject per-acceptor crashes: every hop touching a crashed
@@ -62,17 +121,26 @@ class Scenario:
         return replace(self, delay=CrashedDelay(
             self.delay, _crash_mask(self.n, crashed)))
 
-    def run(self, key: jax.Array, table, samples: int,
-            use_kernel: bool = False) -> Dict[str, jax.Array]:
+    def run(self, key: jax.Array, table, samples: Optional[int] = None,
+            use_kernel: Optional[bool] = None) -> Dict[str, jax.Array]:
         """Evaluate every quorum system in ``table`` (a ``build_mask_table``
         dict — cardinality, grid, weighted and explicit systems all lower to
-        it) over ``samples`` instances.
+        it) over ``spec.samples`` instances.
 
         Returns (M, S)-shaped ``latency_ms`` plus race outcome flags (for the
         racing fraction) — one engine compile per (shape, scenario type)."""
+        if samples is not None or use_kernel is not None:
+            _warn_spec("samples/use_kernel to Scenario.run")
+        return self._run(key, table, self.spec.merged(
+            samples=samples, use_kernel=use_kernel))
+
+    def _run(self, key: jax.Array, table,
+             spec: RunSpec) -> Dict[str, jax.Array]:
+        scen = self.with_faults(spec.faults)
+        samples = spec.samples
         m = table["p1_w"].shape[0]
         if self.k_proposers == 1 or self.conflict_frac == 0.0:
-            lat = engine.fast_path(key, table, self.delay, n=self.n,
+            lat = engine.fast_path(key, table, scen.delay, n=self.n,
                                    samples=samples)
             undecided = lat >= engine.UNDECIDED_MS   # fast path never arrived
             return {"latency_ms": lat, "reached_fast": ~undecided,
@@ -83,59 +151,86 @@ class Scenario:
 
         k_race, k_free = jax.random.split(key)
         n_conf = max(1, int(round(samples * self.conflict_frac)))
-        out = engine.race(k_race, table, self.offsets_ms, self.delay,
+        out = engine.race(k_race, table, self.offsets_ms, scen.delay,
                           n=self.n, k_proposers=self.k_proposers,
-                          samples=n_conf, use_kernel=use_kernel)
+                          samples=n_conf, use_kernel=spec.use_kernel)
         n_free = samples - n_conf
         if n_free > 0:
             scen_free = Scenario(self.name, self.n, 1, self.offsets_ms[:1],
-                                 self.delay)
-            free = scen_free.run(k_free, table, n_free, use_kernel)
+                                 scen.delay)
+            free = scen_free._run(k_free, table,
+                                  replace(spec, samples=n_free, faults=()))
             out = {k: jnp.concatenate([free[k], out[k]], axis=-1)
                    for k in out}
         return out
 
-    def summary(self, key: jax.Array, table, samples: int,
-                use_kernel: bool = False) -> Dict[str, jax.Array]:
+    def summary(self, key: jax.Array, table, samples: Optional[int] = None,
+                use_kernel: Optional[bool] = None) -> Dict[str, jax.Array]:
         """Per-system latency quantiles + outcome rates, each entry (M,).
 
         Quantiles cover *decided* instances only; instances that never
         gathered enough votes (message loss) are reported separately via
         ``undecided_rate`` instead of polluting the distribution with the
         LOST_MS sentinel (``engine.summarize``)."""
-        return engine.summarize(self.run(key, table, samples, use_kernel))
+        if samples is not None or use_kernel is not None:
+            _warn_spec("samples/use_kernel to Scenario.summary")
+        return engine.summarize(self._run(key, table, self.spec.merged(
+            samples=samples, use_kernel=use_kernel)))
 
-    def stream(self, key: jax.Array, table, trials: int, *,
-               chunk: Optional[int] = None, precision: Optional[float] = None,
-               use_kernel: bool = False, shard: bool = True, k_max="auto"):
-        """Streamed evaluation: ``trials`` instances reduced chunk-by-chunk
-        into a fixed-size ``streaming.StreamSummary`` (device memory is one
-        chunk regardless of ``trials``; the trial axis shards over local
-        devices when ``shard``).  A mixed workload streams its racing and
-        conflict-free fractions separately and *merges* the two summaries —
-        sketch merge is exact, so the blend matches a single mixed stream.
+    def stream(self, key: jax.Array, table, trials: Optional[int] = None, *,
+               chunk: Optional[int] = None,
+               precision: Optional[float] = None,
+               use_kernel: Optional[bool] = None,
+               shard: Optional[bool] = None, k_max=_UNSET):
+        """Streamed evaluation: ``spec.trials`` instances reduced
+        chunk-by-chunk into a fixed-size ``streaming.StreamSummary`` (device
+        memory is one chunk regardless of the trial count; the trial axis
+        shards over local devices when ``spec.shard``).  A mixed workload
+        streams its racing and conflict-free fractions separately and
+        *merges* the two summaries — sketch merge is exact, so the blend
+        matches a single mixed stream.
 
-        ``k_max`` selects the sort-free lowering (DESIGN.md §9): "auto"
-        derives per-phase top-k selection depths from the table, ``None``
-        keeps the full-sort reference path; integer outputs are identical.
+        ``spec.k_max`` selects the sort-free lowering (DESIGN.md §9):
+        "auto" derives per-phase top-k selection depths from the table,
+        ``None`` keeps the full-sort reference path; integer outputs are
+        identical.  ``spec.regimes`` Markov-modulates the stream through
+        failure epochs and returns a ``RegimeStreamSummary`` instead
+        (DESIGN.md §12).
         """
+        if (any(v is not None for v in (trials, chunk, precision,
+                                        use_kernel, shard))
+                or k_max is not _UNSET):
+            _warn_spec("trials/chunk/precision/use_kernel/shard/k_max to "
+                       "Scenario.stream")
+        spec = self.spec.merged(trials=trials, chunk=chunk,
+                                precision=precision, use_kernel=use_kernel,
+                                shard=shard)
+        if k_max is not _UNSET:
+            spec = replace(spec, k_max=k_max)
+        return self._stream(key, table, spec)
+
+    def _stream(self, key: jax.Array, table, spec: RunSpec):
         from . import streaming
-        chunk = streaming.DEFAULT_CHUNK if chunk is None else chunk
-        precision = (streaming.DEFAULT_PRECISION if precision is None
-                     else precision)
-        kw = dict(chunk=chunk, precision=precision, shard=shard, k_max=k_max)
+        scen = self.with_faults(spec.faults)
+        trials = spec.trials
+        kw = dict(
+            chunk=(streaming.DEFAULT_CHUNK if spec.chunk is None
+                   else spec.chunk),
+            precision=(streaming.DEFAULT_PRECISION if spec.precision is None
+                       else spec.precision),
+            shard=spec.shard, k_max=spec.k_max, regimes=spec.regimes)
         if self.k_proposers == 1 or self.conflict_frac == 0.0:
-            return streaming.fast_path_stream(key, table, self.delay,
+            return streaming.fast_path_stream(key, table, scen.delay,
                                               n=self.n, trials=trials, **kw)
         k_race, k_free = jax.random.split(key)
         n_conf = max(1, int(round(trials * self.conflict_frac)))
         state = streaming.race_stream(k_race, table, self.offsets_ms,
-                                      self.delay, n=self.n,
+                                      scen.delay, n=self.n,
                                       k_proposers=self.k_proposers,
-                                      trials=n_conf, use_kernel=use_kernel,
-                                      **kw)
+                                      trials=n_conf,
+                                      use_kernel=spec.use_kernel, **kw)
         if trials - n_conf > 0:
-            free = streaming.fast_path_stream(k_free, table, self.delay,
+            free = streaming.fast_path_stream(k_free, table, scen.delay,
                                               n=self.n,
                                               trials=trials - n_conf, **kw)
             state = state.merge(free)

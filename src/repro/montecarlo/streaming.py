@@ -59,6 +59,7 @@ from repro.parallel import sharding as psharding
 from . import engine
 from .engine import MASK_KEYS, UNDECIDED_MS
 from .latency import default_delay
+from .regimes import REGIME_FOLD_DOMAIN, MarkovRegimes, RegimeStreamSummary
 
 DEFAULT_CHUNK = 65536
 DEFAULT_PRECISION = 0.01
@@ -515,24 +516,106 @@ def _race_fused_update(state: StreamSummary, key, table, offsets, delay,
         lat_sum=stats["sum_ms"], lat_max=stats["max_ms"], hist=hist)
 
 
+# ---------------------------------------------------------------------------
+# Markov-modulated regime scan (DESIGN.md §12): the chunk loop sweeps
+# through failure epochs instead of one static environment.
+# ---------------------------------------------------------------------------
+
+def _regime_zeros(regimes: MarkovRegimes, m: int,
+                  precision: float) -> RegimeStreamSummary:
+    """The merge identity: zero occupancy, zero per-regime summaries."""
+    r = regimes.n_regimes
+    z = StreamSummary.zeros(m, precision)
+    return RegimeStreamSummary(
+        names=regimes.names,
+        occupancy=jnp.zeros((r,), jnp.int32),
+        by_regime=jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), z, *([z] * (r - 1))))
+
+
+def _regime_device_stream(key, table, offsets, delay, trials, regimes, *,
+                          path, n, k_proposers, chunk, n_chunks, n_epochs,
+                          precision, use_kernel, k_sat
+                          ) -> RegimeStreamSummary:
+    """One device's chunked scan under a Markov regime chain.
+
+    The chain ``zs`` is sampled up front (``n_epochs`` covers the scan's
+    static trial capacity ``n_chunks * chunk``) from its own fold-in
+    domain, so chunk keys are untouched.  Trial t of THIS device runs in
+    regime ``zs[t // epoch_trials]`` — a pure function of the device key
+    and the absolute trial index, which makes regime assignment (and
+    hence occupancy counts) invariant under the ``chunk`` size.  Each
+    chunk samples hops under the mixed per-trial environment, decides
+    once, and scatters its outcomes into R per-regime ``StreamSummary``
+    slices via the regime-selected validity masks — counts/histograms
+    stay exact integers, so slices merge back to the marginal summary
+    with ``StreamSummary.merge`` bit-for-bit.
+
+    With a single regime the chain is constantly 0 and the mixed delay
+    samples the base model on the unfolded chunk key: draws, decide bits,
+    counts and histograms are bit-identical to the plain i.i.d. stream.
+    """
+    m = table["p1_w"].shape[0]
+    r = regimes.n_regimes
+    ep = regimes.epoch_trials
+    zs = regimes.sequence(
+        jax.random.fold_in(key, jnp.int32(REGIME_FOLD_DOMAIN)), n_epochs)
+
+    def body(carry, i):
+        occ, states = carry
+        k = jax.random.fold_in(key, i)
+        tidx = i * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        valid = tidx < trials
+        rid = zs[jnp.clip(tidx // ep, 0, n_epochs - 1)]
+        out = _chunk_outcomes(path, k, table, offsets,
+                              regimes.mixed_delay(rid), n=n,
+                              k_proposers=k_proposers, chunk=chunk,
+                              use_kernel=use_kernel, k_sat=k_sat)
+        sel = [valid & (rid == j) for j in range(r)]
+        states = tuple(states[j].update(out, sel[j]) for j in range(r))
+        occ = occ + jnp.stack([s.sum() for s in sel]).astype(jnp.int32)
+        return (occ, states), None
+
+    carry0 = (jnp.zeros((r,), jnp.int32),
+              tuple(StreamSummary.zeros(m, precision) for _ in range(r)))
+    (occ, states), _ = jax.lax.scan(body, carry0,
+                                    jnp.arange(n_chunks, dtype=jnp.int32))
+    return RegimeStreamSummary(
+        names=regimes.names, occupancy=occ,
+        by_regime=jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), states[0], *states[1:]))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("path", "n", "k_proposers", "chunk",
-                                    "n_chunks", "precision", "use_kernel",
-                                    "mesh", "k_sat"))
-def _stream(key, table, layout, offsets, delay, trials, *, path, n,
-            k_proposers, chunk, n_chunks, precision, use_kernel, mesh,
-            k_sat):
+                                    "n_chunks", "n_epochs", "precision",
+                                    "use_kernel", "mesh", "k_sat"))
+def _stream(key, table, layout, offsets, delay, trials, regimes, *, path, n,
+            k_proposers, chunk, n_chunks, n_epochs, precision, use_kernel,
+            mesh, k_sat):
     engine.TRACE_COUNTS[path + "_stream"] += 1
     m = table["p1_w"].shape[0]
+    # The fused-kernel and shared-column lowerings assume ONE environment
+    # per chunk; a regime mix is per-trial, so regime runs keep the k_sat
+    # top-k presorts but decide through the generic outcome path (whose
+    # integer outputs are bit-identical by the DESIGN.md §9 contract).
     fused = (path == "race" and use_kernel and "q" not in table
-             and k_sat is not None)
-    card = "q" in table and k_sat is not None
+             and k_sat is not None and regimes is None)
+    card = "q" in table and k_sat is not None and regimes is None
+    if regimes is not None:
+        engine.TRACE_COUNTS[path + "_stream_regimes"] += 1
     if fused:
         engine.TRACE_COUNTS["race_stream_fused"] += 1
     elif k_sat is not None:
         engine.TRACE_COUNTS[path + "_stream_sortfree"] += 1
 
-    def device_stream(key, table, layout, offsets, delay, trials):
+    def device_stream(key, table, layout, offsets, delay, trials, regimes):
+        if regimes is not None:
+            return _regime_device_stream(
+                key, table, offsets, delay, trials, regimes, path=path,
+                n=n, k_proposers=k_proposers, chunk=chunk,
+                n_chunks=n_chunks, n_epochs=n_epochs, precision=precision,
+                use_kernel=use_kernel, k_sat=k_sat)
         def body(state, i):
             k = jax.random.fold_in(key, i)
             valid = jnp.arange(chunk, dtype=jnp.int32) \
@@ -571,11 +654,12 @@ def _stream(key, table, layout, offsets, delay, trials, *, path, n,
         return state
 
     if mesh is None:
-        return device_stream(key, table, layout, offsets, delay, trials)
+        return device_stream(key, table, layout, offsets, delay, trials,
+                             regimes)
 
     ndev = mesh.shape[psharding.TRIAL_AXIS]
 
-    def per_device(key, table, layout, offsets, delay, trials):
+    def per_device(key, table, layout, offsets, delay, trials, regimes):
         # All per-device quantities derive from the GLOBAL device index
         # (process_index * local_count + local_index on a multi-host grid),
         # so any process layout of the same global device count runs the
@@ -595,13 +679,25 @@ def _stream(key, table, layout, offsets, delay, trials, *, path, n,
         state = jax.lax.cond(
             t_d > 0,
             lambda: device_stream(key=k_d, table=table, layout=layout,
-                                  offsets=offsets, delay=delay, trials=t_d),
-            lambda: StreamSummary.zeros(m, precision))
+                                  offsets=offsets, delay=delay, trials=t_d,
+                                  regimes=regimes),
+            lambda: (StreamSummary.zeros(m, precision) if regimes is None
+                     else _regime_zeros(regimes, m, precision)))
+        if regimes is not None:
+            # per-regime slices merge exactly like plain summaries (their
+            # leaves just carry a leading R axis); occupancy is an exact
+            # integer psum.
+            return replace(
+                state,
+                occupancy=jax.lax.psum(state.occupancy,
+                                       psharding.TRIAL_AXIS),
+                by_regime=state.by_regime.axis_merge(psharding.TRIAL_AXIS))
         return state.axis_merge(psharding.TRIAL_AXIS)
 
     return psharding.shard_map(
-        per_device, mesh=mesh, in_specs=(P(), P(), P(), P(), P(), P()),
-        out_specs=P())(key, table, layout, offsets, delay, trials)
+        per_device, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(), P()),
+        out_specs=P())(key, table, layout, offsets, delay, trials, regimes)
 
 
 def _resolve_mesh(shard):
@@ -653,16 +749,21 @@ def _resolve_k_sat(table, k_max, n: int):
 
 
 def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
-                  trials, chunk, precision, use_kernel, shard, k_max="auto"
-                  ) -> StreamSummary:
+                  trials, chunk, precision, use_kernel, shard, k_max="auto",
+                  regimes=None) -> StreamSummary:
     engine._check_mask_table(table, n)
     if trials < 1:
         raise ValueError(f"trials must be >= 1, got {trials}")
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
     sketch_bins(precision)             # validates precision
+    if regimes is not None:
+        if isinstance(regimes, dict):
+            regimes = MarkovRegimes.from_config(regimes, n)
+        regimes = regimes.validate().bound(
+            delay if delay is not None else default_delay())
     mesh = _resolve_mesh(shard)
-    if mesh is None and trials <= chunk:
+    if mesh is None and trials <= chunk and regimes is None:
         # The materializing path IS the T <= chunk special case: same
         # compile as direct engine calls, bit-identical draws, reduced.
         if path == "race":
@@ -684,21 +785,26 @@ def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
     ndev = 1 if mesh is None else mesh.shape[psharding.TRIAL_AXIS]
     per_device = -(-trials // ndev)                # ceil: busiest device
     n_chunks = -(-per_device // chunk)
+    # Regime epochs cover the scan's static per-device trial capacity, so
+    # n_epochs is a pure function of the jit geometry (trials stays traced).
+    n_epochs = (1 if regimes is None
+                else -(-(n_chunks * chunk) // regimes.epoch_trials))
     if delay is None:
         delay = default_delay()
     offsets = (jnp.zeros((1,), jnp.float32) if offsets is None
                else jnp.asarray(offsets, jnp.float32))
     return _stream(key, table, layout, offsets, delay, jnp.int32(trials),
-                   path=path, n=n, k_proposers=k_proposers, chunk=chunk,
-                   n_chunks=n_chunks, precision=precision,
-                   use_kernel=use_kernel, mesh=mesh, k_sat=k_sat)
+                   regimes, path=path, n=n, k_proposers=k_proposers,
+                   chunk=chunk, n_chunks=n_chunks, n_epochs=n_epochs,
+                   precision=precision, use_kernel=use_kernel, mesh=mesh,
+                   k_sat=k_sat)
 
 
 def race_stream(key, table, offsets, delay=None, *, n: int, k_proposers: int,
                 trials: int, chunk: int = DEFAULT_CHUNK,
                 precision: float = DEFAULT_PRECISION,
                 use_kernel: bool = False, shard: bool = True,
-                k_max="auto") -> StreamSummary:
+                k_max="auto", regimes=None) -> StreamSummary:
     """``engine.race`` at any trial count in fixed memory: chunked
     ``lax.scan`` reduction into a ``StreamSummary``, trial axis sharded
     over local devices when ``shard`` (a bool or an explicit 1-D mesh).
@@ -710,34 +816,41 @@ def race_stream(key, table, offsets, delay=None, *, n: int, k_proposers: int,
     bits, histograms, counts and maxima are bit-identical to ``k_max=None``
     (the retained full-sort reference path); only the f32 mean accumulates
     in a different order.  With ``use_kernel`` on masked tables the chunk
-    runs through the raw-arrivals megakernel instead (requires ``k_max``)."""
+    runs through the raw-arrivals megakernel instead (requires ``k_max``).
+
+    ``regimes`` (a ``MarkovRegimes`` or its config dict, DESIGN.md §12)
+    Markov-modulates the stream through failure epochs and returns a
+    ``RegimeStreamSummary`` (per-regime slices + the merged marginal);
+    ``None`` keeps the i.i.d. path bit-identical to previous behaviour."""
     return _stream_entry("race", key, table, delay, offsets, n=n,
                          k_proposers=k_proposers, trials=trials, chunk=chunk,
                          precision=precision, use_kernel=use_kernel,
-                         shard=shard, k_max=k_max)
+                         shard=shard, k_max=k_max, regimes=regimes)
 
 
 def fast_path_stream(key, table, delay=None, *, n: int, trials: int,
                      chunk: int = DEFAULT_CHUNK,
                      precision: float = DEFAULT_PRECISION,
-                     shard: bool = True, k_max="auto") -> StreamSummary:
+                     shard: bool = True, k_max="auto",
+                     regimes=None) -> StreamSummary:
     """Streamed conflict-free fast path (k=1): decided instances count as
-    fast-path commits, lost ones as undecided.  ``k_max`` as in
-    ``race_stream``."""
+    fast-path commits, lost ones as undecided.  ``k_max`` / ``regimes`` as
+    in ``race_stream``."""
     return _stream_entry("fast_path", key, table, delay, None, n=n,
                          k_proposers=1, trials=trials, chunk=chunk,
                          precision=precision, use_kernel=False, shard=shard,
-                         k_max=k_max)
+                         k_max=k_max, regimes=regimes)
 
 
 def classic_path_stream(key, table, delay=None, *, n: int, trials: int,
                         chunk: int = DEFAULT_CHUNK,
                         precision: float = DEFAULT_PRECISION,
-                        shard: bool = True, k_max="auto") -> StreamSummary:
+                        shard: bool = True, k_max="auto",
+                        regimes=None) -> StreamSummary:
     """Streamed leader-relayed classic path: decided instances count as
-    recoveries (there is no fast path to reach).  ``k_max`` as in
-    ``race_stream``."""
+    recoveries (there is no fast path to reach).  ``k_max`` / ``regimes``
+    as in ``race_stream``."""
     return _stream_entry("classic_path", key, table, delay, None, n=n,
                          k_proposers=1, trials=trials, chunk=chunk,
                          precision=precision, use_kernel=False, shard=shard,
-                         k_max=k_max)
+                         k_max=k_max, regimes=regimes)

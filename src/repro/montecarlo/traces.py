@@ -1,0 +1,162 @@
+"""Trace-driven delays: replay a measured latency trace as a quantile table.
+
+Closed-form delay models (``latency.py``) are convenient but every real
+deployment study starts from a *measured* trace — the methodology of
+"The Performance of Paxos and Fast Paxos" (arxiv 1308.1358), which grounds
+its simulations in packet-level RTT measurements.  ``EmpiricalDelay``
+brings that trace into the engine without giving up the engine's core
+contract (one compile per shape, parameters traced):
+
+  fit (host)     ``EmpiricalDelay.from_trace`` compresses a trace of any
+                 length into a FIXED-SIZE quantile grid: ``probs`` is a
+                 uniform CDF grid in [0, 1], ``values_ms[i]`` the trace's
+                 empirical ``probs[i]``-quantile.  The grid size is a
+                 static shape; the grid *contents* are traced leaves, so
+                 swapping one measured trace for another re-enters the
+                 same compile.
+  sample (jit)   inverse-CDF: draw u ~ U[0, 1), locate its bracket with
+                 ``jnp.searchsorted`` over ``probs``, and interpolate
+                 linearly between the bracketing quantile values.  Sampled
+                 quantiles therefore converge to the trace's empirical
+                 quantiles up to the grid's own resolution (1 / (Q - 1)
+                 in probability), which the property tests pin against the
+                 stream sketch's ``precision``.
+
+``EmpiricalDelay`` is a registered pytree with the same ``sample_hops``
+interface as every other model, so it composes with ``LossyDelay`` /
+``CrashedDelay`` wrappers and drops into any ``Scenario`` / ``Workload``
+/ regime environment unchanged.  Loss should be modeled by the wrapper,
+not by baking ``LOST_MS`` sentinels into the trace — interpolation across
+a finite/sentinel bracket would manufacture delays that never occurred
+(``from_trace`` rejects non-finite samples for exactly that reason).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .latency import PROPOSAL
+
+# Default quantile-grid size: 256 points resolve probability to ~0.4%,
+# comfortably below the stream sketch's default 1% relative error, while
+# keeping the lookup table small enough to live in registers/VMEM.
+DEFAULT_GRID = 256
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class EmpiricalDelay:
+    """Inverse-CDF replay of a measured one-way latency trace.
+
+    ``probs``      (Q,) strictly increasing CDF grid, probs[0] = 0 and
+                   probs[-1] = 1 (uniform when built by ``from_trace``)
+    ``values_ms``  (Q,) non-decreasing empirical quantiles of the trace
+
+    Both are traced leaves: refitting to a new trace of the same grid size
+    never recompiles.  Hop ``kind`` is ignored — the trace is a single
+    marginal distribution; topology-aware replay composes a per-regime or
+    per-link ``EmpiricalDelay`` via the regime layer / ``WanDelay``.
+    """
+
+    probs: jax.Array
+    values_ms: jax.Array
+
+    def sample_hops(self, key: jax.Array, shape,
+                    kind: str = PROPOSAL) -> jax.Array:
+        u = jax.random.uniform(key, shape, dtype=jnp.float32)
+        q = self.probs.shape[0]
+        # bracket: probs[j-1] <= u < probs[j]
+        j = jnp.clip(jnp.searchsorted(self.probs, u, side="right"), 1, q - 1)
+        p_lo = self.probs[j - 1]
+        p_hi = self.probs[j]
+        v_lo = self.values_ms[j - 1]
+        v_hi = self.values_ms[j]
+        w = (u - p_lo) / jnp.maximum(p_hi - p_lo, jnp.float32(1e-12))
+        return v_lo + w * (v_hi - v_lo)
+
+    def tree_flatten(self):
+        return (self.probs, self.values_ms), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    # -- host-side construction / validation ------------------------------
+    @classmethod
+    def from_trace(cls, trace_ms: Sequence[float],
+                   n_quantiles: int = DEFAULT_GRID) -> "EmpiricalDelay":
+        """Compress a measured trace (any length >= 1) into a fixed-size
+        quantile grid.  A degenerate single-sample trace yields a constant
+        delay; non-finite samples are rejected (model loss with
+        ``LossyDelay``, not sentinel values in the trace)."""
+        t = np.asarray(trace_ms, np.float64).ravel()
+        if t.size < 1:
+            raise ValueError("trace must contain at least one sample")
+        if not np.all(np.isfinite(t)):
+            raise ValueError(
+                "trace contains non-finite samples; drop them and model "
+                "loss with LossyDelay instead of sentinel delays")
+        if np.any(t < 0):
+            raise ValueError("trace contains negative delays")
+        if n_quantiles < 2:
+            raise ValueError(f"n_quantiles must be >= 2, got {n_quantiles}")
+        probs = np.linspace(0.0, 1.0, n_quantiles)
+        values = np.quantile(t, probs)
+        return cls(probs=jnp.asarray(probs, jnp.float32),
+                   values_ms=jnp.asarray(values, jnp.float32)).validate()
+
+    def validate(self) -> "EmpiricalDelay":
+        """Host-side invariant checks (concrete arrays only): matching 1-D
+        shapes, probs strictly increasing through [0, 1], values monotone
+        non-decreasing."""
+        p = np.asarray(self.probs, np.float64)
+        v = np.asarray(self.values_ms, np.float64)
+        if p.ndim != 1 or p.shape != v.shape or p.size < 2:
+            raise ValueError(
+                f"probs/values_ms must be matching 1-D grids of >= 2 "
+                f"points, got {p.shape} / {v.shape}")
+        if not (np.all(np.diff(p) > 0) and p[0] >= 0.0 and p[-1] <= 1.0):
+            raise ValueError("probs must be strictly increasing within "
+                             "[0, 1]")
+        if np.any(np.diff(v) < 0):
+            raise ValueError("values_ms must be non-decreasing (a quantile "
+                             "function cannot invert)")
+        if not np.all(np.isfinite(v)):
+            raise ValueError("values_ms must be finite; model loss with "
+                             "LossyDelay")
+        return self
+
+    def quantile(self, q) -> jax.Array:
+        """The model's own quantile function (linear interpolation over the
+        grid) — what sampled quantiles converge to."""
+        return jnp.interp(jnp.asarray(q, jnp.float32), self.probs,
+                          self.values_ms)
+
+
+def _empirical_to_config(model: EmpiricalDelay) -> dict:
+    return {"probs": np.asarray(model.probs, np.float64).tolist(),
+            "values_ms": np.asarray(model.values_ms, np.float64).tolist()}
+
+
+def _empirical_from_config(cfg: dict, n=None) -> EmpiricalDelay:
+    cfg = dict(cfg)
+    if "trace_ms" in cfg:           # raw-trace form: fit at load time
+        return EmpiricalDelay.from_trace(
+            cfg["trace_ms"], n_quantiles=int(cfg.get("n_quantiles",
+                                                     DEFAULT_GRID)))
+    return EmpiricalDelay(
+        probs=jnp.asarray(cfg["probs"], jnp.float32),
+        values_ms=jnp.asarray(cfg["values_ms"], jnp.float32)).validate()
+
+
+# registered here (not in latency.py) to keep latency.py import-light;
+# importing repro.montecarlo pulls this module in and completes the
+# registry.
+from .latency import register_delay_model  # noqa: E402
+
+register_delay_model("empirical", EmpiricalDelay,
+                     _empirical_to_config, _empirical_from_config)

@@ -70,6 +70,9 @@ class EngineKey:
     k_sat: Optional[Tuple[int, int, int]]
     use_kernel: bool
     ndev: int
+    # Markov regime modulation changes the lowered scan geometry (R regime
+    # environments, epoch length in trials); (R, epoch_trials) or None.
+    regimes_sig: Optional[Tuple[int, int]] = None
 
 
 def _resolve_ndev(shard) -> int:
@@ -86,12 +89,12 @@ def _resolve_ndev(shard) -> int:
 
 def engine_key(table: Dict, *, n: int, k_proposers: int, trials: int,
                chunk: int, precision: float, shard, use_kernel: bool,
-               k_max) -> EngineKey:
+               k_max, regimes=None) -> EngineKey:
     """Compute the warm-pool key for one scoring query, host-side."""
     sig = tuple(sorted((k, tuple(v.shape), str(v.dtype))
                        for k, v in table.items()))
     ndev = _resolve_ndev(shard)
-    if ndev == 1 and trials <= chunk:
+    if regimes is None and ndev == 1 and trials <= chunk:
         # materializing fallback: ``samples`` itself is the jit static
         return EngineKey(sig, 0, n, k_proposers, chunk, trials,
                          "materialize", precision, None, use_kernel, 1)
@@ -101,8 +104,10 @@ def engine_key(table: Dict, *, n: int, k_proposers: int, trials: int,
         pairs = int(np.unique(np.asarray(table["q"])[:, :2], axis=0).shape[0])
     per_device = -(-trials // ndev)
     n_chunks = -(-per_device // chunk)
+    rsig = (None if regimes is None
+            else (len(regimes.names), int(regimes.epoch_trials)))
     return EngineKey(sig, pairs, n, k_proposers, chunk, n_chunks, "stream",
-                     precision, k_sat, use_kernel, ndev)
+                     precision, k_sat, use_kernel, ndev, rsig)
 
 
 def _delay_token(delay) -> bytes:
@@ -160,8 +165,9 @@ class EngineCache:
               delta_ms: Optional[float] = None, delay=None,
               chunk: Optional[int] = None, precision: Optional[float] = None,
               shard=False, use_kernel: bool = False, k_max="auto",
-              seed: int = 0, axes=None):
+              seed: int = 0, regimes=None, axes=None):
         from repro.frontier import score as fscore
+        from repro.montecarlo.regimes import MarkovRegimes
 
         delta_ms = (fscore.DEFAULT_DELTA_MS if delta_ms is None
                     else delta_ms)
@@ -170,14 +176,16 @@ class EngineCache:
                      else precision)
 
         masks, _, n = fscore._as_masks(list(systems), n)
+        if isinstance(regimes, dict):        # serialized chain: resolve once
+            regimes = MarkovRegimes.from_config(regimes, n)
         table = engine.build_mask_table(masks)
         key = engine_key(table, n=n, k_proposers=k_proposers, trials=trials,
                          chunk=chunk, precision=precision, shard=shard,
-                         use_kernel=use_kernel, k_max=k_max)
+                         use_kernel=use_kernel, k_max=k_max, regimes=regimes)
         labels = tuple(m.label or f"system{i}" for i, m in enumerate(masks))
         fp = self._fingerprint(table, key, labels=labels, trials=trials,
                                seed=seed, delta_ms=delta_ms, delay=delay,
-                               axes=axes)
+                               regimes=regimes, axes=axes)
         hit = self._memo.get(fp)
         if hit is not None:
             self._memo.move_to_end(fp)
@@ -194,7 +202,7 @@ class EngineCache:
             list(systems), trials=trials, n=n, k_proposers=k_proposers,
             delta_ms=delta_ms, delay=delay, chunk=chunk, precision=precision,
             shard=shard, use_kernel=use_kernel, k_max=k_max, seed=seed,
-            axes=axes)
+            regimes=regimes, axes=axes)
         compiles = trace_total() - before
         st = self.stats.setdefault(key, {"queries": 0, "compiles": 0})
         st["queries"] += 1
@@ -209,7 +217,7 @@ class EngineCache:
     # -- internals ---------------------------------------------------------
     def _fingerprint(self, table: Dict, key: EngineKey, *,
                      labels: Tuple[str, ...], trials: int, seed: int,
-                     delta_ms: float, delay, axes) -> bytes:
+                     delta_ms: float, delay, axes, regimes=None) -> bytes:
         h = hashlib.sha256(repr(key).encode())
         h.update(repr((labels, trials, seed, delta_ms)).encode())
         for name in sorted(table):
@@ -217,5 +225,6 @@ class EngineCache:
             h.update(name.encode())
             h.update(arr.tobytes())
         h.update(_delay_token(delay))
+        h.update(_delay_token(regimes))     # content token works per-pytree
         h.update(repr(tuple(axes) if axes is not None else None).encode())
         return h.digest()

@@ -60,10 +60,12 @@ _OBJECTIVES = ("race_p999_ms", "fast_p50_ms", "p_recovery")
 class PlanQuery:
     """One planning request.
 
-    ``workload`` is a ``Workload`` (in-process) or a dict with a ``kind``
-    key naming a ``Workload`` constructor (over the wire), e.g.
-    ``{"kind": "race", "k": 3, "delta_ms": 0.5}`` or
-    ``{"kind": "wan", "inter_region_ms": 30.0}``.  ``faults`` is the
+    ``workload`` is a ``Workload`` (in-process) or, over the wire, any
+    dict ``Workload.from_dict`` accepts: the ``{"kind": ...}`` constructor
+    shorthand (``{"kind": "race", "k": 3, "delta_ms": 0.5}``,
+    ``{"kind": "wan", "inter_region_ms": 30.0}``) or a full serialized
+    ``Workload.to_dict()`` — trace-driven delays and Markov regime chains
+    included.  ``faults`` is the
     minimum crash-budget triple the recommendation must satisfy:
     ``{"fast": 1, "phase1": 2, "classic": 2}`` (missing keys default 0).
     ``objective`` ranks the budget-satisfying frontier members:
@@ -115,9 +117,15 @@ class PlanQuery:
 
 
 def resolve_workload(workload):
-    """None / ``Workload`` / ``{"kind": ...}`` dict -> a ``Workload``.
-    The default is the standard frontier race (2-way, Δ=0.2 ms) — the
-    geometry PR 5's sweep and the scorer's tail axes assume."""
+    """None / ``Workload`` / workload dict -> a ``Workload``.
+
+    Dicts take either form ``Workload.from_dict`` accepts: the
+    ``{"kind": ...}`` constructor shorthand (``{"kind": "race", "k": 3}``)
+    or a full serialized ``Workload.to_dict()`` — so WAN placements, lossy
+    links, trace-driven delays and regime chains all travel over the
+    planner socket as plain JSON.  The default is the standard frontier
+    race (2-way, Δ=0.2 ms) — the geometry PR 5's sweep and the scorer's
+    tail axes assume."""
     from repro.api.experiment import Workload
     from repro.frontier import score as fscore
 
@@ -128,15 +136,7 @@ def resolve_workload(workload):
     if not isinstance(workload, dict):
         raise TypeError(f"workload must be a Workload or a dict, "
                         f"got {type(workload).__name__}")
-    kw = dict(workload)
-    kind = kw.pop("kind", "race")
-    ctors = {"race": Workload.race, "conflict_free": Workload.conflict_free,
-             "mixed": Workload.mixed, "wan": Workload.wan,
-             "lossy": Workload.lossy}
-    if kind not in ctors:
-        raise ValueError(f"unknown workload kind {kind!r}; "
-                         f"pick one of {sorted(ctors)}")
-    return ctors[kind](**kw)
+    return Workload.from_dict(workload)
 
 
 @dataclass
@@ -220,7 +220,9 @@ class Planner:
         precision = (q.precision if q.precision is not None
                      else streaming.DEFAULT_PRECISION)
         return (q.n, q.family, k_eff, d_eff,
-                _delay_token(wl.delay_for(q.n)), q.trials, q.schedule,
+                _delay_token(wl.delay_for(q.n)),
+                _delay_token(wl.regimes_for(q.n)),
+                q.trials, q.schedule,
                 chunk, precision, q.seed, bool(q.shard), q.use_kernel,
                 repr(q.k_max), q.slack)
 
@@ -281,7 +283,8 @@ class Planner:
             delta_ms=wl.delta_ms if racing else fscore.DEFAULT_DELTA_MS,
             delay=wl.delay_for(q.n), chunk=q.chunk, precision=q.precision,
             shard=q.shard, use_kernel=q.use_kernel, k_max=q.k_max,
-            seed=q.seed, slack=q.slack, cache=self.engines)
+            seed=q.seed, slack=q.slack, regimes=wl.regimes_for(q.n),
+            cache=self.engines)
         self._searches[gkey] = sr
         while len(self._searches) > self.search_cache_size:
             self._searches.popitem(last=False)

@@ -80,6 +80,34 @@ def frontier():
     print("}")
 
 
+def regimes():
+    """The 3-regime fixed-seed anchor for tests/test_regimes.py
+    (``REGIME_ANCHOR``): occupancy and decide counts are integer-exact,
+    so any drift means the regime chain's key domain, the epoch->trial
+    mapping, or the per-regime scatter changed.  shard=False: only
+    sharded streams draw device keys, so the anchor is layout-invariant;
+    the chain itself steps from the REGIME_FOLD_DOMAIN sub-key of the
+    per-device key, so a sharded anchor WOULD move with the device grid."""
+    from repro.core.quorum import QuorumSpec
+    from repro.montecarlo import build_mask_table, streaming
+    from repro.montecarlo.regimes import gray_failure
+
+    table = build_mask_table([QuorumSpec.paper_headline(11)])
+    s = streaming.race_stream(
+        jax.random.PRNGKey(42), table, jnp.array([0.0, 0.25], jnp.float32),
+        None, n=11, k_proposers=2, trials=100_000, chunk=16_384,
+        shard=False, regimes=gray_failure(11, epoch_trials=2048))
+    import numpy as np
+    print("REGIME_ANCHOR = {")
+    print(f"    'occupancy': {np.asarray(s.occupancy).tolist()!r},")
+    print(f"    'n_fast': {int(np.asarray(s.n_fast)[0])},")
+    print(f"    'n_recovery': {int(np.asarray(s.n_recovery)[0])},")
+    print(f"    'n_undecided': {int(np.asarray(s.n_undecided)[0])},")
+    print(f"    'p50_ms': {float(np.asarray(s.quantile(0.5))[0]):.6g},")
+    print("}")
+
+
 if __name__ == "__main__":
     montecarlo()
     frontier()
+    regimes()

@@ -203,7 +203,7 @@ def test_lossy_delay_marks_losses():
 def test_conflict_free_scenario_equals_fast_path():
     table = build_mask_table([FFP])
     scen = scenarios.conflict_free(n=11)
-    out = scen.run(KEY, table, 5_000)
+    out = scen.with_spec(samples=5_000).run(KEY, table)
     direct = engine.fast_path(KEY, table, n=11, samples=5_000)
     assert float(jnp.abs(out["latency_ms"] - direct).max()) < 1e-6
     assert not bool(out["recovery"].any())
@@ -211,25 +211,28 @@ def test_conflict_free_scenario_equals_fast_path():
 
 def test_mixed_workload_blend():
     table = build_mask_table([FFP])
-    s = scenarios.mixed_workload(0.01, 0.3, n=11).summary(KEY, table, 20_000)
+    s = scenarios.mixed_workload(0.01, 0.3, n=11).with_spec(
+        samples=20_000).summary(KEY, table)
     assert float(s["p99_ms"][0]) >= float(s["p50_ms"][0]) > 0
     assert 0.0 <= float(s["recovery_rate"][0]) <= 0.01
 
 
 def test_wan_scenario_latency_dominated_by_geography():
     table = build_mask_table([FFP])
-    local = scenarios.conflict_free(n=11).summary(KEY, table, 5_000)
+    local = scenarios.conflict_free(n=11).with_spec(
+        samples=5_000).summary(KEY, table)
     geo = scenarios.wan(n=11, inter_region_ms=30.0)
     geo = Scenario(geo.name, geo.n, 1, geo.offsets_ms[:1], geo.delay)
-    far = geo.summary(KEY, table, 5_000)
+    far = geo.with_spec(samples=5_000).summary(KEY, table)
     assert float(far["p50_ms"][0]) > 10 * float(local["p50_ms"][0])
 
 
 def test_lossy_scenario_increases_recovery():
     table = build_mask_table([FFP])
-    clean = scenarios.k_way_race(2, 0.3, n=11).run(KEY, table, 30_000)
-    lossy = scenarios.lossy_acceptors(0.15, delta_ms=0.3, n=11).run(
-        KEY, table, 30_000)
+    clean = scenarios.k_way_race(2, 0.3, n=11).with_spec(
+        samples=30_000).run(KEY, table)
+    lossy = scenarios.lossy_acceptors(0.15, delta_ms=0.3, n=11).with_spec(
+        samples=30_000).run(KEY, table)
     p_clean = float(clean["recovery"].mean() + clean["undecided"].mean())
     p_lossy = float(lossy["recovery"].mean() + lossy["undecided"].mean())
     assert p_lossy > p_clean + 0.05
@@ -320,7 +323,8 @@ def test_scenario_with_faults_matches_manual_crash_wrap():
 
 def test_grid_wan_scenario_masked_outcomes_partition():
     scen, masks = scenarios.grid_wan(cols=3, k=2, delta_ms=0.3)
-    out = scen.run(KEY, build_mask_table([masks]), 4_000)
+    out = scen.with_spec(samples=4_000).run(
+        KEY, build_mask_table([masks]))
     total = (out["reached_fast"].astype(jnp.int32)
              + out["recovery"].astype(jnp.int32)
              + out["undecided"].astype(jnp.int32))
@@ -338,7 +342,7 @@ def test_weighted_scenario_beats_uniform_on_fast_path():
     equal; sanity-check the masked scenario wiring end-to-end."""
     scen, masks = scenarios.weighted_acceptors(delta_ms=0.3)
     table = build_mask_table([masks, QuorumSpec.fast_paxos(11)])
-    s = scen.summary(KEY, table, 8_000)
+    s = scen.with_spec(samples=8_000).summary(KEY, table)
     assert float(s["p50_ms"][0]) <= float(s["p50_ms"][1]) + 1e-6
     assert float(s["undecided_rate"][0]) == 0.0
 
@@ -347,6 +351,6 @@ def test_weighted_heavy_crash_hurts_more_than_light():
     heavy, masks = scenarios.weighted_acceptors(crashed=(0, 1))   # two 2s
     light, _ = scenarios.weighted_acceptors(crashed=(9, 10))      # two 1s
     table = build_mask_table([masks])
-    s_heavy = heavy.summary(KEY, table, 6_000)
-    s_light = light.summary(KEY, table, 6_000)
+    s_heavy = heavy.with_spec(samples=6_000).summary(KEY, table)
+    s_light = light.with_spec(samples=6_000).summary(KEY, table)
     assert float(s_heavy["p50_ms"][0]) >= float(s_light["p50_ms"][0]) - 1e-6
