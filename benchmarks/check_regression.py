@@ -54,9 +54,9 @@ REL_TOL = 0.30
 # multi-process CPU collectives (and pre-PR-7 baselines don't record it
 # at all); the planner section exists only from PR 8 on and binds a
 # localhost socket for its service round trip, which sandboxed runners
-# may forbid; the regimes section exists only from PR 9 on.  Missing ->
-# warn, never fail.
-OPTIONAL_PREFIXES = ("stream.multihost", "planner", "regimes")
+# may forbid; the regimes section exists only from PR 9 on and the
+# relaxed section from PR 10 on.  Missing -> warn, never fail.
+OPTIONAL_PREFIXES = ("stream.multihost", "planner", "regimes", "relaxed")
 
 
 def _is_timing(name: str) -> bool:

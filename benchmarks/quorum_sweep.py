@@ -25,7 +25,18 @@ agreement of the streamed numbers with the legacy per-spec reference
 below (different implementation, different PRNG stream), and that the
 legacy quorum-size-minimal set is contained in the scored frontier.
 
+``run_relaxed`` (the ``relaxed`` section of ``benchmarks.run``) widens the
+space to Relaxed Paxos (arXiv 2203.03058): the 125 relaxed-valid /
+FFP-invalid triples at n=11 join the 271 FFP systems on ONE streamed
+frontier, scored under both collision-recovery rules (coordinated q2c
+commit vs the uncoordinated q2f rule of arXiv 1710.08047).  It asserts at
+least one relaxed system survives to the joint frontier, that the second
+recovery rule costs exactly one extra ``race_stream`` compile (the fast
+path is rule-invariant and shares its compile), and that fast-path
+latencies are bit-identical across rules.
+
 Usage:  PYTHONPATH=src python -m benchmarks.quorum_sweep [--smoke]
+                                                         [--relaxed]
 """
 from __future__ import annotations
 
@@ -48,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quorum import QuorumSpec, ffp_card_ok
-from repro.frontier import cardinality_family, score_systems
+from repro.frontier import cardinality_family, relaxed_family, score_systems
 from repro.montecarlo import engine
 
 N = 11
@@ -193,9 +204,95 @@ def run(quick: bool = False, seed: int = 0, shard=True):
     return rows
 
 
+def run_relaxed(quick: bool = False, seed: int = 0, shard=True):
+    """Joint FFP + Relaxed frontier under both collision-recovery rules."""
+    trials = TRIALS_SMOKE if quick else TRIALS
+
+    ffp = cardinality_family(N)
+    relaxed = relaxed_family(N)
+    members = ffp + relaxed
+    ffp_count = len(ffp)
+    rows: List[Tuple[str, float]] = [
+        ("relaxed.n_valid_configs", len(relaxed)),
+        ("relaxed.n_joint_systems", len(members)),
+        ("relaxed.trials", trials),
+    ]
+
+    # -- coordinated rule: the whole joint space, one compile per path --
+    t0 = dict(engine.TRACE_COUNTS)
+    wall0 = time.perf_counter()
+    coord = score_systems(members, trials=trials, chunk=CHUNK,
+                          delta_ms=DELTA_MS, shard=shard, seed=seed)
+    jax.block_until_ready(coord.streams["race"].hist)
+    wall = time.perf_counter() - wall0
+    traced = {k: engine.TRACE_COUNTS[k] - t0[k] for k in t0}
+    for k in ("fast_path_stream", "race_stream",
+              "fast_path_stream_sortfree", "race_stream_sortfree"):
+        assert traced[k] == 1, (
+            f"joint sweep expected one {k} trace, got {traced[k]}")
+    rows.append(("relaxed.engine_compiles",
+                 traced["fast_path_stream"] + traced["race_stream"]))
+    rows.append(("relaxed.trials_per_sec", 2.0 * trials / wall))
+
+    front = coord.frontier_indices
+    on_front = [i for i in front if i >= ffp_count]
+    rows.append(("relaxed.n_frontier_systems", len(front)))
+    rows.append(("relaxed.n_relaxed_on_frontier", len(on_front)))
+    # the paper-level claim: relaxing quorum intersection buys points FFP
+    # cannot express — at least one survives the joint Pareto reduction
+    assert on_front, (
+        "no relaxed-valid/FFP-invalid system on the joint frontier")
+    for i in on_front[:3]:
+        row = coord.row(i)
+        tag = coord.labels[i]
+        for axis in ("fast_p50_ms", "race_p999_ms", "p_recovery",
+                     "ft_fast", "ft_phase1", "ft_classic"):
+            rows.append((f"relaxed.[{tag}].{axis}", row[axis]))
+
+    # -- uncoordinated rule: same batch, only the race pass re-lowers --
+    t1 = dict(engine.TRACE_COUNTS)
+    uncoord = score_systems(members, trials=trials, chunk=CHUNK,
+                            delta_ms=DELTA_MS, shard=shard, seed=seed,
+                            recovery="uncoordinated")
+    jax.block_until_ready(uncoord.streams["race"].hist)
+    traced = {k: engine.TRACE_COUNTS[k] - t1[k] for k in t1}
+    assert traced["race_stream"] == 1, (
+        f"uncoordinated rule expected one race_stream trace, got "
+        f"{traced['race_stream']}")
+    assert traced["fast_path_stream"] == 0, (
+        f"fast path is recovery-invariant but re-traced "
+        f"{traced['fast_path_stream']} times")
+    rows.append(("relaxed.uncoord_engine_compiles", traced["race_stream"]))
+
+    # the fast path (and the recovery *entry* condition) must not depend on
+    # the rule; only the recovery tail may move
+    cv, uv = np.asarray(coord.values), np.asarray(uncoord.values)
+    names = list(coord.axis_names)
+    assert np.array_equal(cv[:, names.index("fast_p50_ms")],
+                          uv[:, names.index("fast_p50_ms")])
+    assert np.array_equal(cv[:, names.index("p_recovery")],
+                          uv[:, names.index("p_recovery")])
+    rows.append(("relaxed.rule_invariants_checked", 2))
+
+    # tail reprice: the uncoordinated rule commits recovery at q2f instead
+    # of q2c — report the joint-frontier witness under both rules
+    i = on_front[0]
+    rows.append((f"relaxed.[{coord.labels[i]}].race_p999_ms.uncoordinated",
+                 uncoord.row(i)["race_p999_ms"]))
+    return rows
+
+
 def main(quick: bool = False, shard=True):
     rows = run(quick, shard=shard)
     if jax.process_index() == 0:        # one copy of the CSV per grid
+        for name, val in rows:
+            print(f"{name},{val:.6g}")
+    return rows
+
+
+def main_relaxed(quick: bool = False, shard=True):
+    rows = run_relaxed(quick, shard=shard)
+    if jax.process_index() == 0:
         for name, val in rows:
             print(f"{name},{val:.6g}")
     return rows
@@ -206,6 +303,9 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="10^6 streamed trials instead of 10^7; asserts "
                          "and frontier membership only")
+    ap.add_argument("--relaxed", action="store_true",
+                    help="also run the joint FFP + Relaxed Paxos frontier "
+                         "under both collision-recovery rules")
     ap.add_argument("--shard", action="store_true",
                     help="join the multi-process grid configured via "
                          "REPRO_COORDINATOR/REPRO_NUM_PROCESSES/"
@@ -219,6 +319,11 @@ if __name__ == "__main__":
         # the explicit mesh pins the sweep to ALL global devices and is
         # honored even when only one is visible.
         from repro.parallel import sharding
-        main(quick=args.smoke, shard=sharding.trial_mesh())
+        mesh = sharding.trial_mesh()
+        main(quick=args.smoke, shard=mesh)
+        if args.relaxed:
+            main_relaxed(quick=args.smoke, shard=mesh)
     else:
         main(quick=args.smoke)
+        if args.relaxed:
+            main_relaxed(quick=args.smoke)

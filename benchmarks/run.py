@@ -31,6 +31,11 @@ Sections:
                           end-to-end through Experiment.from_config —
                           throughput, per-regime occupancy split,
                           single-compile discipline
+  relaxed.*               joint FFP + Relaxed Paxos frontier on n=11 under
+                          both collision-recovery rules (DESIGN.md §13):
+                          relaxed systems surviving the joint Pareto
+                          reduction, one extra race compile for the
+                          uncoordinated rule, rule-invariance checks
   kernel.*                per-kernel timing: jnp reference under jit (wall),
                           Pallas interpret-mode parity asserted in tests/
   roofline.*              aggregate of experiments/dryrun/*.json
@@ -459,6 +464,10 @@ def _sections(args):
         from benchmarks import quorum_sweep
         return quorum_sweep.main(quick=q)
 
+    def relaxed(q):
+        from benchmarks import quorum_sweep
+        return quorum_sweep.main_relaxed(quick=q)
+
     def qsys(q):
         from benchmarks import quorum_systems
         return quorum_systems.main(quick=q)
@@ -470,7 +479,8 @@ def _sections(args):
            ("multihost", multihost_benches, False),
            ("frontier", frontier_benches, False),
            ("planner", planner_benches, False),
-           ("regimes", regimes_benches, False)]
+           ("regimes", regimes_benches, False),
+           ("relaxed", relaxed, True)]
     if not args.skip_kernels:
         out.append(("kernels", kernel_benches, False))
     out.append(("roofline", lambda q: roofline_summary(), False))
@@ -484,7 +494,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig2a,fig2b,fig2c,sweep,"
                          "qsys,mc,stream,multihost,frontier,planner,"
-                         "regimes,kernels,roofline")
+                         "regimes,relaxed,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable benchmark record "
                          "(metrics + per-section wall time + compile "

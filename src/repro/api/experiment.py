@@ -29,6 +29,7 @@ and host-side verdicts ride as aux data.
 """
 from __future__ import annotations
 
+import inspect
 import json
 import random
 from dataclasses import dataclass, field, replace
@@ -64,6 +65,27 @@ _FT_MAX_N = 14
 # Workload: backend-independent race geometry + delay model.
 # ---------------------------------------------------------------------------
 
+def _check_workload_keys(cfg: Dict[str, Any], valid: set, what: str) -> None:
+    """Reject unknown top-level keys with the offending names and the valid
+    set — ``cls(**cfg)`` alone would surface a typo as an opaque TypeError
+    deep in the dataclass machinery."""
+    unknown = sorted(set(cfg) - valid)
+    if unknown:
+        raise ValueError(f"unknown {what} key(s) {unknown}; "
+                         f"valid keys: {sorted(valid)}")
+
+
+def _check_delay_config(d) -> None:
+    """Validate serialized delay-model ``kind`` names (recursively through
+    wrapper ``inner`` configs) against the latency registry at parse time."""
+    from repro.montecarlo.latency import delay_kinds
+    while isinstance(d, dict):
+        kind = d.get("kind")
+        if kind not in delay_kinds():
+            raise ValueError(f"unknown delay kind {kind!r}; "
+                             f"known kinds: {delay_kinds()}")
+        d = d.get("inner")
+
 @dataclass(frozen=True)
 class Workload:
     """What the cluster is asked to do, independent of any quorum system.
@@ -77,6 +99,10 @@ class Workload:
     cluster size is known, and ``loss_prob`` wraps the model with i.i.d.
     message loss.  ``regimes`` (a ``MarkovRegimes`` or its config dict)
     Markov-modulates streamed runs through failure epochs (DESIGN.md §12).
+    ``recovery`` picks the collision-recovery rule
+    (``engine.RECOVERY_MODES``): coordinated (the paper's §6 deployment)
+    or uncoordinated (arXiv 1710.08047 — detecting acceptors vote directly
+    in the next fast round).
 
     A workload is declarative data: ``to_dict()`` / ``from_dict()``
     round-trip every constructor — trace-driven delays and regime chains
@@ -94,12 +120,14 @@ class Workload:
     loss_prob: float = 0.0
     des_requests: int = 1200        # DES backend sample count (per system)
     regimes: object = None          # MarkovRegimes | config dict | None
+    recovery: str = "coordinated"   # collision-recovery rule
 
     def __post_init__(self) -> None:
         if self.k_proposers < 1:
             raise ValueError(
                 f"k_proposers must be >= 1 (1 = conflict-free), "
                 f"got {self.k_proposers}")
+        engine._check_recovery(self.recovery)
 
     # -- constructors ------------------------------------------------------
     @classmethod
@@ -156,7 +184,8 @@ class Workload:
                                 else float(self.inter_region_ms)),
             "n_regions": self.n_regions,
             "loss_prob": float(self.loss_prob),
-            "des_requests": self.des_requests, "regimes": regimes}
+            "des_requests": self.des_requests, "regimes": regimes,
+            "recovery": self.recovery}
         defaults = Workload()
         return {k: v for k, v in cfg.items()
                 if v is not None and v != getattr(defaults, k, None)
@@ -168,7 +197,10 @@ class Workload:
         constructor shorthand (``race``/``mixed``/``wan``/``lossy``/
         ``conflict_free`` with that constructor's keywords).  Delay and
         regime configs stay declarative until a cluster size is known
-        (``delay_for`` / ``scenario`` resolve them)."""
+        (``delay_for`` / ``scenario`` resolve them), but their *registry
+        names* are validated here — a typo in a serialized config fails at
+        parse time with the offending key and the valid set, not deep
+        inside a later lowering."""
         cfg = dict(cfg)
         kind = cfg.pop("kind", None)
         if kind is not None:
@@ -177,7 +209,16 @@ class Workload:
             if kind not in ctors:
                 raise ValueError(f"unknown workload kind {kind!r}; "
                                  f"pick one of {sorted(ctors)}")
-            return ctors[kind](**cfg)
+            ctor = ctors[kind]
+            named = [p.name for p in
+                     inspect.signature(ctor).parameters.values()
+                     if p.kind is not inspect.Parameter.VAR_KEYWORD]
+            valid = set(named) | (set(cls.__dataclass_fields__) - {"name"})
+            _check_workload_keys(cfg, valid, f"workload kind {kind!r}")
+            _check_delay_config(cfg.get("delay"))
+            return ctor(**cfg)
+        _check_workload_keys(cfg, set(cls.__dataclass_fields__), "workload")
+        _check_delay_config(cfg.get("delay"))
         return cls(**cfg)
 
     # -- lowering ----------------------------------------------------------
@@ -210,6 +251,7 @@ class Workload:
                                           dtype=jnp.float32)
         scen = Scenario(self.name, n, self.k_proposers, offs,
                         self.delay_for(n), self.conflict_frac)
+        scen = scen.with_spec(recovery=self.recovery)
         regimes = self.regimes_for(n)
         if regimes is not None:
             scen = scen.with_spec(regimes=regimes)
@@ -569,7 +611,7 @@ class Experiment:
     def _des_one(self, system, lat: LatencyModel) -> Dict[str, float]:
         wl = self.workload
         sim = FastPaxosSim(system, latency=lat, seed=self.seed,
-                           crashed=self.faults)
+                           crashed=self.faults, recovery=wl.recovery)
         rng = random.Random(self.seed + 1)
         k = wl.k_proposers
         t = 0.0
@@ -635,11 +677,15 @@ def system_from_config(cfg):
 
       {"kind": "cardinality", "n": 11, "q1": 9, "q2c": 3, "q2f": 7}
       {"kind": "cardinality", "preset": "paper_headline", "n": 11}
+      {"kind": "relaxed", "n": 11, "q1": 5, "q2c": 2, "q2f": 9}
       {"kind": "grid", "cols": 3, "rows": 3, "n": 11}      # n: embed target
       {"kind": "weighted", "weights": [...], "t1": ..., "t2c": ..., "t2f": ...}
     """
     cfg = dict(cfg)
     kind = cfg.pop("kind", "cardinality")
+    if kind == "relaxed":
+        from repro.core.quorum import RelaxedQuorumSpec
+        return RelaxedQuorumSpec(**cfg).validate()
     if kind == "cardinality":
         preset = cfg.pop("preset", None)
         if preset is not None:
@@ -658,7 +704,7 @@ def system_from_config(cfg):
             tuple(int(w) for w in cfg["weights"]), int(cfg["t1"]),
             int(cfg["t2c"]), int(cfg["t2f"])).validate()
     raise ValueError(f"unknown system kind {kind!r}; pick one of "
-                     f"('cardinality', 'grid', 'weighted')")
+                     f"('cardinality', 'relaxed', 'grid', 'weighted')")
 
 
 def sweep(experiment: Experiment, backends: Sequence[str] = BACKENDS
@@ -707,7 +753,7 @@ def frontier(systems: Sequence, workload: Optional[Workload] = None, *,
         precision=(precision if precision is not None
                    else streaming.DEFAULT_PRECISION),
         shard=shard, seed=seed, use_kernel=use_kernel, k_max=k_max,
-        axes=axes, regimes=wl.regimes_for(n))
+        axes=axes, regimes=wl.regimes_for(n), recovery=wl.recovery)
 
 
 # Process-wide planner behind ``plan()``: one warm engine pool + search

@@ -194,7 +194,10 @@ def _successors(st: State, rs: RoundSystem, values, rounds,
                 continue
             p2b = {m[3]: m for m in sent if m[0] == "2b" and m[1] == i}
             for a in range(n):
-                if rnds[a] > i:
+                # TLA+ Phase2b enabling condition for a round-(i+1) vote:
+                # rnd <= i+1 /\ vrnd < i+1 (a promise of i+1 alone does not
+                # disable the vote — mirrors Acceptor.uncoordinated_recovery)
+                if rnds[a] > i + 1 or vrnds[a] >= i + 1:
                     continue
                 for Q in rs.q1_subsets(p2b, i + 1):
                     msgs = [Phase1b(i + 1, i, p2b[b][2], b) for b in Q]

@@ -127,12 +127,27 @@ class RoundSystem:
     def cardinality(self) -> bool:
         return isinstance(self.spec, QuorumSpec)
 
+    def _q1_size(self, rnd: int) -> int:
+        """Phase-1 quorum size of round ``rnd`` (cardinality systems).
+
+        Plain FFP specs use one q1 for every round (§5).  Relaxed Paxos
+        specs (``RelaxedQuorumSpec``) expose ``q1_for``: rounds whose
+        history contains a classic round need the Eq.13-restoring
+        ``q1_full``; rounds above nothing but fast rounds (the steady-state
+        hot path and its first recovery) keep the relaxed ``q1``.
+        """
+        spec = self.spec
+        if hasattr(spec, "q1_for"):
+            return spec.q1_for(any(not self.is_fast(j)
+                                   for j in range(1, rnd)))
+        return spec.q1
+
     # -- quorum sizes (cardinality systems only) ----------------------------
     def q1(self, rnd: int) -> int:          # phase-1 (fast or classic: §5)
         if not self.cardinality:
             raise TypeError("q1() is a cardinality-system accessor; use "
                             "contains_q1()/q1_subsets() for explicit systems")
-        return self.spec.q1
+        return self._q1_size(rnd)
 
     def q2(self, rnd: int) -> int:          # phase-2 depends on round kind
         if not self.cardinality:
@@ -145,7 +160,7 @@ class RoundSystem:
         """Does the set contain (a superset of) some phase-1 quorum?"""
         s = set(acceptors)
         if self.cardinality:
-            return len(s) >= self.spec.q1
+            return len(s) >= self._q1_size(rnd)
         return any(q <= s for q in self.spec.p1)
 
     def contains_q2(self, acceptors: Iterable[int], rnd: int) -> bool:
@@ -163,7 +178,7 @@ class RoundSystem:
         explicit systems, the enumerated quorums contained in the set."""
         avail = sorted(set(available))
         if self.cardinality:
-            yield from itertools.combinations(avail, self.spec.q1)
+            yield from itertools.combinations(avail, self._q1_size(rnd))
             return
         s = set(avail)
         for q in self.spec.p1:
@@ -235,6 +250,21 @@ def pick_values(rs: RoundSystem,
     return set(proposed)
 
 
+def _canonical_key(v: Value) -> Tuple:
+    """Total order over heterogeneous values for deterministic CHOOSE.
+
+    Numbers compare numerically (``repr`` ordered them lexicographically:
+    ``repr(10) < repr(2)``), strings lexicographically, everything else by
+    type name then ``repr``.  The leading rank tag keeps the tuple
+    comparison from ever comparing across types.
+    """
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        if isinstance(v, str):
+            return (1, v)
+        return (2, type(v).__name__, repr(v))
+    return (0, v)
+
+
 def choose_value(picks: Set[Value],
                  counts: Optional[Dict[Value, int]] = None) -> Value:
     """Deterministic CHOOSE over a pick set (prefer concrete over ANY).
@@ -245,12 +275,15 @@ def choose_value(picks: Set[Value],
     does the pick set is a singleton and the preference is inert.  Preferring
     the plurality value is the liveness-optimal recovery heuristic: it is the
     value closest to a phase-2 quorum in the collision round.
+
+    Ties sort by ``(-count, canonical key)`` in one pass — numeric values
+    order numerically, so the choice is stable across value types.
     """
-    concrete = sorted((v for v in picks if v != ANY), key=repr)
+    concrete = [v for v in picks if v != ANY]
     if concrete:
-        if counts:
-            concrete.sort(key=lambda v: -counts.get(v, 0))
-        return concrete[0]
+        tally = counts or {}
+        return min(concrete,
+                   key=lambda v: (-tally.get(v, 0), _canonical_key(v)))
     return ANY
 
 
@@ -299,8 +332,18 @@ class Acceptor:
                                proposed: Set[Value]) -> Optional[Phase2b]:
         """Recover from a round-i collision by voting directly in round i+1
         (must be fast).  ``p1b_msgs`` is P2bToP1b(Q, i) for a phase-1 quorum Q
-        of round i+1."""
-        if not self.rs.is_fast(i + 1) or self.rnd > i:
+        of round i+1.
+
+        The guard mirrors the TLA+ Phase2b enabling condition for a round
+        i+1 vote — ``rnd <= i+1 /\\ vrnd < i+1`` — so an acceptor that
+        already *promised* round i+1 (rnd == i+1 from a Phase1a) can still
+        vote in it; only a vote in i+1 or a promise beyond it disables the
+        action.  (The old ``self.rnd > i`` rejection was strictly tighter
+        than the spec: it silently excluded promised-but-unvoted acceptors,
+        shrinking the recovery quorum for no safety gain.)
+        """
+        if not self.rs.is_fast(i + 1) or self.rnd > i + 1 \
+                or self.vrnd >= i + 1:
             return None
         if not self.rs.is_q1({m.acc for m in p1b_msgs}, i + 1):
             return None

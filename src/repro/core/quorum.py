@@ -101,6 +101,21 @@ def ffp_card_ok(n: int, q1: int, q2c: int, q2f: int) -> bool:
             and q1 + 2 * q2f > 2 * n)                  # Eq.14
 
 
+def relaxed_card_ok(n: int, q1: int, q2c: int, q2f: int) -> bool:
+    """Relaxed Paxos cardinality requirement (arXiv 2203.03058).
+
+    Relaxed Paxos observes that Eq.13 (``q1 + q2c > n``) is only needed by
+    phase 1 of rounds that have a *classic* round below them; the hot-path
+    recovery round (the first round after the steady-state fast round) only
+    needs Eq.14's pair intersection with the fast round.  The per-system
+    requirement therefore drops to Eq.14 alone — ``q2c`` is a free choice —
+    provided later rounds enlarge their phase-1 quorums to
+    ``max(q1, n + 1 - q2c)`` (``RelaxedQuorumSpec.q1_full``), which restores
+    Eq.13 exactly where it is needed.
+    """
+    return 1 <= q2c <= n and q1 + 2 * q2f > 2 * n    # Eq.14 only
+
+
 def ffp_min_q2f(n: int, q1: int) -> int:
     """Smallest valid fast phase-2 quorum for a given phase-1 quorum (Eq.14)."""
     return max(1, (2 * n - q1) // 2 + 1)
@@ -375,6 +390,80 @@ def _combos(n: int, k: int, acceptors: Sequence[Acceptor] | None) -> Iterator[Qu
         yield frozenset(c)
 
 
+@dataclass(frozen=True)
+class RelaxedQuorumSpec(QuorumSpec):
+    """Relaxed Paxos quorum configuration (arXiv 2203.03058).
+
+    Validity is ``relaxed_card_ok`` — Eq.14 alone, so ``q2c`` may drop all
+    the way to 1 even when ``q1 + q2c <= n``.  Safety is preserved by making
+    phase-1 quorum size *per round*: the steady-state fast round and the
+    recovery round directly above it use ``q1`` (they only ever need pair
+    intersection with fast quorums, Eq.14); any round with a classic round
+    below it uses ``q1_full = max(q1, n + 1 - q2c)``, restoring Eq.13 for
+    exactly the rounds whose phase 1 must see a classic round's vote.
+    ``RoundSystem`` consults ``q1_for`` to apply this (the model checker,
+    DES and coordinator all route through it).
+
+    ``to_masks()`` lowers the *hot-path* triple (q1, q2c, q2f) — the fast
+    round plus its first recovery, which is what the Monte-Carlo engine
+    scores — so all-cardinality batches mixing FFP and Relaxed systems
+    share one mask table and one compile.
+    """
+
+    def is_valid(self) -> bool:
+        return relaxed_card_ok(self.n, self.q1, self.q2c, self.q2f)
+
+    def validate(self) -> "RelaxedQuorumSpec":
+        if not self.is_valid():
+            raise ValueError(
+                f"quorum spec violates the Relaxed Paxos requirement: "
+                f"n={self.n} q1={self.q1} q2c={self.q2c} q2f={self.q2f} "
+                f"(need q1+2*q2f>2n)")
+        return self
+
+    @property
+    def q1_full(self) -> int:
+        """Phase-1 size for rounds with a classic round below (Eq.13)."""
+        return max(self.q1, self.n + 1 - self.q2c)
+
+    def q1_for(self, classic_below: bool) -> int:
+        """Per-round phase-1 quorum size — the relaxation's whole trick."""
+        return self.q1_full if classic_below else self.q1
+
+    def check_sets(self) -> bool:
+        """Relaxed set-level requirement: hot-path phase-1 quorums triple-
+        intersect fast-quorum pairs (Eq.12); *full* phase-1 quorums meet
+        every classic quorum (Eq.11)."""
+        p1_hot = list(self.phase1_quorums())
+        p1_full = list(_combos(self.n, self.q1_full, None))
+        p2c = list(self.phase2c_quorums())
+        p2f = list(self.phase2f_quorums())
+        return (pairwise_intersect(p1_full, p2c)
+                and triple_intersect(p1_hot, p2f, p2f))
+
+    def to_explicit(self) -> "ExplicitQuorumSystem":
+        raise TypeError(
+            "RelaxedQuorumSpec has per-round phase-1 quorums (q1 on the hot "
+            "path, q1_full above classic rounds); a flat ExplicitQuorumSystem "
+            "cannot represent that — keep the cardinality spec (RoundSystem, "
+            "the DES and the model checker all consume it directly)")
+
+    def fault_tolerance(self) -> dict:
+        """Crash budgets with the per-round phase-1 relaxation priced in:
+        ``phase1`` reports the *guaranteed* budget ``n - q1_full`` — once a
+        classic round has run, every later phase 1 needs ``q1_full``
+        acceptors, so that is the size the system must always be able to
+        form.  The hot-path detection quorum stays ``q1`` (it shows up in
+        the latency axes instead)."""
+        ft = super().fault_tolerance()
+        ft["phase1"] = self.n - self.q1_full
+        return ft
+
+    @property
+    def label(self) -> str:
+        return f"relaxed[{self.q1},{self.q2c},{self.q2f}]"
+
+
 # ---------------------------------------------------------------------------
 # Explicit (non-cardinality) quorum systems — §6 "quorum systems that are not
 # based solely on quorum cardinality".  These exercise the *set-level*
@@ -536,3 +625,14 @@ def all_valid_specs(n: int) -> Iterator[QuorumSpec]:
         for q2c in range(ffp_min_q2c(n, q1), n + 1):
             for q2f in range(ffp_min_q2f(n, q1), n + 1):
                 yield QuorumSpec(n, q1, q2c, q2f)
+
+
+def all_relaxed_specs(n: int) -> Iterator[RelaxedQuorumSpec]:
+    """Every Relaxed-Paxos-valid cardinality spec (Eq.14 only) that FFP
+    Eq.13 *rejects* — the systems the relaxation newly admits.  (A triple
+    that also satisfies Eq.13 behaves identically to its FFP ``QuorumSpec``
+    — ``q1_full == q1`` — so only the strictly-new points are yielded.)"""
+    for q1 in range(1, n + 1):
+        for q2f in range(ffp_min_q2f(n, q1), n + 1):
+            for q2c in range(1, ffp_min_q2c(n, q1)):
+                yield RelaxedQuorumSpec(n, q1, q2c, q2f)

@@ -20,6 +20,13 @@ The simulated deployment matches §6's steady state:
   picks a value per ``IsPickableVal`` from the round-i votes reinterpreted as
   round-i+1 phase-1b messages, and commits it in a classic round with q2c.
 
+``recovery="uncoordinated"`` swaps the collision path for the leaderless
+rule (arXiv 1710.08047): acceptors broadcast their round-1 votes to each
+other, and each acceptor that can locally prove the fast round dead over a
+phase-1 quorum of observed votes runs ``Acceptor.uncoordinated_recovery``
+— voting directly in (fast) round 2 — so the learner commits once q2f
+round-2 votes agree, skipping the coordinator round trip.
+
 Node and protocol behaviour comes from ``repro.core.protocol`` — the same
 state machines validated by the model checker.
 """
@@ -124,19 +131,35 @@ class InstanceResult:
         return self.decide_time - self.submit_time
 
 
+RECOVERY_MODES = ("coordinated", "uncoordinated")
+
+
 class FastPaxosSim:
     """One simulated cluster running either Fast Paxos or Fast Flexible Paxos
     (the difference is purely the quorum system).  ``spec`` may be any
     ``QuorumSystem`` — a cardinality ``QuorumSpec``, an
     ``ExplicitQuorumSystem`` (grid, hand-built, ...), or a system lowered
     through ``to_explicit()`` (e.g. ``WeightedQuorumSystem``): all quorum
-    checks route through the set-level ``RoundSystem`` predicates."""
+    checks route through the set-level ``RoundSystem`` predicates.
+
+    ``recovery`` selects the collision rule: ``"coordinated"`` (default)
+    routes recovery through the coordinator's classic round 2 (q2c),
+    ``"uncoordinated"`` lets acceptors vote directly in a fast round 2
+    (q2f) from their own peer-broadcast view of round 1."""
 
     def __init__(self, spec: "QuorumSpec | ExplicitQuorumSystem",
                  latency: LatencyModel | None = None,
-                 seed: int = 0, crashed: Sequence[int] = ()) -> None:
+                 seed: int = 0, crashed: Sequence[int] = (),
+                 recovery: str = "coordinated") -> None:
+        if recovery not in RECOVERY_MODES:
+            raise ValueError(f"unknown recovery rule {recovery!r}; "
+                             f"pick one of {RECOVERY_MODES}")
+        self.recovery = recovery
         self.spec = spec.validate()
-        self.rs = RoundSystem(spec, n_coordinators=1, fast_rounds="odd")
+        # Uncoordinated recovery votes happen *in* round 2, so round 2 must
+        # be fast there; the coordinated path keeps the classic round 2.
+        fast_rounds = "all" if recovery == "uncoordinated" else "odd"
+        self.rs = RoundSystem(spec, n_coordinators=1, fast_rounds=fast_rounds)
         self.lat = latency or LatencyModel()
         self.rng = random.Random(seed)
         self.loop = EventLoop()
@@ -149,6 +172,13 @@ class FastPaxosSim:
         self.results: Dict[Tuple[int, object], InstanceResult] = {}
         self.recovery_entries = 0
         self.fast_decides = 0
+        # Uncoordinated-mode state: per-acceptor view of peer round-1 votes,
+        # per-acceptor set of instances already recovered in round 2, and the
+        # set of instances counted in ``recovery_entries``.
+        self.peer_seen: List[Dict[int, Dict[int, object]]] = \
+            [dict() for _ in range(self.n)]
+        self.uncoord_voted: List[Set[int]] = [set() for _ in range(self.n)]
+        self._rec_instances: Set[int] = set()
 
     # -- client API ----------------------------------------------------------
     def submit(self, t: float, instance: int, value: object, proposer: int = 0) -> None:
@@ -172,11 +202,70 @@ class FastPaxosSim:
         votes = self.acc_vote[a]
         if instance in votes:           # already voted in round 1 of this slot
             return
+        if instance in self.uncoord_voted[a]:
+            return                      # already voted round 2 (vrnd = 2 > 1)
         votes[instance] = value
+        d = self.lat.sample(self.rng)
+        if d is not None:
+            self.loop.after(d, lambda: self._coord_recv_2b(instance, 1, a, value))
+        if self.recovery == "uncoordinated":
+            # 2b goes to the peer acceptors too (one-way each); the voter
+            # observes its own vote immediately.
+            self._acceptor_recv_peer_2b(a, instance, a, value)
+            for b in range(self.n):
+                if b == a or b in self.crashed:
+                    continue
+                d = self.lat.sample(self.rng)
+                if d is None:
+                    continue
+                self.loop.after(d, lambda b=b: self._acceptor_recv_peer_2b(
+                    b, instance, a, value))
+
+    # -- uncoordinated recovery (acceptor side) -------------------------------
+    def _acceptor_recv_peer_2b(self, b: int, instance: int, a: int,
+                               value: object) -> None:
+        seen = self.peer_seen[b].setdefault(instance, {})
+        if a in seen:
+            return
+        seen[a] = value
+        self._maybe_uncoord_recover(b, instance)
+
+    def _fast_round_dead(self, seen: Dict[int, object]) -> bool:
+        """Local collision proof: no value can reach a fast round-1 quorum
+        even if every acceptor this view is missing voted for it (the same
+        predicate as ``Learner.collision_suspected``, over a peer view)."""
+        by_val: Dict[object, Set[int]] = {}
+        for acc, val in seen.items():
+            by_val.setdefault(val, set()).add(acc)
+        if len(by_val) <= 1:
+            return False
+        outstanding = set(range(self.n)) - set(seen)
+        return not any(self.rs.contains_q2(accs | outstanding, 1)
+                       for accs in by_val.values())
+
+    def _maybe_uncoord_recover(self, b: int, instance: int) -> None:
+        """UncoordRecovery(b): once acceptor b's peer view holds a round-2
+        phase-1 quorum of round-1 votes and proves the fast round dead, b
+        picks per ``IsPickableVal`` and votes directly in (fast) round 2."""
+        if instance in self.uncoord_voted[b]:
+            return
+        seen = self.peer_seen[b][instance]
+        if not self.rs.contains_q1(seen, 2) or not self._fast_round_dead(seen):
+            return
+        acc = Acceptor(b, self.rs, rnd=1, vrnd=1, vval=self.acc_vote[b][instance]) \
+            if instance in self.acc_vote[b] else Acceptor(b, self.rs)
+        msgs = [Phase1b(2, 1, v, a) for a, v in seen.items()]
+        m2b = acc.uncoordinated_recovery(1, msgs, set(seen.values()))
+        if m2b is None:
+            return
+        self.uncoord_voted[b].add(instance)
+        if instance not in self._rec_instances:
+            self._rec_instances.add(instance)
+            self.recovery_entries += 1
         d = self.lat.sample(self.rng)
         if d is None:
             return
-        self.loop.after(d, lambda: self._coord_recv_2b(instance, 1, a, value))
+        self.loop.after(d, lambda: self._coord_recv_2b(instance, 2, b, m2b.val))
 
     # -- coordinator / learner --------------------------------------------------
     def _inst(self, instance: int) -> InstanceState:
@@ -200,7 +289,8 @@ class FastPaxosSim:
                 self.fast_decides += 1
             self._finalize(instance, ist, outcome="fast" if rnd == 1 else "recovered")
             return
-        if rnd == 1 and not ist.recovery_sent and ist.learner.collision_suspected(1):
+        if rnd == 1 and self.recovery == "coordinated" \
+                and not ist.recovery_sent and ist.learner.collision_suspected(1):
             self._start_recovery(instance, ist)
 
     def _start_recovery(self, instance: int, ist: InstanceState) -> None:

@@ -20,7 +20,7 @@ Front doors: ``repro.api.frontier(...)`` and ``Experiment.frontier()``.
 """
 from . import families, pareto, score  # noqa: F401
 from .families import (Member, all_families, cardinality_family,  # noqa: F401
-                       family, grid_family, weighted_family)
+                       family, grid_family, relaxed_family, weighted_family)
 from .pareto import (Axis, FrontierResult, dominates,  # noqa: F401
                      maximal_mask, pareto_mask, quantize)
 from .score import default_axes, score_systems  # noqa: F401

@@ -25,8 +25,8 @@ from dataclasses import dataclass, replace
 from typing import Iterator, List, Optional, Sequence
 
 from repro.core.quorum import (ExplicitQuorumSystem, QuorumMasks, QuorumSpec,
-                               WeightedQuorumSystem, all_valid_specs,
-                               ffp_card_ok)
+                               WeightedQuorumSystem, all_relaxed_specs,
+                               all_valid_specs, ffp_card_ok, relaxed_card_ok)
 
 
 @dataclass(frozen=True)
@@ -60,6 +60,29 @@ def cardinality_family(n: int) -> List[Member]:
     out = []
     for spec in all_valid_specs(n):
         assert ffp_card_ok(n, spec.q1, spec.q2c, spec.q2f)
+        out.append(Member(spec.label, spec))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Relaxed Paxos (arXiv 2203.03058): Eq.14 alone, per-round phase-1 sizes.
+# ---------------------------------------------------------------------------
+
+def relaxed_family(n: int) -> List[Member]:
+    """Every Relaxed-Paxos-valid cardinality triple that FFP Eq.13
+    *rejects* — the systems the relaxation newly admits (125 at n=11), in
+    deterministic (q1, q2f, q2c) order.  Triples that also satisfy Eq.13
+    coincide with their FFP ``QuorumSpec`` (``q1_full == q1``) and already
+    live in ``cardinality_family``, so a joint sweep over both families
+    never scores the same system twice.  Members are
+    ``RelaxedQuorumSpec``s: safety comes from per-round phase-1 quorums
+    (``q1_full`` above classic rounds), model-checked clean at n <= 5; the
+    lowered masks carry the hot-path (q1, q2c, q2f) triple the engine
+    scores, so FFP + relaxed batches share one compile."""
+    out = []
+    for spec in all_relaxed_specs(n):
+        assert relaxed_card_ok(n, spec.q1, spec.q2c, spec.q2f)
+        assert not ffp_card_ok(n, spec.q1, spec.q2c, spec.q2f)
         out.append(Member(spec.label, spec))
     return out
 
@@ -117,13 +140,15 @@ def weighted_family(n: int, heavy_counts: Sequence[int] = (1, 2, 3),
 # Combined enumeration.
 # ---------------------------------------------------------------------------
 
-FAMILIES = ("cardinality", "grid", "weighted")
+FAMILIES = ("cardinality", "relaxed", "grid", "weighted")
 
 
 def family(name: str, n: int) -> List[Member]:
     """Enumerate one family by name."""
     if name == "cardinality":
         return cardinality_family(n)
+    if name == "relaxed":
+        return relaxed_family(n)
     if name == "grid":
         return grid_family(n)
     if name == "weighted":

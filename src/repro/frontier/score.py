@@ -115,6 +115,7 @@ def score_systems(systems: Sequence, *,
                   k_max="auto",
                   seed: int = 0,
                   regimes=None,
+                  recovery: str = "coordinated",
                   axes: Optional[Sequence[Axis]] = None) -> FrontierResult:
     """Score a family batch and return its Pareto frontier.
 
@@ -137,6 +138,10 @@ def score_systems(systems: Sequence, *,
     stream passes through Markov failure epochs; the scored axes then
     read the regime-merged totals, so the frontier prices the *mixture*
     the workload declares rather than a single i.i.d. environment.
+
+    ``recovery`` selects the collision-recovery rule priced by the race
+    pass (``engine.RECOVERY_MODES``); ``p_recovery`` is rule-invariant (the
+    entry condition is), but the tail axis re-prices q2c vs q2f.
     """
     masks, native, n = _as_masks(systems, n)
     labels = tuple(m.label or f"system{i}" for i, m in enumerate(masks))
@@ -156,7 +161,8 @@ def score_systems(systems: Sequence, *,
                                  k_proposers=k_proposers, trials=trials,
                                  chunk=chunk, precision=precision,
                                  use_kernel=use_kernel, shard=shard,
-                                 k_max=k_max, regimes=regimes)
+                                 k_max=k_max, regimes=regimes,
+                                 recovery=recovery)
 
     fast_p50 = np.asarray(fast.quantile(0.5), np.float64)
     race_p999 = np.asarray(race.quantile(0.999), np.float64)

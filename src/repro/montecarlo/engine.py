@@ -252,8 +252,27 @@ def _counts_winner(votes: jax.Array, k_proposers: int, use_kernel: bool):
     return counts, winner, max_cnt
 
 
+# Collision-recovery rules (arXiv 1710.08047): ``coordinated`` is the
+# paper's §6 deployment — the coordinator detects the collision from the
+# round-1 2bs (phase-1 quorum q1) and commits classically with a q2c quorum
+# of round trips.  ``uncoordinated`` lets the acceptors themselves detect
+# (same q1-th observation) and vote directly in the next *fast* round, so
+# the learner needs a q2f quorum of one-way round-2 votes — no coordinator
+# round trip.  The entry condition (fast path failed) is identical, so
+# P(recovery) matches across rules; only the recovery *latency* model
+# changes: threshold column q2c -> q2f and classic leg d_2a+d_2b -> d_2b.
+RECOVERY_MODES = ("coordinated", "uncoordinated")
+
+
+def _check_recovery(recovery: str) -> None:
+    if recovery not in RECOVERY_MODES:
+        raise ValueError(f"unknown recovery rule {recovery!r}; "
+                         f"pick one of {RECOVERY_MODES}")
+
+
 def _draw_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
-               k_proposers: int, samples: int) -> Dict:
+               k_proposers: int, samples: int,
+               recovery: str = "coordinated") -> Dict:
     """Raw race draws: RNG + vote structure only, nothing sorted.
 
     The presorting lowerings (``_sample_race``) and the raw-arrivals
@@ -281,11 +300,14 @@ def _draw_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
     val_arr = jnp.where(votes[:, None, :] == jnp.arange(K)[None, :, None],
                         arrive[:, None, :], BIG)                  # (S, K, n)
 
-    # coordinated recovery: one classic round trip after phase-1 votes are
-    # seen.
+    # recovery commit leg after detection.  Coordinated: one classic round
+    # trip (2a out + 2b back).  Uncoordinated: the detecting acceptors vote
+    # directly in the next fast round, so only the one-way 2b leg to the
+    # learner remains.  Both legs are always drawn (same 4-way key split),
+    # so the coordinated draws are bit-identical across modes.
     d_2a = delay.sample_hops(k2a, (samples, n), lat_mod.FROM_COORDINATOR)
     d_2b = delay.sample_hops(k2b, (samples, n), lat_mod.TO_COORDINATOR)
-    classic = d_2a + d_2b
+    classic = d_2b if recovery == "uncoordinated" else d_2a + d_2b
     classic = jnp.where(classic < UNDECIDED_MS, classic, BIG)
 
     return {"votes": votes, "arrive": arrive, "val_arr": val_arr,
@@ -295,7 +317,8 @@ def _draw_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
 def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
                  k_proposers: int, samples: int, use_kernel: bool,
                  k_sat: Optional[Tuple[int, int, int]] = None,
-                 need_perms: bool = True) -> Dict:
+                 need_perms: bool = True,
+                 recovery: str = "coordinated") -> Dict:
     """Draw one race per sample and presort everything system-independent.
 
     ``k_sat = (k1, k2c, k2f)`` (static, from ``saturation_depths``) switches
@@ -303,12 +326,18 @@ def _sample_race(key: jax.Array, offsets: jax.Array, delay, *, n: int,
     downstream gather / saturation only ever reads within the prefix, so
     results are bit-identical to the full sort (``None``, the reference
     path).  ``need_perms=False`` drops the permutations for lowerings that
-    consume order statistics only (the cardinality specialization)."""
+    consume order statistics only (the cardinality specialization).
+
+    Under ``recovery="uncoordinated"`` the classic leg holds one-way 2b
+    hops and its commit threshold is q2f, so the classic presort deepens to
+    the k2f prefix (the recovery saturation reads up to position q2f)."""
     raw = _draw_race(key, offsets, delay, n=n, k_proposers=k_proposers,
-                     samples=samples)
+                     samples=samples, recovery=recovery)
     counts, winner, max_cnt = _counts_winner(raw["votes"], k_proposers,
                                              use_kernel)
     k1, k2c, k2f = k_sat if k_sat is not None else (None, None, None)
+    if recovery == "uncoordinated":
+        k2c = k2f
     out = {
         "counts": counts,                                # (S, K) int32
         "winner": winner,                                # (S,) int32
@@ -347,9 +376,13 @@ def _win_sorted(draws: Dict) -> jax.Array:
         axis=1)[:, 0, :]
 
 
-def _decide(draws: Dict, win_sorted: jax.Array, q1: jax.Array, q2c: jax.Array,
+def _decide(draws: Dict, win_sorted: jax.Array, q1: jax.Array, q_rec: jax.Array,
             q2f: jax.Array) -> Dict[str, jax.Array]:
-    """Apply one (traced) threshold triple to presorted draws: gathers only."""
+    """Apply one (traced) threshold triple to presorted draws: gathers only.
+
+    ``q_rec`` is the recovery-commit threshold — q2c under coordinated
+    recovery (classic round trips), q2f under uncoordinated (one-way round-2
+    votes); the caller picks the column to match the classic-leg draws."""
     winner = draws["winner"]
     t_fast = _kth(win_sorted, q2f)                                # (S,)
     # a fast commit needs q2f acceptor *votes* AND the learner actually
@@ -358,7 +391,7 @@ def _decide(draws: Dict, win_sorted: jax.Array, q1: jax.Array, q2c: jax.Array,
     fast_ok = (draws["max_cnt"] >= q2f) & (t_fast < UNDECIDED_MS)
 
     t_detect = _kth(draws["sorted_arrive"], q1)
-    t_recover = t_detect + _kth(draws["sorted_classic"], q2c)
+    t_recover = t_detect + _kth(draws["sorted_classic"], q_rec)
 
     latency = jnp.where(fast_ok, t_fast, t_recover)
     undecided = latency >= UNDECIDED_MS
@@ -430,13 +463,15 @@ def _masked_vote_winner(votes: jax.Array, mask_table: Dict[str, jax.Array],
 
 
 def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
-                   winner: jax.Array,
-                   reached_votes: jax.Array) -> Dict[str, jax.Array]:
+                   winner: jax.Array, reached_votes: jax.Array,
+                   rec_phase: str = "p2c") -> Dict[str, jax.Array]:
     """Apply one system's (traced) quorum masks to the presorted draws.
 
     Mirrors ``_decide`` exactly, with each k-th-order-statistic gather
     replaced by a masked saturation over the system's quorum rows; on
-    cardinality-encoded masks the two paths are bit-identical.
+    cardinality-encoded masks the two paths are bit-identical.  ``rec_phase``
+    (static) names the recovery-commit quorum phase — "p2c" (coordinated) or
+    "p2f" (uncoordinated), matching the classic-leg draws.
     """
     widx = jnp.clip(winner, 0, draws["sorted_val_arrive"].shape[1] - 1)
     win_sorted = jnp.take_along_axis(
@@ -453,7 +488,8 @@ def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
                          masks["p1_w"], masks["p1_t"])
     t_recover = t_detect + _sat_time(draws["sorted_classic"],
                                      draws["perm_classic"],
-                                     masks["p2c_w"], masks["p2c_t"])
+                                     masks[rec_phase + "_w"],
+                                     masks[rec_phase + "_t"])
 
     latency = jnp.where(fast_ok, t_fast, t_recover)
     undecided = latency >= UNDECIDED_MS
@@ -476,8 +512,8 @@ def _decide_masked(draws: Dict, masks: Dict[str, jax.Array],
 def _race_outcomes(key: jax.Array, table: Dict[str, jax.Array],
                    offsets: jax.Array, delay, *, n: int, k_proposers: int,
                    samples: int, use_kernel: bool,
-                   k_sat: Optional[Tuple[int, int, int]] = None
-                   ) -> Dict[str, jax.Array]:
+                   k_sat: Optional[Tuple[int, int, int]] = None,
+                   recovery: str = "coordinated") -> Dict[str, jax.Array]:
     """One full race evaluation: sample + presort once, decide per system.
     ``k_sat`` (static) presorts top-k prefixes instead of full sorts —
     bit-identical when it upper-bounds the table's saturation depths
@@ -486,32 +522,35 @@ def _race_outcomes(key: jax.Array, table: Dict[str, jax.Array],
         delay = default_delay()
     draws = _sample_race(key, offsets, delay, n=n, k_proposers=k_proposers,
                          samples=samples, use_kernel=use_kernel, k_sat=k_sat,
-                         need_perms="q" not in table)
+                         need_perms="q" not in table, recovery=recovery)
+    rec_col = 1 if recovery == "coordinated" else 2
     if "q" in table:            # cardinality specialization: gathers only
         win_sorted = _win_sorted(draws)
-        return jax.vmap(lambda q: _decide(draws, win_sorted, q[0], q[1],
+        return jax.vmap(lambda q: _decide(draws, win_sorted, q[0], q[rec_col],
                                           q[2]))(table["q"])
     winner, reached = _masked_vote_winner(draws["votes"], table,
                                           k_proposers, use_kernel)
     masks = {k: table[k] for k in MASK_KEYS}
-    return jax.vmap(lambda m, w, r: _decide_masked(draws, m, w, r),
+    rec_phase = "p2c" if recovery == "coordinated" else "p2f"
+    return jax.vmap(lambda m, w, r: _decide_masked(draws, m, w, r, rec_phase),
                     in_axes=(0, 1, 1))(masks, winner, reached)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "k_proposers", "samples",
-                                             "use_kernel"))
+                                             "use_kernel", "recovery"))
 def _race(key: jax.Array, table: Dict[str, jax.Array], offsets: jax.Array,
           delay, *, n: int, k_proposers: int, samples: int,
-          use_kernel: bool) -> Dict[str, jax.Array]:
+          use_kernel: bool,
+          recovery: str = "coordinated") -> Dict[str, jax.Array]:
     TRACE_COUNTS["race"] += 1
     return _race_outcomes(key, table, offsets, delay, n=n,
                           k_proposers=k_proposers, samples=samples,
-                          use_kernel=use_kernel)
+                          use_kernel=use_kernel, recovery=recovery)
 
 
 def race(key: jax.Array, table, offsets: jax.Array, delay=None, *, n: int,
-         k_proposers: int, samples: int,
-         use_kernel: bool = False) -> Dict[str, jax.Array]:
+         k_proposers: int, samples: int, use_kernel: bool = False,
+         recovery: str = "coordinated") -> Dict[str, jax.Array]:
     """K proposals race for one instance, scored under M quorum systems at
     once.
 
@@ -524,17 +563,23 @@ def race(key: jax.Array, table, offsets: jax.Array, delay=None, *, n: int,
              (M, 3) threshold array is still accepted but deprecated.
     offsets  (K,) proposer submission times in ms (traced)
     delay    a ``repro.montecarlo.latency`` model (traced pytree)
+    recovery collision-recovery rule (static): "coordinated" (classic q2c
+             round trip, the default) or "uncoordinated" (q2f one-way
+             round-2 votes, arXiv 1710.08047).  The fast path and the
+             recovery *entry* condition are identical across rules — only
+             the recovery commit latency changes.
 
     Returns per-system-per-sample arrays, each (M, S):
       fast_winner   proposer id that won on the fast path, -1 otherwise
       reached_fast  some value gathered a full fast phase-2 quorum of votes
-      recovery      coordinated recovery decided the instance
+      recovery      collision recovery decided the instance
       undecided     not enough votes ever arrived (message loss)
       latency_ms    decision latency from proposer 0's submission
     """
     _check_mask_table(table, n)
+    _check_recovery(recovery)
     return _race(key, table, offsets, delay, n=n, k_proposers=k_proposers,
-                 samples=samples, use_kernel=use_kernel)
+                 samples=samples, use_kernel=use_kernel, recovery=recovery)
 
 
 def _fast_path_draws(key: jax.Array, delay, n: int,

@@ -25,7 +25,6 @@ row versus the same number of scattered acceptors.
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass, replace
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -44,19 +43,17 @@ from .latency import (CrashedDelay, LossyDelay, ShiftedLognormalDelay,
 class RunSpec:
     """Execution knobs of a scenario run, carried BY the scenario.
 
-    ``Scenario.run`` / ``summary`` / ``stream`` used to thread the same
-    keywords (samples, chunk, precision, faults, kernel/sharding/k_max
-    switches) three separate ways; a ``RunSpec`` states them once —
-    ``scenario.with_spec(trials=10**7, faults=(0, 3)).stream(key, table)``
-    — and the per-call keywords survive one PR behind a
-    ``DeprecationWarning``.
+    ``Scenario.run`` / ``summary`` / ``stream`` take only (key, table);
+    every execution knob lives here, stated once:
+    ``scenario.with_spec(trials=10**7, faults=(0, 3)).stream(key, table)``.
 
     ``samples`` sizes materializing runs (``run``/``summary``), ``trials``
     streamed ones; ``chunk``/``precision`` default to the streaming
     module's defaults when None.  ``faults`` crashes those acceptor ids
     for the run (``CrashedDelay``); ``regimes`` (a
     ``regimes.MarkovRegimes`` or its config dict) Markov-modulates a
-    streamed run through failure epochs (DESIGN.md §12).
+    streamed run through failure epochs (DESIGN.md §12); ``recovery``
+    selects the collision-recovery rule (``engine.RECOVERY_MODES``).
     """
 
     samples: int = 20000
@@ -68,23 +65,12 @@ class RunSpec:
     k_max: object = "auto"
     faults: Tuple[int, ...] = ()
     regimes: Optional[object] = None
+    recovery: str = "coordinated"
 
     def merged(self, **overrides) -> "RunSpec":
         """This spec with every non-None override applied."""
         kw = {k: v for k, v in overrides.items() if v is not None}
         return replace(self, **kw) if kw else self
-
-
-def _warn_spec(what: str) -> None:
-    warnings.warn(
-        f"passing {what} per call is deprecated; carry execution knobs in "
-        f"Scenario.spec (a RunSpec — see Scenario.with_spec)",
-        DeprecationWarning, stacklevel=3)
-
-
-# distinguishes "not passed" from an explicit None (k_max=None is the
-# meaningful full-sort reference path)
-_UNSET = object()
 
 
 @dataclass(frozen=True)
@@ -121,18 +107,15 @@ class Scenario:
         return replace(self, delay=CrashedDelay(
             self.delay, _crash_mask(self.n, crashed)))
 
-    def run(self, key: jax.Array, table, samples: Optional[int] = None,
-            use_kernel: Optional[bool] = None) -> Dict[str, jax.Array]:
+    def run(self, key: jax.Array, table) -> Dict[str, jax.Array]:
         """Evaluate every quorum system in ``table`` (a ``build_mask_table``
         dict — cardinality, grid, weighted and explicit systems all lower to
         it) over ``spec.samples`` instances.
 
         Returns (M, S)-shaped ``latency_ms`` plus race outcome flags (for the
-        racing fraction) — one engine compile per (shape, scenario type)."""
-        if samples is not None or use_kernel is not None:
-            _warn_spec("samples/use_kernel to Scenario.run")
-        return self._run(key, table, self.spec.merged(
-            samples=samples, use_kernel=use_kernel))
+        racing fraction) — one engine compile per (shape, scenario type).
+        Execution knobs come from ``self.spec`` only (``with_spec``)."""
+        return self._run(key, table, self.spec)
 
     def _run(self, key: jax.Array, table,
              spec: RunSpec) -> Dict[str, jax.Array]:
@@ -153,7 +136,8 @@ class Scenario:
         n_conf = max(1, int(round(samples * self.conflict_frac)))
         out = engine.race(k_race, table, self.offsets_ms, scen.delay,
                           n=self.n, k_proposers=self.k_proposers,
-                          samples=n_conf, use_kernel=spec.use_kernel)
+                          samples=n_conf, use_kernel=spec.use_kernel,
+                          recovery=spec.recovery)
         n_free = samples - n_conf
         if n_free > 0:
             scen_free = Scenario(self.name, self.n, 1, self.offsets_ms[:1],
@@ -164,24 +148,16 @@ class Scenario:
                    for k in out}
         return out
 
-    def summary(self, key: jax.Array, table, samples: Optional[int] = None,
-                use_kernel: Optional[bool] = None) -> Dict[str, jax.Array]:
+    def summary(self, key: jax.Array, table) -> Dict[str, jax.Array]:
         """Per-system latency quantiles + outcome rates, each entry (M,).
 
         Quantiles cover *decided* instances only; instances that never
         gathered enough votes (message loss) are reported separately via
         ``undecided_rate`` instead of polluting the distribution with the
         LOST_MS sentinel (``engine.summarize``)."""
-        if samples is not None or use_kernel is not None:
-            _warn_spec("samples/use_kernel to Scenario.summary")
-        return engine.summarize(self._run(key, table, self.spec.merged(
-            samples=samples, use_kernel=use_kernel)))
+        return engine.summarize(self._run(key, table, self.spec))
 
-    def stream(self, key: jax.Array, table, trials: Optional[int] = None, *,
-               chunk: Optional[int] = None,
-               precision: Optional[float] = None,
-               use_kernel: Optional[bool] = None,
-               shard: Optional[bool] = None, k_max=_UNSET):
+    def stream(self, key: jax.Array, table):
         """Streamed evaluation: ``spec.trials`` instances reduced
         chunk-by-chunk into a fixed-size ``streaming.StreamSummary`` (device
         memory is one chunk regardless of the trial count; the trial axis
@@ -195,19 +171,10 @@ class Scenario:
         ``None`` keeps the full-sort reference path; integer outputs are
         identical.  ``spec.regimes`` Markov-modulates the stream through
         failure epochs and returns a ``RegimeStreamSummary`` instead
-        (DESIGN.md §12).
+        (DESIGN.md §12).  Execution knobs come from ``self.spec`` only
+        (``with_spec``).
         """
-        if (any(v is not None for v in (trials, chunk, precision,
-                                        use_kernel, shard))
-                or k_max is not _UNSET):
-            _warn_spec("trials/chunk/precision/use_kernel/shard/k_max to "
-                       "Scenario.stream")
-        spec = self.spec.merged(trials=trials, chunk=chunk,
-                                precision=precision, use_kernel=use_kernel,
-                                shard=shard)
-        if k_max is not _UNSET:
-            spec = replace(spec, k_max=k_max)
-        return self._stream(key, table, spec)
+        return self._stream(key, table, self.spec)
 
     def _stream(self, key: jax.Array, table, spec: RunSpec):
         from . import streaming
@@ -228,7 +195,8 @@ class Scenario:
                                       scen.delay, n=self.n,
                                       k_proposers=self.k_proposers,
                                       trials=n_conf,
-                                      use_kernel=spec.use_kernel, **kw)
+                                      use_kernel=spec.use_kernel,
+                                      recovery=spec.recovery, **kw)
         if trials - n_conf > 0:
             free = streaming.fast_path_stream(k_free, table, scen.delay,
                                               n=self.n,

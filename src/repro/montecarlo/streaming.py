@@ -303,11 +303,13 @@ def _lat_only_outcomes(lat: jax.Array, fast: bool) -> Dict[str, jax.Array]:
 
 
 def _chunk_outcomes(path: str, key, table, offsets, delay, *, n, k_proposers,
-                    chunk, use_kernel, k_sat=None) -> Dict[str, jax.Array]:
+                    chunk, use_kernel, k_sat=None,
+                    recovery="coordinated") -> Dict[str, jax.Array]:
     if path == "race":
         return engine._race_outcomes(key, table, offsets, delay, n=n,
                                      k_proposers=k_proposers, samples=chunk,
-                                     use_kernel=use_kernel, k_sat=k_sat)
+                                     use_kernel=use_kernel, k_sat=k_sat,
+                                     recovery=recovery)
     if path == "fast_path":
         return _lat_only_outcomes(
             engine._fast_path_outcomes(key, table, delay, n=n,
@@ -326,14 +328,17 @@ def _chunk_outcomes(path: str, key, table, offsets, delay, *, n, k_proposers,
 # (and, for the race, by the per-trial fast-saturation capacity).
 # ---------------------------------------------------------------------------
 
-def _card_layout(table) -> tuple:
+def _card_layout(table, recovery: str = "coordinated") -> tuple:
     """Host-side static pair structure of a concrete cardinality table: the
-    distinct (q1, q2c) recovery pairs (P, 2) and each system's pair id (M,).
-    Recovery latency depends on a system only through this pair, so P (not
-    M) recovery columns cover the whole table."""
+    distinct (q1, q_rec) recovery pairs (P, 2) and each system's pair id
+    (M,), where q_rec is the recovery-commit threshold of the active rule —
+    q2c under coordinated recovery, q2f under uncoordinated.  Recovery
+    latency depends on a system only through this pair, so P (not M)
+    recovery columns cover the whole table."""
     import numpy as np
     q = np.asarray(table["q"])
-    pairs, inv = np.unique(q[:, :2], axis=0, return_inverse=True)
+    cols = [0, 1] if recovery == "coordinated" else [0, 2]
+    pairs, inv = np.unique(q[:, cols], axis=0, return_inverse=True)
     return (jnp.asarray(pairs, jnp.int32),
             jnp.asarray(inv.astype(np.int32)))
 
@@ -388,7 +393,7 @@ def _cols_card_update(state: StreamSummary, cols: jax.Array,
 
 def _race_card_update(state: StreamSummary, key, table, layout, offsets,
                       delay, valid, *, n, k_proposers, chunk, use_kernel,
-                      k_sat) -> StreamSummary:
+                      k_sat, recovery="coordinated") -> StreamSummary:
     """Sort-free streamed race chunk for cardinality tables.
 
     The per-trial *fast capacity* ``fcap = min(max_cnt, #finite winner
@@ -409,12 +414,17 @@ def _race_card_update(state: StreamSummary, key, table, layout, offsets,
     integer output (decide bits, histogram, counts, max) is bit-identical
     to the materialized ``_decide`` + ``state.update`` path — only the f32
     latency-sum reduction order differs.
+
+    ``recovery`` rides through unchanged: ``layout`` already pairs each
+    system with the rule's commit threshold (q2c or q2f) and
+    ``_sample_race`` deepens/retargets the classic presort, so the pair
+    gather below is rule-agnostic.
     """
     k1, k2c, k2f = k_sat
     draws = engine._sample_race(key, offsets, delay, n=n,
                                 k_proposers=k_proposers, samples=chunk,
                                 use_kernel=use_kernel, k_sat=k_sat,
-                                need_perms=False)
+                                need_perms=False, recovery=recovery)
     pairs, pair_of_m = layout                            # (P, 2), (M,)
     P_ = pairs.shape[0]
     q2f = table["q"][:, 2]                               # (M,) traced
@@ -488,8 +498,8 @@ def _race_card_update(state: StreamSummary, key, table, layout, offsets,
 
 
 def _race_fused_update(state: StreamSummary, key, table, offsets, delay,
-                       valid, *, n, k_proposers, chunk,
-                       k_sat) -> StreamSummary:
+                       valid, *, n, k_proposers, chunk, k_sat,
+                       recovery="coordinated") -> StreamSummary:
     """Masked-table race chunk through the fused megakernel: the *raw*
     (unsorted) arrival block goes straight into the kernel, which runs the
     k_max-step selection network in-registers, then masked tally + decide +
@@ -498,13 +508,24 @@ def _race_fused_update(state: StreamSummary, key, table, offsets, delay,
     No ``(chunk, n)`` sorted array is ever materialized on this path — the
     engine contributes only the RNG draws and vote structure
     (``_draw_race``); everything system-dependent happens inside the
-    kernel grid over (systems, trial blocks)."""
+    kernel grid over (systems, trial blocks).
+
+    The kernel's recovery-commit operands are positional, so uncoordinated
+    recovery feeds the phase-2f masks (and the k2f prefix depth) where
+    coordinated feeds phase-2c — the classic-leg draws already match the
+    rule from ``_draw_race``."""
     raw = engine._draw_race(key, offsets, delay, n=n,
-                            k_proposers=k_proposers, samples=chunk)
+                            k_proposers=k_proposers, samples=chunk,
+                            recovery=recovery)
+    if recovery == "uncoordinated":
+        rec_w, rec_t = table["p2f_w"], table["p2f_t"]
+        k_sat = (k_sat[0], k_sat[2], k_sat[2])
+    else:
+        rec_w, rec_t = table["p2c_w"], table["p2c_t"]
     from repro.kernels.quorum_tally import ops as qt_ops
     hist, stats = qt_ops.stream_tally_decide_hist(
         raw["votes"], raw["val_arr"], raw["arrive"], raw["classic"],
-        table["p1_w"], table["p1_t"], table["p2c_w"], table["p2c_t"],
+        table["p1_w"], table["p1_t"], rec_w, rec_t,
         table["p2f_w"], table["p2f_t"], valid, n_values=k_proposers,
         k_sat=k_sat, precision=state.precision, bins=state.bins,
         undecided_ms=float(UNDECIDED_MS))
@@ -535,8 +556,8 @@ def _regime_zeros(regimes: MarkovRegimes, m: int,
 
 def _regime_device_stream(key, table, offsets, delay, trials, regimes, *,
                           path, n, k_proposers, chunk, n_chunks, n_epochs,
-                          precision, use_kernel, k_sat
-                          ) -> RegimeStreamSummary:
+                          precision, use_kernel, k_sat,
+                          recovery="coordinated") -> RegimeStreamSummary:
     """One device's chunked scan under a Markov regime chain.
 
     The chain ``zs`` is sampled up front (``n_epochs`` covers the scan's
@@ -570,7 +591,8 @@ def _regime_device_stream(key, table, offsets, delay, trials, regimes, *,
         out = _chunk_outcomes(path, k, table, offsets,
                               regimes.mixed_delay(rid), n=n,
                               k_proposers=k_proposers, chunk=chunk,
-                              use_kernel=use_kernel, k_sat=k_sat)
+                              use_kernel=use_kernel, k_sat=k_sat,
+                              recovery=recovery)
         sel = [valid & (rid == j) for j in range(r)]
         states = tuple(states[j].update(out, sel[j]) for j in range(r))
         occ = occ + jnp.stack([s.sum() for s in sel]).astype(jnp.int32)
@@ -589,10 +611,11 @@ def _regime_device_stream(key, table, offsets, delay, trials, regimes, *,
 @functools.partial(jax.jit,
                    static_argnames=("path", "n", "k_proposers", "chunk",
                                     "n_chunks", "n_epochs", "precision",
-                                    "use_kernel", "mesh", "k_sat"))
+                                    "use_kernel", "mesh", "k_sat",
+                                    "recovery"))
 def _stream(key, table, layout, offsets, delay, trials, regimes, *, path, n,
             k_proposers, chunk, n_chunks, n_epochs, precision, use_kernel,
-            mesh, k_sat):
+            mesh, k_sat, recovery="coordinated"):
     engine.TRACE_COUNTS[path + "_stream"] += 1
     m = table["p1_w"].shape[0]
     # The fused-kernel and shared-column lowerings assume ONE environment
@@ -615,7 +638,7 @@ def _stream(key, table, layout, offsets, delay, trials, regimes, *, path, n,
                 key, table, offsets, delay, trials, regimes, path=path,
                 n=n, k_proposers=k_proposers, chunk=chunk,
                 n_chunks=n_chunks, n_epochs=n_epochs, precision=precision,
-                use_kernel=use_kernel, k_sat=k_sat)
+                use_kernel=use_kernel, k_sat=k_sat, recovery=recovery)
         def body(state, i):
             k = jax.random.fold_in(key, i)
             valid = jnp.arange(chunk, dtype=jnp.int32) \
@@ -624,14 +647,15 @@ def _stream(key, table, layout, offsets, delay, trials, regimes, *, path, n,
                 state = _race_fused_update(state, k, table, offsets, delay,
                                            valid, n=n,
                                            k_proposers=k_proposers,
-                                           chunk=chunk, k_sat=k_sat)
+                                           chunk=chunk, k_sat=k_sat,
+                                           recovery=recovery)
             elif card and path == "race":
                 state = _race_card_update(state, k, table, layout, offsets,
                                           delay, valid, n=n,
                                           k_proposers=k_proposers,
                                           chunk=chunk,
                                           use_kernel=use_kernel,
-                                          k_sat=k_sat)
+                                          k_sat=k_sat, recovery=recovery)
             elif card and path == "fast_path":
                 cols = engine._sorted_prefix(
                     engine._fast_path_draws(k, delay, n, chunk), k_sat[2])
@@ -645,7 +669,8 @@ def _stream(key, table, layout, offsets, delay, trials, regimes, *, path, n,
             else:
                 out = _chunk_outcomes(path, k, table, offsets, delay, n=n,
                                       k_proposers=k_proposers, chunk=chunk,
-                                      use_kernel=use_kernel, k_sat=k_sat)
+                                      use_kernel=use_kernel, k_sat=k_sat,
+                                      recovery=recovery)
                 state = state.update(out, valid)
             return state, None
         state0 = StreamSummary.zeros(m, precision)
@@ -750,8 +775,9 @@ def _resolve_k_sat(table, k_max, n: int):
 
 def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
                   trials, chunk, precision, use_kernel, shard, k_max="auto",
-                  regimes=None) -> StreamSummary:
+                  regimes=None, recovery="coordinated") -> StreamSummary:
     engine._check_mask_table(table, n)
+    engine._check_recovery(recovery)
     if trials < 1:
         raise ValueError(f"trials must be >= 1, got {trials}")
     if chunk < 1:
@@ -769,7 +795,7 @@ def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
         if path == "race":
             out = engine.race(key, table, offsets, delay, n=n,
                               k_proposers=k_proposers, samples=trials,
-                              use_kernel=use_kernel)
+                              use_kernel=use_kernel, recovery=recovery)
         elif path == "fast_path":
             out = _lat_only_outcomes(
                 engine.fast_path(key, table, delay, n=n, samples=trials),
@@ -780,8 +806,8 @@ def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
                 fast=False)
         return StreamSummary.from_outcomes(out, precision)
     k_sat = _resolve_k_sat(table, k_max, n)
-    layout = (_card_layout(table) if "q" in table and k_sat is not None
-              else _dummy_layout())
+    layout = (_card_layout(table, recovery)
+              if "q" in table and k_sat is not None else _dummy_layout())
     ndev = 1 if mesh is None else mesh.shape[psharding.TRIAL_AXIS]
     per_device = -(-trials // ndev)                # ceil: busiest device
     n_chunks = -(-per_device // chunk)
@@ -797,14 +823,15 @@ def _stream_entry(path: str, key, table, delay, offsets, *, n, k_proposers,
                    regimes, path=path, n=n, k_proposers=k_proposers,
                    chunk=chunk, n_chunks=n_chunks, n_epochs=n_epochs,
                    precision=precision, use_kernel=use_kernel, mesh=mesh,
-                   k_sat=k_sat)
+                   k_sat=k_sat, recovery=recovery)
 
 
 def race_stream(key, table, offsets, delay=None, *, n: int, k_proposers: int,
                 trials: int, chunk: int = DEFAULT_CHUNK,
                 precision: float = DEFAULT_PRECISION,
                 use_kernel: bool = False, shard: bool = True,
-                k_max="auto", regimes=None) -> StreamSummary:
+                k_max="auto", regimes=None,
+                recovery: str = "coordinated") -> StreamSummary:
     """``engine.race`` at any trial count in fixed memory: chunked
     ``lax.scan`` reduction into a ``StreamSummary``, trial axis sharded
     over local devices when ``shard`` (a bool or an explicit 1-D mesh).
@@ -821,11 +848,16 @@ def race_stream(key, table, offsets, delay=None, *, n: int, k_proposers: int,
     ``regimes`` (a ``MarkovRegimes`` or its config dict, DESIGN.md §12)
     Markov-modulates the stream through failure epochs and returns a
     ``RegimeStreamSummary`` (per-regime slices + the merged marginal);
-    ``None`` keeps the i.i.d. path bit-identical to previous behaviour."""
+    ``None`` keeps the i.i.d. path bit-identical to previous behaviour.
+
+    ``recovery`` (static, ``engine.RECOVERY_MODES``) selects the
+    collision-recovery rule; each mode is its own compile of the same
+    stream path (one per mode, not per system)."""
     return _stream_entry("race", key, table, delay, offsets, n=n,
                          k_proposers=k_proposers, trials=trials, chunk=chunk,
                          precision=precision, use_kernel=use_kernel,
-                         shard=shard, k_max=k_max, regimes=regimes)
+                         shard=shard, k_max=k_max, regimes=regimes,
+                         recovery=recovery)
 
 
 def fast_path_stream(key, table, delay=None, *, n: int, trials: int,

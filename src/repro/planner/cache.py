@@ -73,6 +73,9 @@ class EngineKey:
     # Markov regime modulation changes the lowered scan geometry (R regime
     # environments, epoch length in trials); (R, epoch_trials) or None.
     regimes_sig: Optional[Tuple[int, int]] = None
+    # Collision-recovery rule: static on the stream jits, AND it changes the
+    # cardinality pair layout (q2c vs q2f columns), so equal keys require it.
+    recovery: str = "coordinated"
 
 
 def _resolve_ndev(shard) -> int:
@@ -89,7 +92,8 @@ def _resolve_ndev(shard) -> int:
 
 def engine_key(table: Dict, *, n: int, k_proposers: int, trials: int,
                chunk: int, precision: float, shard, use_kernel: bool,
-               k_max, regimes=None) -> EngineKey:
+               k_max, regimes=None,
+               recovery: str = "coordinated") -> EngineKey:
     """Compute the warm-pool key for one scoring query, host-side."""
     sig = tuple(sorted((k, tuple(v.shape), str(v.dtype))
                        for k, v in table.items()))
@@ -97,17 +101,22 @@ def engine_key(table: Dict, *, n: int, k_proposers: int, trials: int,
     if regimes is None and ndev == 1 and trials <= chunk:
         # materializing fallback: ``samples`` itself is the jit static
         return EngineKey(sig, 0, n, k_proposers, chunk, trials,
-                         "materialize", precision, None, use_kernel, 1)
+                         "materialize", precision, None, use_kernel, 1,
+                         recovery=recovery)
     k_sat = streaming._resolve_k_sat(table, k_max, n)
     pairs = 0
     if "q" in table and k_sat is not None:
-        pairs = int(np.unique(np.asarray(table["q"])[:, :2], axis=0).shape[0])
+        # the recovery rule picks which q-column pairs with q1 in the
+        # cardinality layout, so the pair count is rule-dependent
+        cols = [0, 1] if recovery == "coordinated" else [0, 2]
+        pairs = int(np.unique(np.asarray(table["q"])[:, cols],
+                              axis=0).shape[0])
     per_device = -(-trials // ndev)
     n_chunks = -(-per_device // chunk)
     rsig = (None if regimes is None
             else (len(regimes.names), int(regimes.epoch_trials)))
     return EngineKey(sig, pairs, n, k_proposers, chunk, n_chunks, "stream",
-                     precision, k_sat, use_kernel, ndev, rsig)
+                     precision, k_sat, use_kernel, ndev, rsig, recovery)
 
 
 def _delay_token(delay) -> bytes:
@@ -165,7 +174,8 @@ class EngineCache:
               delta_ms: Optional[float] = None, delay=None,
               chunk: Optional[int] = None, precision: Optional[float] = None,
               shard=False, use_kernel: bool = False, k_max="auto",
-              seed: int = 0, regimes=None, axes=None):
+              seed: int = 0, regimes=None, recovery: str = "coordinated",
+              axes=None):
         from repro.frontier import score as fscore
         from repro.montecarlo.regimes import MarkovRegimes
 
@@ -181,7 +191,8 @@ class EngineCache:
         table = engine.build_mask_table(masks)
         key = engine_key(table, n=n, k_proposers=k_proposers, trials=trials,
                          chunk=chunk, precision=precision, shard=shard,
-                         use_kernel=use_kernel, k_max=k_max, regimes=regimes)
+                         use_kernel=use_kernel, k_max=k_max, regimes=regimes,
+                         recovery=recovery)
         labels = tuple(m.label or f"system{i}" for i, m in enumerate(masks))
         fp = self._fingerprint(table, key, labels=labels, trials=trials,
                                seed=seed, delta_ms=delta_ms, delay=delay,
@@ -202,7 +213,7 @@ class EngineCache:
             list(systems), trials=trials, n=n, k_proposers=k_proposers,
             delta_ms=delta_ms, delay=delay, chunk=chunk, precision=precision,
             shard=shard, use_kernel=use_kernel, k_max=k_max, seed=seed,
-            regimes=regimes, axes=axes)
+            regimes=regimes, recovery=recovery, axes=axes)
         compiles = trace_total() - before
         st = self.stats.setdefault(key, {"queries": 0, "compiles": 0})
         st["queries"] += 1

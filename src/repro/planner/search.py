@@ -335,7 +335,8 @@ def search(systems: Sequence, *, final_trials: int = 1_000_000,
            chunk: Optional[int] = None, precision: Optional[float] = None,
            shard: bool = False, use_kernel: bool = False, k_max="auto",
            seed: int = 0, slack: float = DEFAULT_SLACK,
-           regimes=None, cache=None) -> SearchResult:
+           regimes=None, recovery: str = "coordinated",
+           cache=None) -> SearchResult:
     """Successive-halving search through the streamed scorer.
 
     ``systems`` is any mix of ``frontier.families.Member``, quorum
@@ -361,7 +362,7 @@ def search(systems: Sequence, *, final_trials: int = 1_000_000,
         delay=delay,
         chunk=chunk if chunk is not None else fscore.DEFAULT_CHUNK,
         precision=precision, shard=shard, use_kernel=use_kernel,
-        k_max=k_max, seed=seed, regimes=regimes)
+        k_max=k_max, seed=seed, regimes=regimes, recovery=recovery)
     scorer = lambda members, trials: cache.score(members, trials=trials,
                                                  **kwargs)
     return successive_halving(list(systems), schedule, scorer)

@@ -224,7 +224,7 @@ class Planner:
                 _delay_token(wl.regimes_for(q.n)),
                 q.trials, q.schedule,
                 chunk, precision, q.seed, bool(q.shard), q.use_kernel,
-                repr(q.k_max), q.slack)
+                repr(q.k_max), q.slack, wl.recovery)
 
     # -- planning ----------------------------------------------------------
     def plan(self, query=None, **kw) -> PlanResult:
@@ -284,7 +284,7 @@ class Planner:
             delay=wl.delay_for(q.n), chunk=q.chunk, precision=q.precision,
             shard=q.shard, use_kernel=q.use_kernel, k_max=q.k_max,
             seed=q.seed, slack=q.slack, regimes=wl.regimes_for(q.n),
-            cache=self.engines)
+            recovery=wl.recovery, cache=self.engines)
         self._searches[gkey] = sr
         while len(self._searches) > self.search_cache_size:
             self._searches.popitem(last=False)

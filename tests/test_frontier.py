@@ -13,11 +13,12 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from benchmarks.quorum_sweep import enumerate_valid, minimal_frontier
 from repro.core.model_check import explore
-from repro.core.quorum import QuorumSpec, ffp_card_ok, ffp_min_q2c
+from repro.core.quorum import (QuorumSpec, RelaxedQuorumSpec, ffp_card_ok,
+                               ffp_min_q2c, relaxed_card_ok)
 from repro.frontier import (Axis, FrontierResult, cardinality_family,
                             default_axes, dominates, grid_family,
                             maximal_mask, pareto_mask, quantize,
-                            score_systems, weighted_family)
+                            relaxed_family, score_systems, weighted_family)
 from repro.montecarlo import build_mask_table, engine, streaming
 from repro.montecarlo.streaming import StreamSummary
 
@@ -190,6 +191,55 @@ def test_weighted_family_valid_weight_inequalities():
             assert w.t1 + w.t2c > W                  # Eq. 13, weight space
             assert w.t1 + 2 * w.t2f > 2 * W          # Eq. 14, weight space
             assert m.masks(n).n == n
+
+
+@pytest.mark.parametrize("n,count", [(4, 7), (5, 13), (11, 125)])
+def test_relaxed_family_is_the_relaxed_only_space(n, count):
+    """``relaxed_family`` enumerates exactly the triples that satisfy the
+    Relaxed Paxos predicate (Eq.14 alone) but NOT the FFP pair — the
+    systems the joint frontier can only reach by relaxing intersection."""
+    mem = relaxed_family(n)
+    assert len(mem) == count
+    triples = {(m.system.q1, m.system.q2c, m.system.q2f) for m in mem}
+    brute = {(q1, q2c, q2f)
+             for q1 in range(1, n + 1) for q2c in range(1, n + 1)
+             for q2f in range(1, n + 1)
+             if relaxed_card_ok(n, q1, q2c, q2f)
+             and not ffp_card_ok(n, q1, q2c, q2f)}
+    assert triples == brute
+    labels = [m.label for m in mem]
+    assert len(set(labels)) == len(labels)
+    for m in mem:
+        assert isinstance(m.system, RelaxedQuorumSpec)
+        assert m.system.is_valid()
+        # the honest recovery-phase-1 budget: rounds above a classic round
+        # need q1_full = max(q1, n + 1 - q2c)
+        ft = m.system.fault_tolerance()
+        assert ft["phase1"] == n - m.system.q1_full
+
+
+def test_relaxed_system_survives_joint_frontier():
+    """At least one relaxed-valid / FFP-invalid system is Pareto-optimal
+    on the joint n=11 frontier — the paper-level payoff of relaxing
+    intersection (the full assertion set runs in benchmarks.quorum_sweep
+    .run_relaxed)."""
+    members = cardinality_family(11) + relaxed_family(11)
+    r = score_systems(members, trials=24_576, chunk=8_192, shard=False,
+                      seed=ANCHOR_SEED)
+    relaxed_on = [l for l in r.frontier_labels if l.startswith("relaxed[")]
+    assert relaxed_on, "no relaxed member survived the joint reduction"
+    # relaxed[5,2,9] strictly beats every FFP triple at q1=5 on ft_classic
+    # (FFP forces q2c >= 7 at q1=5) while matching its latency axes
+    assert "relaxed[5,2,9]" in r.labels
+    row = r.row("relaxed[5,2,9]")
+    assert row["ft_classic"] == 9.0 and row["ft_phase1"] == 1.0
+
+
+def test_relaxed_spec_to_explicit_refuses():
+    """Lowering a relaxed spec to an explicit set system would silently
+    flatten the per-round phase-1 semantics — it must refuse."""
+    with pytest.raises(TypeError, match="per-round"):
+        RelaxedQuorumSpec(5, 1, 1, 5).to_explicit()
 
 
 def test_small_grid_and_weighted_members_model_check_clean():

@@ -3,7 +3,9 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.model_check import explore
-from repro.core.quorum import QuorumSpec, ffp_card_ok
+from repro.core.quorum import (QuorumSpec, RelaxedQuorumSpec,
+                               all_relaxed_specs, ffp_card_ok,
+                               relaxed_card_ok)
 
 
 def test_valid_n3_safe():
@@ -52,6 +54,66 @@ def test_uncoordinated_recovery_safe():
 def test_nontriviality_always_holds_in_valid_configs():
     r = explore(QuorumSpec(3, 3, 1, 3), max_states=300_000)
     assert r.ok and r.violation is None
+
+
+def test_relaxed_family_bounded_safe_n4():
+    """Every relaxed-valid / FFP-invalid triple at n=4 explores clean under
+    the bounded budget (the full-family sweep at n <= 5 runs in the CI
+    relaxed-smoke job)."""
+    specs = list(all_relaxed_specs(4))
+    assert len(specs) == 7
+    for spec in specs:
+        assert relaxed_card_ok(spec.n, spec.q1, spec.q2c, spec.q2f)
+        assert not ffp_card_ok(spec.n, spec.q1, spec.q2c, spec.q2f)
+        r = explore(spec, max_states=120_000)
+        assert r.ok, (spec, r.violation, r.trace)
+
+
+def test_relaxed_flat_interpretation_unsafe():
+    """The differential that makes RelaxedQuorumSpec a distinct type: the
+    same (q1, q2c, q2f) numbers read as a *flat* FFP spec (q1 for every
+    round's phase 1) violate Consistency once a classic round can decide —
+    the relaxed predicate only drops Eq.13 for phase-1 quorums that pick
+    from a FAST round, so rounds above a classic one must re-grow to
+    q1_full = n + 1 - q2c."""
+    flat = QuorumSpec(3, 1, 1, 3)
+    assert not flat.is_valid()
+    r = explore(flat, max_round=3, max_states=500_000)
+    assert not r.ok
+    assert r.violation == "Consistency"
+
+    relaxed = RelaxedQuorumSpec(3, 1, 1, 3)
+    assert relaxed.is_valid()
+    assert relaxed.q1_full == 3          # n + 1 - q2c
+    r = explore(relaxed, max_round=3, max_states=500_000)
+    assert r.ok, (r.violation, r.trace)
+
+
+def test_relaxed_uncoordinated_bounded_safe():
+    """Recovery-rule x intersection-rule cross product: the uncoordinated
+    vote guard stays safe over a relaxed system too."""
+    r = explore(RelaxedQuorumSpec(3, 1, 1, 3), max_round=3,
+                fast_rounds="odd", uncoordinated=True, max_states=250_000)
+    assert r.ok, (r.violation, r.trace)
+
+
+@pytest.mark.parametrize("spec", [QuorumSpec(4, 4, 1, 3),
+                                  QuorumSpec(4, 2, 3, 4)])
+def test_uncoordinated_guard_differential_n4(spec):
+    """Differential audit of the Phase2b-enabling guards: the same valid
+    spec explored with and without the UncoordRecovery action must both be
+    violation-free — divergence would mean the python guard admits a vote
+    the TLA+ enabling condition forbids (or vice versa)."""
+    assert spec.is_valid()
+    base = explore(spec, max_round=3, max_states=150_000)
+    unco = explore(spec, max_round=3, uncoordinated=True,
+                   max_states=150_000)
+    assert base.ok, (base.violation, base.trace)
+    assert unco.ok, (unco.violation, unco.trace)
+    # the extra action only ADDS transitions: the uncoordinated state
+    # graph must be at least as large wherever neither run truncated
+    if not (base.truncated or unco.truncated):
+        assert unco.states >= base.states
 
 
 @settings(max_examples=8, deadline=None)

@@ -109,6 +109,65 @@ def test_duplicate_votes_not_double_counted():
     assert not learner.learned
 
 
+def test_choose_value_numeric_tie_break():
+    """CHOOSE sorts by (-count, canonical key): numbers order numerically,
+    not by repr (the old lexicographic order picked 10 before 2)."""
+    assert choose_value({10, 2}) == 2
+    assert choose_value({10, 2, 100}) == 2
+
+
+def test_choose_value_type_stable():
+    """Heterogeneous pick sets must not raise (int vs str comparison) and
+    must order deterministically: numbers < strings < other types."""
+    assert choose_value({"b", 1}) == 1
+    assert choose_value({"b", "a"}) == "a"
+    assert choose_value({("t",), "a"}) == "a"
+    assert choose_value({ANY}) == ANY
+    assert choose_value(set()) == ANY
+
+
+def test_choose_value_plurality_beats_key_order():
+    """Counts dominate the canonical key; key breaks exact count ties."""
+    assert choose_value({10, 2}, {10: 3, 2: 1}) == 10
+    assert choose_value({"b", "a"}, {"a": 2, "b": 2}) == "a"
+    assert choose_value({"b", "a"}, {"b": 3}) == "b"
+
+
+def test_uncoordinated_recovery_promised_acceptor_can_vote():
+    """TLA+ Phase2b enabling is ``rnd <= i+1 /\\ vrnd < i+1``: an acceptor
+    that already *promised* round 2 (rnd == 2 via Phase1a) but has not
+    voted may still cast the round-2 recovery vote.  The old ``rnd > i``
+    guard wrongly excluded it."""
+    rs = RoundSystem(QuorumSpec.paper_headline(11), n_coordinators=1,
+                     fast_rounds="all")
+    accs = [Acceptor(i, rs) for i in range(11)]
+    votes = _split_vote(accs, {"A": 6, "B": 5})
+    p1b = p2b_to_p1b(votes, 1)
+
+    promised = Acceptor(0, rs, rnd=2, vrnd=1, vval="A")
+    out = promised.uncoordinated_recovery(1, p1b, {"A", "B"})
+    assert out is not None and out.rnd == 2 and out.val == "A"
+
+    voted_r2 = Acceptor(1, rs, rnd=2, vrnd=2, vval="B")
+    assert voted_r2.uncoordinated_recovery(1, p1b, {"A", "B"}) is None
+
+    promised_r3 = Acceptor(2, rs, rnd=3, vrnd=1, vval="A")
+    assert promised_r3.uncoordinated_recovery(1, p1b, {"A", "B"}) is None
+
+
+def test_choose_value_change_leaves_exploration_deterministic():
+    """The tie-break rewrite must not perturb the model checker: two
+    explorations of the same spec see the identical state count (CHOOSE is
+    only a liveness heuristic; the checker branches over the full pick
+    set, so determinism — not the specific choice — is what safety
+    rests on)."""
+    from repro.core.model_check import explore
+    a = explore(QuorumSpec(3, 2, 2, 3), max_states=200_000)
+    b = explore(QuorumSpec(3, 2, 2, 3), max_states=200_000)
+    assert a.ok and b.ok
+    assert a.states == b.states
+
+
 @pytest.mark.parametrize("n", [4, 5, 7, 11, 16])
 def test_generalized_headline_valid(n):
     spec = QuorumSpec.paper_headline(n)

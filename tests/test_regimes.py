@@ -372,6 +372,57 @@ def test_workload_kind_shorthand():
         Workload.from_dict({"kind": "race", "k": 1})
 
 
+def test_workload_from_dict_rejects_unknown_keys():
+    """Satellite: a typo'd key raises a ValueError naming the offending
+    key AND the valid set — on both the kind-shorthand and plain paths —
+    instead of an opaque ctor TypeError or a silently dropped knob."""
+    from repro.api.experiment import Workload
+    with pytest.raises(ValueError) as ei:
+        Workload.from_dict({"kind": "race", "k": 2, "delta_mss": 0.1})
+    assert "delta_mss" in str(ei.value) and "delta_ms" in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        Workload.from_dict({"k_proposers": 2, "trialz": 7})
+    assert "trialz" in str(ei.value) and "valid keys" in str(ei.value)
+    # recovery is a real key on both paths
+    wl = Workload.from_dict({"kind": "race", "k": 2,
+                             "recovery": "uncoordinated"})
+    assert wl.recovery == "uncoordinated"
+    with pytest.raises(ValueError, match="unknown recovery rule"):
+        Workload.from_dict({"kind": "race", "k": 2, "recovery": "oracle"})
+
+
+def test_workload_from_dict_rejects_unknown_delay_kind():
+    """A delay config whose registry name does not resolve fails up front
+    with the known-kind list, including when nested under a wrapper."""
+    from repro.api.experiment import Workload
+    from repro.montecarlo.latency import delay_kinds
+    with pytest.raises(ValueError) as ei:
+        Workload.from_dict({"kind": "race", "k": 2,
+                            "delay": {"kind": "warp"}})
+    msg = str(ei.value)
+    assert "warp" in msg
+    for known in delay_kinds():
+        assert known in msg
+    with pytest.raises(ValueError, match="warp"):
+        Workload.from_dict({
+            "k_proposers": 2,
+            "delay": {"kind": "lossy", "loss_prob": 0.1,
+                      "inner": {"kind": "warp"}}})
+
+
+def test_workload_recovery_roundtrip():
+    """recovery serializes (dropped at default), round-trips, and reaches
+    the scenario spec."""
+    from repro.api.experiment import Workload
+    wl = Workload.race(k=2, delta_ms=0.2, recovery="uncoordinated")
+    d = wl.to_dict()
+    assert d["recovery"] == "uncoordinated"
+    assert "recovery" not in Workload.race(k=2, delta_ms=0.2).to_dict()
+    wl2 = Workload.from_dict(json.loads(json.dumps(d)))
+    assert wl2.recovery == "uncoordinated"
+    assert wl2.scenario(5).spec.recovery == "uncoordinated"
+
+
 @pytest.mark.parametrize("name", ["diurnal_wan.json", "trace_replay.json"])
 def test_experiment_from_committed_config(name):
     """The committed example scenario configs load, lower and stream; the
@@ -441,35 +492,27 @@ def test_planner_accepts_serialized_workload_dict():
 
 
 # ---------------------------------------------------------------------------
-# RunSpec: one spec object carries the engine knobs; legacy kwargs warn
+# RunSpec: one spec object carries the engine knobs; legacy kwargs are gone
 # ---------------------------------------------------------------------------
 
-def test_runspec_with_spec_matches_legacy_kwargs():
+def test_runspec_is_the_only_knob_path():
+    """The PR-9 keyword shims are deleted: run/summary/stream take exactly
+    (key, table), and any legacy engine-knob keyword is a plain
+    TypeError, not a DeprecationWarning."""
     scen = k_way_race(2, 0.25)
     with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
+        warnings.simplefilter("error")       # no warning of any kind
         new = scen.with_spec(trials=20_000, chunk=8_192,
                              shard=False).stream(KEY, TABLE)
-    with pytest.warns(DeprecationWarning, match="with_spec"):
-        old = scen.stream(KEY, TABLE, trials=20_000, chunk=8_192,
-                          shard=False)
-    for attr in ("n_trials", "n_fast", "n_recovery", "n_undecided", "hist"):
-        np.testing.assert_array_equal(np.asarray(getattr(new, attr)),
-                                      np.asarray(getattr(old, attr)),
-                                      err_msg=attr)
-
-
-def test_runspec_run_legacy_samples_warn_and_match():
-    scen = k_way_race(2, 0.25)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        new = scen.with_spec(samples=4_000).run(KEY, TABLE)
-    with pytest.warns(DeprecationWarning, match="with_spec"):
-        old = scen.run(KEY, TABLE, samples=4_000)
-    np.testing.assert_array_equal(np.asarray(new["reached_fast"]),
-                                  np.asarray(old["reached_fast"]))
-    np.testing.assert_array_equal(np.asarray(new["latency_ms"]),
-                                  np.asarray(old["latency_ms"]))
+    assert int(np.asarray(new.n_trials)[0]) == 20_000
+    with pytest.raises(TypeError):
+        scen.stream(KEY, TABLE, trials=20_000)
+    with pytest.raises(TypeError):
+        scen.stream(KEY, TABLE, k_max=None)
+    with pytest.raises(TypeError):
+        scen.run(KEY, TABLE, samples=4_000)
+    with pytest.raises(TypeError):
+        scen.summary(KEY, TABLE, trials=20_000)
 
 
 def test_runspec_merged_and_sentinel_k_max():
@@ -479,11 +522,25 @@ def test_runspec_merged_and_sentinel_k_max():
     # explicit k_max=None (full-sort reference) survives the spec plumbing
     scen = k_way_race(2, 0.25).with_spec(trials=12_000, chunk=8_192,
                                       shard=False)
-    with pytest.warns(DeprecationWarning):
-        full = scen.stream(KEY, TABLE, k_max=None)
+    full = scen.with_spec(k_max=None).stream(KEY, TABLE)
     auto = scen.stream(KEY, TABLE)
     np.testing.assert_array_equal(np.asarray(full.hist),
                                   np.asarray(auto.hist))
+
+
+def test_runspec_carries_recovery_rule():
+    """``recovery`` rides the spec like every other knob: the entry rate is
+    rule-invariant, the streamed histograms differ, and an unknown rule
+    raises before any engine work."""
+    scen = k_way_race(2, 0.25).with_spec(trials=20_000, chunk=8_192,
+                                         shard=False)
+    sc = scen.stream(KEY, TABLE)
+    su = scen.with_spec(recovery="uncoordinated").stream(KEY, TABLE)
+    np.testing.assert_array_equal(np.asarray(sc.n_recovery),
+                                  np.asarray(su.n_recovery))
+    assert not np.array_equal(np.asarray(sc.hist), np.asarray(su.hist))
+    with pytest.raises(ValueError, match="unknown recovery rule"):
+        scen.with_spec(recovery="oracle").stream(KEY, TABLE)
 
 
 def test_scenario_spec_carries_regimes_through_workload():

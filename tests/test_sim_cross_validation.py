@@ -12,12 +12,19 @@ general masked path — they must agree, within Monte-Carlo tolerance, on
 
 Agreement here is what licenses the benchmarks to sweep the quorum space
 with the (much faster) engine.
+
+The recovery-rule sweep extends the same licence to the PR-10 axes: both
+collision-recovery rules (coordinated q2c commit vs uncoordinated q2f
+vote, arXiv 1710.08047), on both an FFP and a Relaxed-Paxos system
+(arXiv 2203.03058), must agree between backends on P(recovery) and on
+race-commit p50.
 """
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.quorum import ExplicitQuorumSystem, QuorumSpec
+from repro.core.quorum import (ExplicitQuorumSystem, QuorumSpec,
+                               RelaxedQuorumSpec)
 from repro.core.simulator import (FastPaxosSim, conflict_free_workload,
                                   latency_stats)
 from repro.montecarlo import build_mask_table, engine
@@ -25,6 +32,7 @@ from repro.montecarlo import build_mask_table, engine
 FFP = QuorumSpec.paper_headline(11)
 FP = QuorumSpec.fast_paxos(11)
 GRID = ExplicitQuorumSystem.grid(2)          # 3x2 grid, n=6
+RELAXED = RelaxedQuorumSpec(11, 5, 2, 9)     # relaxed-valid, FFP-invalid
 KEY = jax.random.PRNGKey(3)
 DELTA_MS = 0.2
 MC_SAMPLES = 60_000
@@ -96,6 +104,50 @@ def test_grid_recovery_probability_matches_des(k_proposers):
     p_mc = float(out["recovery"][0].mean())
     p_des = _des_recovery_prob(GRID, k_proposers, DELTA_MS, DES_PAIRS)
     assert abs(p_mc - p_des) < 0.05, (k_proposers, p_mc, p_des)
+
+
+def _des_race_stats(spec, k_proposers: int, delta_ms: float, pairs: int,
+                    seed: int = 0, recovery: str = "coordinated"):
+    """(P(recovery), decided-commit p50) for K-proposer races in the DES.
+    Latency is measured from the instance's FIRST submit — the engine's
+    t=0 reference — so the two backends price the same clock."""
+    sim = FastPaxosSim(spec, seed=seed, recovery=recovery)
+    base = {}
+    t = 0.0
+    for i in range(pairs):
+        base[i] = t
+        for k in range(k_proposers):
+            sim.submit(t + k * delta_ms, instance=i, value=f"v{i}_{k}",
+                       proposer=k)
+        t += 50.0
+    sim.run()
+    lats = sorted(ist.decide_time - base[i]
+                  for i, ist in sim.instances.items()
+                  if ist.decided is not None)
+    assert lats, "no decided instances"
+    return (sim.recovery_entries / pairs, lats[len(lats) // 2])
+
+
+@pytest.mark.parametrize("recovery", ["coordinated", "uncoordinated"])
+@pytest.mark.parametrize("k_proposers", [2, 3])
+@pytest.mark.parametrize("spec", [FFP, RELAXED], ids=["ffp", "relaxed"])
+def test_recovery_rules_match_des(spec, k_proposers, recovery):
+    """Both recovery rules, both intersection predicates: the analytic
+    engine and the protocol-state-machine DES agree on P(recovery) within
+    0.05 absolute and on race-commit p50 within 5% for K in {2, 3}."""
+    table = build_mask_table([spec])
+    offsets = DELTA_MS * jnp.arange(k_proposers, dtype=jnp.float32)
+    out = engine.race(KEY, table, offsets, n=spec.n,
+                      k_proposers=k_proposers, samples=MC_SAMPLES,
+                      recovery=recovery)
+    p_mc = float(out["recovery"][0].mean())
+    mc_p50 = float(jnp.median(out["latency_ms"][0]))
+    p_des, des_p50 = _des_race_stats(spec, k_proposers, DELTA_MS,
+                                     DES_PAIRS, recovery=recovery)
+    assert abs(p_mc - p_des) < 0.05, (spec, k_proposers, recovery,
+                                      p_mc, p_des)
+    assert abs(mc_p50 - des_p50) / des_p50 < 0.05, (
+        spec, k_proposers, recovery, mc_p50, des_p50)
 
 
 def test_more_proposers_mean_more_recoveries():

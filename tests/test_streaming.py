@@ -254,6 +254,64 @@ def test_sortfree_card_streams_bit_identical_to_full_sort():
                            rtol=1e-5, equal_nan=True)
 
 
+def test_recovery_rule_streamed_parity_and_invariants():
+    """The collision-recovery rule as a dispatch axis: the entry condition
+    (hence every count) is rule-invariant, fast-path latencies are
+    bit-identical (recovery only re-prices the classic leg), the
+    histograms DO move, and the sort-free lowering stays bit-identical to
+    the full-sort reference under both rules."""
+    table = build_mask_table([FFP, FP])
+    kw = dict(n=11, k_proposers=2, trials=20_000, chunk=4_096, shard=False)
+    sc = streaming.race_stream(KEY, table, OFFS, **kw)
+    su = streaming.race_stream(KEY, table, OFFS,
+                               recovery="uncoordinated", **kw)
+    for f in ("n_trials", "n_fast", "n_recovery", "n_undecided"):
+        np.testing.assert_array_equal(np.asarray(getattr(sc, f)),
+                                      np.asarray(getattr(su, f)), f)
+    assert not np.array_equal(np.asarray(sc.hist), np.asarray(su.hist))
+    for mode in ("coordinated", "uncoordinated"):
+        ref = streaming.race_stream(KEY, table, OFFS, k_max=None,
+                                    recovery=mode, **kw)
+        new = streaming.race_stream(KEY, table, OFFS, k_max="auto",
+                                    recovery=mode, **kw)
+        np.testing.assert_array_equal(np.asarray(new.hist),
+                                      np.asarray(ref.hist), mode)
+
+    # materializing path: the fast-path latency samples are bit-identical
+    # across rules; only recovered trials move
+    oc = engine.race(KEY, table, OFFS, n=11, k_proposers=2, samples=4_000)
+    ou = engine.race(KEY, table, OFFS, n=11, k_proposers=2, samples=4_000,
+                     recovery="uncoordinated")
+    np.testing.assert_array_equal(np.asarray(oc["reached_fast"]),
+                                  np.asarray(ou["reached_fast"]))
+    fast = np.asarray(oc["reached_fast"])
+    np.testing.assert_array_equal(np.asarray(oc["latency_ms"])[fast],
+                                  np.asarray(ou["latency_ms"])[fast])
+
+    with pytest.raises(ValueError, match="unknown recovery rule"):
+        streaming.race_stream(KEY, table, OFFS, recovery="oracle", **kw)
+    with pytest.raises(ValueError, match="unknown recovery rule"):
+        engine.race(KEY, table, OFFS, n=11, k_proposers=2, samples=100,
+                    recovery="oracle")
+
+
+def test_recovery_rule_fused_kernel_agrees():
+    """The fused Pallas lowering under the uncoordinated rule (recovery
+    saturation fed the p2f masks) matches the jnp scatter path."""
+    grid = ExplicitQuorumSystem.grid(3).to_masks().embed(11)
+    table = build_mask_table([FFP.to_masks(), grid])
+    assert "q" not in table
+    kw = dict(n=11, k_proposers=2, trials=6_000, chunk=2_048, shard=False,
+              recovery="uncoordinated")
+    ref = streaming.race_stream(KEY, table, OFFS, use_kernel=False, **kw)
+    ker = streaming.race_stream(KEY, table, OFFS, use_kernel=True, **kw)
+    for f in ("n_trials", "n_fast", "n_recovery", "n_undecided", "hist"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(ker, f)), f)
+    assert np.allclose(np.asarray(ref.mean_ms), np.asarray(ker.mean_ms),
+                       rtol=1e-5)
+
+
 def test_k_max_below_saturation_depth_rejected():
     """An explicit k_max below the table's saturation depths would silently
     change semantics — the driver must refuse it."""
